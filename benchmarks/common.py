@@ -1,0 +1,78 @@
+"""Shared benchmark machinery.
+
+The paper evaluates on a 256-GPU cluster (32 heads x head_dim 128 = hidden
+4096).  This container has no TPU/GPU fabric, so the paper-table benchmarks
+drive the SAME schedules the distributed op executes through the calibrated
+lock-step simulator (core/simulator.py).  ``PAPER_HW`` is an H800-class
+communication-bound profile chosen to match the paper's §2.2 observation
+(Ring-Attention waits on comm ~91.5% of the time at 128 GPUs / 1M tokens);
+``TPU_HW`` is the v5e roofline model used everywhere else in the repo.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core import schedule as S
+from repro.core.am import CommModel
+from repro.core.autotune import plan_for, tune
+from repro.core.simulator import HardwareModel, make_cost_model, simulate
+
+PAPER_HIDDEN = 4096  # 32 heads x 128 (paper §4.1)
+# H800-class chips on a commodity fabric with NCCL launch latency.  NOTE
+# (EXPERIMENTS.md §Paper-validation): the paper's own anchors — ring waiting
+# 91.5% (§2.2), mesh comm share 86.6% (§4.4), 85.4% volume reduction (§4.5),
+# max speedup 3.4x (Table 3) — are mutually inconsistent under ANY uniform-
+# bandwidth lock-step model (the first three imply ~7-8x).  We calibrate
+# moderately and validate TRENDS; the deepest comm-bound cells realize more
+# of the theoretical sqrt(n) gain here than on the paper's congested fabric.
+PAPER_HW = HardwareModel(peak_flops=989e12, link_bw=25e9, attn_efficiency=0.35,
+                         latency=100e-6)
+TPU_HW = HardwareModel()  # v5e: 197 TF bf16, 819 GB/s HBM, 50 GB/s/link
+
+
+def attention_time(
+    n: int,
+    seq: int,
+    *,
+    a: Optional[int] = None,  # None -> autotuned; 1 -> Ring-Attention
+    causal: bool = True,
+    hw: HardwareModel = PAPER_HW,
+    kv_hidden: Optional[int] = None,
+    with_backward: bool = True,
+    allow_concurrent_rings: bool = False,
+) -> Dict:
+    comm = CommModel(seq=seq, hidden=PAPER_HIDDEN, n=n, kv_hidden=kv_hidden)
+    if a is None:
+        plan = tune(comm, hw, causal=causal, with_backward=with_backward,
+                    allow_concurrent_rings=allow_concurrent_rings)
+    else:
+        plan = plan_for(comm, a, hw, causal=causal, with_backward=with_backward,
+                        allow_concurrent_rings=allow_concurrent_rings)
+    fwd, bwd = plan.fwd_sim, plan.bwd_sim
+    total = plan.total
+    comm_bytes = plan.comm_bytes
+    compute = fwd.compute + (bwd.compute if bwd else 0.0)
+    exposed = fwd.exposed_comm + (bwd.exposed_comm if bwd else 0.0)
+    return {
+        "a": plan.a,
+        "b": plan.b,
+        "total_s": total,
+        "fwd_s": fwd.total,
+        "bwd_s": bwd.total if bwd else 0.0,
+        "compute_s": compute,
+        "exposed_comm_s": exposed,
+        "comm_bytes": comm_bytes,
+        "iters_per_s": 1.0 / total,
+    }
+
+
+def attention_flops(seq: int, causal: bool) -> float:
+    """Model FLOPs of one fwd+bwd attention call (batch 1)."""
+    f = 4.0 * seq * seq * PAPER_HIDDEN * (1 + 2.5)
+    return f * (0.5 if causal else 1.0)
+
+
+def mfu(n: int, seq: int, total_s: float, causal: bool, hw: HardwareModel = PAPER_HW) -> float:
+    return attention_flops(seq, causal) / (total_s * n * hw.peak_flops)

@@ -1,0 +1,10 @@
+"""Mesh-Attention (Chen et al., CS.DC 2025) on JAX/TPU.
+
+A production-grade multi-pod framework: the paper's 2-D assignment-matrix
+tiling as a first-class distributed attention op (``repro.core``), Pallas TPU
+kernels (``repro.kernels``), a 10-architecture model zoo (``repro.models`` /
+``repro.configs``), and the training/serving substrate (``repro.parallel``,
+``repro.optim``, ``repro.train``, ``repro.serve``, ``repro.launch``).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,30 @@
+"""Architecture registry: one module per assigned architecture (plus the
+paper's own attention benchmark config).  ``--arch <id>`` resolves here."""
+
+from repro.configs.base import (
+    SHAPES,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    get_config,
+    register,
+)
+
+ALL_ARCHS = [
+    "pixtral-12b",
+    "mamba2-370m",
+    "whisper-base",
+    "qwen2.5-32b",
+    "gemma-7b",
+    "granite-8b",
+    "minicpm3-4b",
+    "mixtral-8x7b",
+    "qwen2-moe-a2.7b",
+    "hymba-1.5b",
+]
+
+# the paper's §4.1 attention configuration embedded in a llama-style body,
+# used by the paper-table benchmarks
+PAPER_ARCH = "paper-mha-7b"

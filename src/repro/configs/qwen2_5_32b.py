@@ -1,0 +1,24 @@
+"""Qwen2.5-32B: dense GQA transformer with QKV bias.
+
+[hf:Qwen/Qwen2.5-0.5B family scaling; hf] — 64L, d_model=5120, 40 heads
+(GQA kv=8, head_dim=128), d_ff=27648, vocab=152064.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        name="qwen2.5-32b",
+        family="dense",
+        num_layers=64,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=27648,
+        vocab_size=152064,
+        qkv_bias=True,
+        rope_theta=1e6,
+        source="hf:Qwen/Qwen2.5-32B (hf)",
+    )
+)

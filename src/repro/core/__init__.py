@@ -1,0 +1,33 @@
+"""Mesh-Attention core: the paper's contribution.
+
+Layers:
+  tiling        — assignment-matrix tiling, groups, Table-1 chunk maps, striping
+  am            — communication-volume analytics (paper Table 2)
+  schedule      — greedy intra-tile schedules (Algorithms 2/3)
+  simulator     — lock-step overlap simulator (Figure-6 runtime estimation)
+  autotune      — tile-shape search (Figure 6)
+  mesh_attention— the distributed op (shard_map + ppermute sub-rings)
+  ring_attention, ulysses — baselines
+  decode_attention — distributed flash-decode over a striped KV cache
+"""
+
+from repro.core.am import CommModel, mesh_volume, ring_volume, table2, ulysses_volume
+from repro.core.autotune import TilePlan, plan_for, tune
+from repro.core.schedule import (
+    Profile,
+    Schedule,
+    greedy_backward_schedule,
+    greedy_forward_schedule,
+    naive_forward_schedule,
+    ring_forward_schedule,
+    validate_schedule,
+)
+from repro.core.simulator import CostModel, HardwareModel, SimResult, make_cost_model, simulate
+from repro.core.tiling import (
+    TileLayout,
+    best_square_a,
+    factorizations,
+    stripe_permutation,
+    striped_causal_offset,
+    unstripe_permutation,
+)

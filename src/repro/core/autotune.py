@@ -1,0 +1,112 @@
+"""Tile-shape + schedule autotuning (paper Figure 6).
+
+For a given attention shape and device count n, enumerate every factorization
+n = a × b, derive the overlap profile (c_Q, c_KV, …) from the α-β hardware
+model (on real hardware: from measurement — the `Profile` type is shared),
+generate the greedy schedule, estimate runtime with the event simulator, and
+pick the fastest plan.  The result feeds both the benchmarks and the
+distributed op, which executes the chosen schedule step-for-step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core import schedule as S
+from repro.core.am import CommModel
+from repro.core.simulator import CostModel, HardwareModel, SimResult, make_cost_model, simulate
+from repro.core.tiling import factorizations
+
+__all__ = ["TilePlan", "tune", "plan_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    a: int
+    b: int
+    fwd: S.Schedule
+    bwd: Optional[S.Schedule]
+    fwd_sim: SimResult
+    bwd_sim: Optional[SimResult]
+    profile: S.Profile
+
+    @property
+    def total(self) -> float:
+        return self.fwd_sim.total + (self.bwd_sim.total if self.bwd_sim else 0.0)
+
+    @property
+    def comm_bytes(self) -> int:
+        return self.fwd_sim.comm_bytes + (self.bwd_sim.comm_bytes if self.bwd_sim else 0)
+
+
+def _plan(
+    comm: CommModel,
+    a: int,
+    hw: HardwareModel,
+    *,
+    causal: bool,
+    with_backward: bool,
+    allow_concurrent_rings: bool,
+) -> TilePlan:
+    b = comm.n // a
+    fwd_cost = make_cost_model(comm, hw, causal=causal, backward=False)
+    fwd_profile = fwd_cost.profile()
+    fwd = S.greedy_forward_schedule(a, b, fwd_profile, allow_concurrent_rings=allow_concurrent_rings)
+    S.validate_schedule(fwd, strict_paper=not allow_concurrent_rings)
+    fwd_sim = simulate(fwd, fwd_cost, comm)
+    bwd = bwd_sim = None
+    if with_backward:
+        bwd_cost = make_cost_model(comm, hw, causal=causal, backward=True)
+        bwd = S.greedy_backward_schedule(
+            a, b, bwd_cost.profile(), allow_concurrent_rings=allow_concurrent_rings
+        )
+        S.validate_schedule(bwd, strict_paper=not allow_concurrent_rings)
+        bwd_sim = simulate(bwd, bwd_cost, comm)
+    return TilePlan(a=a, b=b, fwd=fwd, bwd=bwd, fwd_sim=fwd_sim, bwd_sim=bwd_sim, profile=fwd_profile)
+
+
+def tune(
+    comm: CommModel,
+    hw: HardwareModel = HardwareModel(),
+    *,
+    causal: bool = False,
+    with_backward: bool = True,
+    allow_concurrent_rings: bool = False,
+    candidates: Optional[List[int]] = None,
+) -> TilePlan:
+    """Figure-6 flow: profile -> greedy schedule -> simulate -> argmin."""
+    if candidates is None:
+        candidates = [a for a, _ in factorizations(comm.n)]
+    plans = [
+        _plan(
+            comm,
+            a,
+            hw,
+            causal=causal,
+            with_backward=with_backward,
+            allow_concurrent_rings=allow_concurrent_rings,
+        )
+        for a in candidates
+    ]
+    return min(plans, key=lambda p: p.total)
+
+
+def plan_for(
+    comm: CommModel,
+    a: int,
+    hw: HardwareModel = HardwareModel(),
+    *,
+    causal: bool = False,
+    with_backward: bool = True,
+    allow_concurrent_rings: bool = False,
+) -> TilePlan:
+    """Plan for a fixed tile height (a=1 reproduces Ring-Attention)."""
+    return _plan(
+        comm,
+        a,
+        hw,
+        causal=causal,
+        with_backward=with_backward,
+        allow_concurrent_rings=allow_concurrent_rings,
+    )

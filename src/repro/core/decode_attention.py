@@ -1,0 +1,103 @@
+"""Distributed flash-decode over a sequence-sharded KV cache.
+
+The paper's locality idea applied to inference: the KV cache is sharded over
+the sequence-parallel axis — by *absolute position modulo n* ("striped", the
+same striping the causal mask uses for training, §3.7) or contiguously (for
+SSM/hybrid archs whose train layout is contiguous).  Each decode step:
+
+  1. the new token's Q is replicated across the axis (it is tiny),
+  2. every device computes a partial flash-decode over its local cache slice,
+  3. partials are combined with an lse-weighted ``psum`` — per-token
+     communication is O(B·H·D), independent of context length.
+
+This replaces head-parallel (Ulysses-style) decode, which is capped at Hkv
+devices — with GQA (e.g. kv=8 on a 16-wide model axis) that cap binds, the
+sequence-sharded cache does not.  Striping additionally balances appends
+(shard t mod n) no matter how long generation runs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ops
+from repro.kernels.ref import BAND_INF, NEG_INF
+
+__all__ = ["sharded_cache_decode", "sharded_cache_update"]
+
+
+def _owner_slot(pos, i, n: int, m: int, layout: str):
+    """(is_owner, slot) for writing global position ``pos``; m = local slots."""
+    if layout == "striped":
+        return (pos % n) == i, pos // n
+    return (pos // m) == i, pos % m
+
+
+def sharded_cache_update(
+    k_cache: jnp.ndarray,  # [B, m, Hkv, D] local slice
+    v_cache: jnp.ndarray,
+    k_new: jnp.ndarray,  # [B, 1, Hkv, D] replicated across the axis
+    v_new: jnp.ndarray,
+    pos,  # int32 scalar: global position being written
+    axis_name: str,
+    n: int,
+    layout: str = "striped",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    i = lax.axis_index(axis_name)
+    is_owner, slot = _owner_slot(pos, i, n, k_cache.shape[1], layout)
+    k_upd = lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
+    v_upd = lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+    k_cache = jnp.where(is_owner, k_upd, k_cache)
+    v_cache = jnp.where(is_owner, v_upd, v_cache)
+    return k_cache, v_cache
+
+
+def sharded_cache_decode(
+    q: jnp.ndarray,  # [B, 1, H, D] new token's query, replicated over the axis
+    k_cache: jnp.ndarray,  # [B, m, Hkv, D] local slice
+    v_cache: jnp.ndarray,
+    pos,  # int32 scalar: current position (attends to global positions <= pos)
+    axis_name: str,
+    n: int,
+    *,
+    layout: str = "striped",
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """One decode step: partial attention per shard + lse-weighted psum."""
+    i = lax.axis_index(axis_name)
+    m = k_cache.shape[1]
+    hi = (window - 1) if window else BAND_INF
+    # global position of local slot s: striped: i + n*s; contiguous: i*m + s
+    if layout == "striped":
+        kv_off, stride_kv = i, n
+    else:
+        kv_off, stride_kv = i * m, 1
+    band = jnp.stack(
+        [
+            jnp.asarray(pos, jnp.int32),
+            jnp.asarray(kv_off, jnp.int32),
+            jnp.int32(0),
+            jnp.int32(hi),
+        ]
+    )
+    o, lse = ops.block_attention(
+        q, k_cache, v_cache, band, scale=scale, stride_q=1, stride_kv=stride_kv
+    )
+    # combine partials across shards: softmax-weighted by exp(lse - max)
+    mx = lax.pmax(lse, axis_name)  # [B, H, 1]
+    mx = jnp.maximum(mx, NEG_INF)
+    w = jnp.exp(lse - mx)  # zero for empty shards
+    num = lax.psum(o.astype(jnp.float32) * w.swapaxes(1, 2)[..., None], axis_name)
+    den = lax.psum(w, axis_name)
+    den_safe = jnp.where(den > 0, den, 1.0)
+    out = num / den_safe.swapaxes(1, 2)[..., None]
+    return out.astype(q.dtype)
+
+
+# backwards-compatible aliases (striped is the default layout)
+striped_cache_update = sharded_cache_update
+striped_cache_decode = sharded_cache_decode

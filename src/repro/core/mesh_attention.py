@@ -1,0 +1,346 @@
+"""Mesh-Attention: the distributed attention op (paper §3).
+
+Runs INSIDE ``shard_map``: every array argument is the device-local chunk
+(sequence sharded n ways over ``cfg.axis_name``; causal inputs must be in the
+*striped* layout of ``core.tiling.stripe_permutation``).  The op executes the
+greedy step program from ``core/schedule.py`` verbatim:
+
+  * ``Recv Q`` / ``Recv KV``  -> one ``jax.lax.ppermute`` per step on the
+    Q-ring / KV-ring neighbour shifts (``TileLayout.q_shift_perm`` /
+    ``kv_shift_perm``).  Chunk u arrives after u hops (Table 1).
+  * compute block (u, v)      -> one Pallas flash block between Q slot u and
+    KV slot v, accumulated into the row's (o, lse) with the online-softmax
+    combine.  Striped-causal masking uses the *global* chunk indices, which
+    depend on ``axis_index`` — they enter the kernel as dynamic SMEM scalars.
+  * ``Send O``  (step t)      -> ppermute the completed row t+1 partial to
+    the lower Q-ring neighbour; fold the received row (t+2 mod a) partial in
+    (online softmax as the reduce operator, Alg. 1 line 4).
+
+Backward (Alg. 3) is a custom_vjp at this level — the paper's communication
+pattern (circulate OdOQ + KV, reduce dQ along the Q ring and dKV along the
+KV ring with plain sums) — so JAX never auto-differentiates the ring code.
+
+``a = 1`` degenerates to Ring-Attention (no Q ring, no O sends): the baseline
+is literally a config choice, as in the paper ("covers Ring-Attention as a
+special case").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import schedule as S
+from repro.core.tiling import TileLayout
+from repro.kernels import ops
+from repro.kernels.ref import BAND_INF, NEG_INF
+
+__all__ = ["MeshAttentionConfig", "mesh_attention", "mesh_attention_with_lse"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAttentionConfig:
+    """Static configuration (hashable: it is a nondiff custom_vjp argument)."""
+
+    axis_name: str
+    n: int  # devices on the sequence-parallel axis
+    a: int  # tile height; b = n // a; a=1 == Ring-Attention
+    causal: bool = False
+    window: Optional[int] = None  # sliding-window width (causal only)
+    layout: str = "striped"  # striped (paper §3.7) | contiguous (SSM/hybrid)
+    scale: Optional[float] = None
+    fwd_schedule: Optional[S.Schedule] = None
+    bwd_schedule: Optional[S.Schedule] = None
+    bwd_wire: str = "qdod"  # "odoq" = paper wire (circulates O); "qdod" = Δ-trick
+    block_q: int = 128
+    block_kv: int = 128
+    allow_concurrent_rings: bool = False
+
+    def __post_init__(self):
+        if self.n % self.a:
+            raise ValueError(f"a={self.a} must divide n={self.n}")
+        if self.window is not None and not self.causal:
+            raise ValueError("sliding window requires causal=True")
+        if self.bwd_wire not in ("odoq", "qdod"):
+            raise ValueError(self.bwd_wire)
+        if self.layout not in ("striped", "contiguous"):
+            raise ValueError(self.layout)
+
+    @property
+    def b(self) -> int:
+        return self.n // self.a
+
+    def schedules(self) -> Tuple[S.Schedule, S.Schedule]:
+        fwd = self.fwd_schedule or S.greedy_forward_schedule(
+            self.a, self.b, allow_concurrent_rings=self.allow_concurrent_rings
+        )
+        bwd = self.bwd_schedule or S.greedy_backward_schedule(
+            self.a, self.b, allow_concurrent_rings=self.allow_concurrent_rings
+        )
+        if (fwd.a, fwd.b) != (self.a, self.b) or (bwd.a, bwd.b) != (self.a, self.b):
+            raise ValueError("schedule shape mismatch with (a, b)")
+        S.validate_schedule(fwd)
+        S.validate_schedule(bwd)
+        return fwd, bwd
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+
+def _band_for_block(cfg: MeshAttentionConfig, i, u: int, v: int, m_q: int, m_kv: int):
+    """Dynamic (axis_index-dependent) band + strides for AM block (u, v).
+
+    striped layout: token t of global chunk c has position c + n*t  (stride n)
+    contiguous layout: position c*m + t                              (stride 1)
+    """
+    if not cfg.causal:
+        band = jnp.asarray([0, 0, -BAND_INF, BAND_INF], jnp.int32)
+        return band, 1, 1
+    qc = cfg.a * (i // cfg.a) + (i + u) % cfg.a  # global Q chunk (Table 1)
+    kc = (i + cfg.a * v) % cfg.n  # global KV chunk (Table 1)
+    hi = (cfg.window - 1) if cfg.window else BAND_INF
+    if cfg.layout == "striped":
+        q_off, kv_off, sq, skv = qc, kc, cfg.n, cfg.n
+    else:
+        q_off, kv_off, sq, skv = qc * m_q, kc * m_kv, 1, 1
+    band = jnp.stack(
+        [q_off.astype(jnp.int32), kv_off.astype(jnp.int32), jnp.int32(0), jnp.int32(hi)]
+    )
+    return band, sq, skv
+
+
+def _combine_f32(o1, lse1, o2, lse2):
+    """Online-softmax combine with fp32 output accumulators.
+
+    o: [B, S, H, D] fp32; lse: [B, H, S] fp32.
+    """
+    m = jnp.maximum(jnp.maximum(lse1, lse2), NEG_INF)
+    w1 = jnp.exp(lse1 - m)
+    w2 = jnp.exp(lse2 - m)
+    tot = w1 + w2
+    tot_safe = jnp.where(tot > 0, tot, 1.0)
+    c1 = (w1 / tot_safe).swapaxes(1, 2)[..., None]
+    c2 = (w2 / tot_safe).swapaxes(1, 2)[..., None]
+    o = o1 * c1 + o2 * c2
+    lse = jnp.where(tot > 0, m + jnp.log(tot_safe), NEG_INF)
+    return o, lse
+
+
+def _merge(acc: Optional[tuple], o, lse):
+    o = o.astype(jnp.float32)
+    lse = lse.astype(jnp.float32)
+    if acc is None:
+        return o, lse
+    return _combine_f32(acc[0], acc[1], o, lse)
+
+
+# --------------------------------------------------------------------------
+# forward program (Algorithm 2 structure)
+# --------------------------------------------------------------------------
+
+
+def _fwd_program(q, k, v, cfg: MeshAttentionConfig, kv_transform=None):
+    """kv_transform (beyond-paper, §Perf 'latent wire'): when given, ``k`` is
+    an opaque wire buffer (e.g. MLA's compressed latent) circulated on the KV
+    ring; it is expanded to per-head (k, v) ONCE per received chunk, at first
+    use.  Wire bytes drop from 2·Hkv·dk to the latent width."""
+    n, a, b = cfg.n, cfg.a, cfg.b
+    lay = TileLayout(n, a)
+    i = lax.axis_index(cfg.axis_name)
+    scale = cfg.scale if cfg.scale is not None else q.shape[-1] ** -0.5
+    sched, _ = cfg.schedules()
+
+    q_perm = lay.q_shift_perm()
+    kv_perm = lay.kv_shift_perm()
+
+    qs: Dict[int, jnp.ndarray] = {0: q}
+    kvs: Dict[int, jnp.ndarray] = {0: k if kv_transform is not None else jnp.stack([k, v])}
+    kv_used: Dict[int, tuple] = {}
+
+    def kv_at(slot: int):
+        if slot not in kv_used:
+            if kv_transform is not None:
+                kv_used[slot] = kv_transform(kvs[slot])
+            else:
+                kv_used[slot] = (kvs[slot][0], kvs[slot][1])
+        return kv_used[slot]
+
+    o_acc: Dict[int, Optional[tuple]] = {u: None for u in range(a)}
+    nq = nkv = nsend = 0
+
+    for step in sched.steps:
+        # issue this step's communication first so XLA's latency-hiding
+        # scheduler can overlap it with the compute below
+        recv_updates = []
+        for comm in step.comms:
+            if comm == S.RECV_Q:
+                recv_updates.append(("q", lax.ppermute(qs[nq], cfg.axis_name, q_perm)))
+            elif comm == S.RECV_KV:
+                recv_updates.append(("kv", lax.ppermute(kvs[nkv], cfg.axis_name, kv_perm)))
+            elif comm == S.SEND_O:
+                src = nsend + 1  # completed row being forwarded
+                dst = (nsend + 2) % a  # row whose partial arrives (Table 1)
+                o_s, l_s = o_acc[src]
+                o_r = lax.ppermute(o_s, cfg.axis_name, q_perm)
+                l_r = lax.ppermute(l_s, cfg.axis_name, q_perm)
+                o_acc[dst] = _merge(o_acc[dst], o_r, l_r)
+                nsend += 1
+            else:  # pragma: no cover
+                raise ValueError(comm)
+        for (u, vv) in step.compute:
+            band, sq, skv = _band_for_block(cfg, i, u, vv, q.shape[1], k.shape[1])
+            kk, vv_t = kv_at(vv)
+            o_b, l_b = ops.block_attention(
+                qs[u], kk, vv_t, band,
+                scale=scale, stride_q=sq, stride_kv=skv,
+                block_q=cfg.block_q, block_kv=cfg.block_kv,
+            )
+            o_acc[u] = _merge(o_acc[u], o_b, l_b)
+        for kind, buf in recv_updates:
+            if kind == "q":
+                nq += 1
+                qs[nq] = buf
+            else:
+                nkv += 1
+                kvs[nkv] = buf
+
+    o_f, lse_f = o_acc[0]
+    return o_f.astype(q.dtype), lse_f
+
+
+# --------------------------------------------------------------------------
+# backward program (Algorithm 3 structure)
+# --------------------------------------------------------------------------
+
+
+def _bwd_program(cfg: MeshAttentionConfig, q, k, v, o, lse, do):
+    n, a, b = cfg.n, cfg.a, cfg.b
+    lay = TileLayout(n, a)
+    i = lax.axis_index(cfg.axis_name)
+    scale = cfg.scale if cfg.scale is not None else q.shape[-1] ** -0.5
+    _, sched = cfg.schedules()
+
+    q_perm = lay.q_shift_perm()
+    kv_perm = lay.kv_shift_perm()
+
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)  # [B,S,H]
+    # the Q ring circulates the "OdOQ" bundle (paper wire) or the Δ-trick
+    # bundle (beyond-paper: rowsum(dO·O) replaces the full O chunk — 2Nd/n+ε
+    # bytes per hop instead of 3Nd/n)
+    bundle0 = {"q": q, "do": do, "lse": lse, "delta": delta}
+    if cfg.bwd_wire == "odoq":
+        bundle0["o"] = o
+
+    qb: Dict[int, dict] = {0: bundle0}
+    kvs: Dict[int, jnp.ndarray] = {0: jnp.stack([k, v])}
+    dq_acc: Dict[int, Optional[jnp.ndarray]] = {u: None for u in range(a)}
+    dkv_acc: Dict[int, Optional[jnp.ndarray]] = {u: None for u in range(b)}
+    nq = nkv = ndq = ndkv = 0
+
+    def _add(cur, new):
+        new = new.astype(jnp.float32)
+        return new if cur is None else cur + new
+
+    for step in sched.steps:
+        recv_updates = []
+        for comm in step.comms:
+            if comm == S.RECV_ODOQ:
+                nxt = jax.tree.map(lambda x: lax.ppermute(x, cfg.axis_name, q_perm), qb[nq])
+                recv_updates.append(("q", nxt))
+            elif comm == S.RECV_KV:
+                recv_updates.append(("kv", lax.ppermute(kvs[nkv], cfg.axis_name, kv_perm)))
+            elif comm == S.SEND_DQ:
+                src, dst = ndq + 1, (ndq + 2) % a
+                got = lax.ppermute(dq_acc[src], cfg.axis_name, q_perm)
+                dq_acc[dst] = _add(dq_acc[dst], got)
+                ndq += 1
+            elif comm == S.SEND_DKV:
+                src, dst = ndkv + 1, (ndkv + 2) % b
+                got = lax.ppermute(dkv_acc[src], cfg.axis_name, kv_perm)
+                dkv_acc[dst] = _add(dkv_acc[dst], got)
+                ndkv += 1
+            else:  # pragma: no cover
+                raise ValueError(comm)
+        for (u, vv) in step.compute:
+            band, sq, skv = _band_for_block(cfg, i, u, vv, q.shape[1], k.shape[1])
+            bu = qb[u]
+            dq_b, dk_b, dv_b = ops.block_attention_bwd(
+                bu["q"], kvs[vv][0], kvs[vv][1], bu.get("o"), bu["lse"], bu["do"], band,
+                scale=scale, stride_q=sq, stride_kv=skv,
+                block_q=cfg.block_q, block_kv=cfg.block_kv, delta=bu["delta"],
+            )
+            dq_acc[u] = _add(dq_acc[u], dq_b)
+            dkv_acc[vv] = _add(dkv_acc[vv], jnp.stack([dk_b, dv_b]))
+        for kind, buf in recv_updates:
+            if kind == "q":
+                nq += 1
+                qb[nq] = buf
+            else:
+                nkv += 1
+                kvs[nkv] = buf
+
+    dq = dq_acc[0].astype(q.dtype)
+    dkv = dkv_acc[0]
+    return dq, dkv[0].astype(k.dtype), dkv[1].astype(v.dtype)
+
+
+# --------------------------------------------------------------------------
+# public op
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _mesh_attention(q, k, v, cfg: MeshAttentionConfig):
+    o, _ = _fwd_program(q, k, v, cfg)
+    return o
+
+
+def _mesh_attention_fwd(q, k, v, cfg):
+    o, lse = _fwd_program(q, k, v, cfg)
+    return o, (q, k, v, o, lse)
+
+
+def _mesh_attention_bwd(cfg, res, do):
+    q, k, v, o, lse = res
+    return _bwd_program(cfg, q, k, v, o, lse, do)
+
+
+_mesh_attention.defvjp(_mesh_attention_fwd, _mesh_attention_bwd)
+
+
+def mesh_attention(q, k, v, cfg: MeshAttentionConfig):
+    """Distributed attention over the local chunks (call inside shard_map).
+
+    q: [B, S/n, H, D]; k, v: [B, S/n, Hkv, D] -> o: [B, S/n, H, D].
+    Causal inputs must be striped (token t on chunk t mod n).
+    """
+    if cfg.n == 1:
+        return ops.flash_attention(
+            q, k, v, causal=cfg.causal, window=cfg.window, scale=cfg.scale
+        )
+    return _mesh_attention(q, k, v, cfg)
+
+
+def mesh_attention_with_lse(q, k, v, cfg: MeshAttentionConfig):
+    """Forward-only variant exposing the log-sum-exp (tests, serving)."""
+    return _fwd_program(q, k, v, cfg)
+
+
+def mesh_attention_wire(q, wire, cfg: MeshAttentionConfig, kv_transform):
+    """Mesh-Attention with a compressed KV wire (beyond-paper, §Perf).
+
+    ``wire``: the per-device chunk of whatever representation should
+    circulate on the KV ring (e.g. MLA latent [B, S/n, 1, kvr+rope]);
+    ``kv_transform(chunk) -> (k, v)`` expands it per-head at first use.
+    Differentiable by plain autodiff (no custom Alg-3 rule on this path);
+    intended for forward-only prefill/serving.
+    """
+    o, _ = _fwd_program(q, wire, None, cfg, kv_transform=kv_transform)
+    return o

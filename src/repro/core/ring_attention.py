@@ -1,0 +1,46 @@
+"""Ring-Attention baseline (Liu et al. 2023).
+
+The paper shows Ring-Attention is exactly the (a=1, b=n) row-wise special
+case of the Mesh-Attention assignment matrix: each device keeps its Q chunk
+and the KV chunks circulate through a single logical ring.  We therefore
+implement the baseline *as* that special case — identical kernels, identical
+ring machinery, only the tile shape differs — which makes the benchmark
+comparison an apples-to-apples measurement of the tiling idea itself.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import schedule as S
+from repro.core.mesh_attention import MeshAttentionConfig, mesh_attention
+
+__all__ = ["ring_attention", "ring_config"]
+
+
+def ring_config(
+    axis_name: str,
+    n: int,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+) -> MeshAttentionConfig:
+    return MeshAttentionConfig(
+        axis_name=axis_name,
+        n=n,
+        a=1,
+        causal=causal,
+        window=window,
+        scale=scale,
+        fwd_schedule=S.ring_forward_schedule(n) if n > 1 else None,
+        block_q=block_q,
+        block_kv=block_kv,
+    )
+
+
+def ring_attention(q, k, v, axis_name: str, n: int, **kw):
+    """Drop-in distributed attention with the Ring schedule (inside shard_map)."""
+    return mesh_attention(q, k, v, ring_config(axis_name, n, **kw))

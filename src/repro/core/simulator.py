@@ -1,0 +1,141 @@
+"""Event-driven overlap simulator (paper Fig. 6 "estimate runtime" stage).
+
+Because every device in Mesh-Attention executes the identical lock-step
+schedule (paper §3.2: the wrap-around mesh is fully symmetric), simulating a
+single device's timeline yields the system's timeline.  A step's duration is
+``max(comm, compute)`` — communication issued at step start runs concurrently
+with the step's compute blocks (this models NCCL-stream / XLA
+async-collective overlap); ops on different rings within one step also run
+concurrently (per-ICI-dimension links).
+
+The simulator powers:
+  * the (a, b) autotuner (`core/autotune.py`),
+  * the paper-table benchmarks (Tables 3/4, Figs. 8/9) — calibrated with the
+    α-β model in `HardwareModel` since this container has no TPU to measure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core import schedule as S
+from repro.core.am import CommModel
+
+__all__ = ["HardwareModel", "CostModel", "SimResult", "simulate", "make_cost_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """TPU v5e-class constants (per chip) — the same numbers used for the
+    roofline terms in EXPERIMENTS.md."""
+
+    peak_flops: float = 197e12  # bf16 FLOP/s
+    hbm_bw: float = 819e9  # B/s
+    link_bw: float = 50e9  # B/s per ICI link
+    attn_efficiency: float = 0.5  # achievable fraction of peak on flash blocks
+    latency: float = 1e-6  # per-message fixed cost (α in α-β)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Seconds per compute block and per chunk transfer."""
+
+    t_block: float
+    t_chunk: Dict[str, float]  # comm-op kind -> seconds
+    block_flops: float
+
+    def profile(self) -> S.Profile:
+        """Convert to the scheduler's c_* constants (blocks per transfer)."""
+        g = lambda k: self.t_chunk.get(k, 0.0) / self.t_block
+        return S.Profile(
+            c_q=g(S.RECV_Q),
+            c_kv=g(S.RECV_KV),
+            c_o=g(S.SEND_O),
+            c_odoq=g(S.RECV_ODOQ),
+            c_dq=g(S.SEND_DQ),
+            c_dkv=g(S.SEND_DKV),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    total: float  # seconds for the whole attention call
+    compute: float  # pure compute time (sum of block times)
+    comm: float  # pure serialized communication time
+    exposed_comm: float  # communication NOT hidden by compute
+    steps: int
+    comm_bytes: int  # per-device bytes on the wire
+
+    @property
+    def overlap_efficiency(self) -> float:
+        return self.compute / self.total if self.total else 1.0
+
+
+def make_cost_model(
+    comm: CommModel,
+    hw: HardwareModel = HardwareModel(),
+    *,
+    causal: bool = False,
+    backward: bool = False,
+) -> CostModel:
+    """α-β cost model for one (N, d, n) attention call.
+
+    One compute block = flash attention between a Q chunk (m tokens) and a KV
+    chunk (m tokens), m = batch·N/n: 4·m²·d FLOPs forward (QKᵀ and PV), 2.5×
+    that backward (the five flash-backward matmuls), halved by a causal mask
+    (striping balances the halving across all blocks — paper §3.7).
+    """
+    m = comm.batch * comm.seq / comm.n
+    flops = 4.0 * m * m * comm.hidden
+    if backward:
+        flops *= 2.5
+    if causal:
+        flops *= 0.5
+    t_block = flops / (hw.peak_flops * hw.attn_efficiency)
+    t = lambda kind: hw.latency + comm.chunk_bytes(kind) / hw.link_bw
+    t_chunk = {
+        S.RECV_Q: t("q"),
+        S.RECV_KV: t("kv"),
+        S.SEND_O: t("o"),
+        S.RECV_ODOQ: t("odoq"),
+        S.SEND_DQ: t("dq"),
+        S.SEND_DKV: t("dkv"),
+    }
+    return CostModel(t_block=t_block, t_chunk=t_chunk, block_flops=flops)
+
+
+_KIND_TO_CHUNK = {
+    S.RECV_Q: "q",
+    S.RECV_KV: "kv",
+    S.SEND_O: "o",
+    S.RECV_ODOQ: "odoq",
+    S.SEND_DQ: "dq",
+    S.SEND_DKV: "dkv",
+}
+
+
+def simulate(sched: S.Schedule, cost: CostModel, comm: Optional[CommModel] = None) -> SimResult:
+    """Walk the lock-step schedule: step time = max(slowest ring op, compute)."""
+    total = 0.0
+    compute_time = 0.0
+    comm_time = 0.0
+    exposed = 0.0
+    comm_bytes = 0
+    for step in sched.steps:
+        t_comm = max((cost.t_chunk[c] for c in step.comms), default=0.0)
+        t_comp = len(step.compute) * cost.t_block
+        total += max(t_comm, t_comp)
+        compute_time += t_comp
+        comm_time += sum(cost.t_chunk[c] for c in step.comms)
+        exposed += max(0.0, t_comm - t_comp)
+        if comm is not None:
+            comm_bytes += sum(comm.chunk_bytes(_KIND_TO_CHUNK[c]) for c in step.comms)
+    return SimResult(
+        total=total,
+        compute=compute_time,
+        comm=comm_time,
+        exposed_comm=exposed,
+        steps=len(sched.steps),
+        comm_bytes=comm_bytes,
+    )

@@ -1,0 +1,52 @@
+"""DeepSpeed-Ulysses baseline (Jacobs et al. 2023) — head-parallel attention.
+
+Two all-to-alls transpose between sequence- and head-sharding so each device
+computes full attention for H/n complete heads locally; a final all-to-all
+restores sequence sharding for O.  Communication is 4·(n-1)/n²·N·d per device
+(paper Table 2) but parallelism is capped at the KV-head count — the
+limitation Mesh-Attention removes (paper §2.3).
+
+Runs inside shard_map over ``axis_name``; expects the *contiguous* sequence
+layout (not striped): after the gather each device sees the full sequence, so
+plain causal masking applies.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ops
+
+__all__ = ["ulysses_attention"]
+
+
+def ulysses_attention(
+    q: jnp.ndarray,  # [B, S/n, H, D]
+    k: jnp.ndarray,  # [B, S/n, Hkv, D]
+    v: jnp.ndarray,
+    axis_name: str,
+    n: int,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    H, Hkv = q.shape[2], k.shape[2]
+    if n == 1:
+        return ops.flash_attention(q, k, v, causal=causal, window=window, scale=scale)
+    if Hkv % n:
+        raise ValueError(
+            f"DS-Ulysses parallelism is capped by the KV head count: "
+            f"n={n} does not divide Hkv={Hkv} (the paper's §2.3 limitation)"
+        )
+    # seq-sharded -> head-sharded: split heads (axis 2) across devices,
+    # concatenate sequence chunks (axis 1)
+    qh = lax.all_to_all(q, axis_name, split_axis=2, concat_axis=1, tiled=True)
+    kh = lax.all_to_all(k, axis_name, split_axis=2, concat_axis=1, tiled=True)
+    vh = lax.all_to_all(v, axis_name, split_axis=2, concat_axis=1, tiled=True)
+    oh = ops.flash_attention(qh, kh, vh, causal=causal, window=window, scale=scale)
+    # head-sharded -> seq-sharded
+    return lax.all_to_all(oh, axis_name, split_axis=1, concat_axis=2, tiled=True)

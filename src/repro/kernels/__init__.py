@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots (validated with
+interpret=True on CPU against the pure-jnp oracles in ref.py):
+
+  flash_attention — blockwise attention fwd + dq/dkv bwd; band masks cover
+                    full / causal / striped-causal (paper §3.7) / sliding
+                    window; GQA via head-group index maps.
+  ssd_scan        — Mamba-2 SSD chunked scan (state carried in VMEM).
+  ops             — jit'd dispatch wrappers (pallas on TPU, ref elsewhere)
+                    + the custom_vjp single-device flash_attention.
+"""

@@ -1,0 +1,210 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret=True
+on CPU) and the fallback implementation on backends without Pallas support.
+
+Conventions shared with the kernels:
+  * q: [B, Sq, H, D]; k, v: [B, Skv, Hkv, D] with H % Hkv == 0 (GQA).
+  * outputs: o [B, Sq, H, D] and lse [B, H, Sq] (natural log-sum-exp of the
+    scaled scores; ``NEG_INF`` for fully-masked rows).
+  * masking is a *band* in token space: position pair (i, j) is visible iff
+    ``lo <= (q_offset + stride_q*i) - (kv_offset + stride_kv*j) <= hi``.
+    - full attention:      band = None
+    - causal:              (0, 0, 0, BAND_INF)
+    - striped-causal block between global chunks (qc, kc) of an n-way stripe:
+      (qc, kc, 0, BAND_INF) with stride_q = stride_kv = n  (paper §3.7)
+    - sliding window W (inclusive of self): (0, 0, 0, W-1) composed with the
+      stripes the same way.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+BAND_INF = 2**30
+
+Band = Tuple[int, int, int, int]  # (q_offset, kv_offset, lo, hi) — may be traced
+
+
+def causal_band(offset: int = 0) -> Band:
+    """Visible iff q_pos - kv_pos + offset >= 0 (offset in {0,-1} for striped
+    blocks — see core.tiling.striped_causal_offset)."""
+    return (offset, 0, 0, BAND_INF)
+
+
+def band_mask(
+    sq: int,
+    sk: int,
+    band: Band,
+    *,
+    stride_q: int = 1,
+    stride_kv: int = 1,
+) -> jnp.ndarray:
+    q_off, kv_off, lo, hi = band
+    qpos = q_off + stride_q * jnp.arange(sq, dtype=jnp.int32)
+    kpos = kv_off + stride_kv * jnp.arange(sk, dtype=jnp.int32)
+    diff = qpos[:, None] - kpos[None, :]
+    return (diff >= lo) & (diff <= hi)
+
+
+def repeat_kv(x: jnp.ndarray, h: int) -> jnp.ndarray:
+    """Expand Hkv heads to H query heads (GQA)."""
+    hkv = x.shape[2]
+    if hkv == h:
+        return x
+    return jnp.repeat(x, h // hkv, axis=2)
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    scale: Optional[float] = None,
+    band: Optional[Band] = None,
+    stride_q: int = 1,
+    stride_kv: int = 1,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (o [B,Sq,H,D], lse [B,H,Sq]); fp32 softmax arithmetic."""
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    if scale is None:
+        scale = D**-0.5
+    kr = repeat_kv(k, H)
+    vr = repeat_kv(v, H)
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) * scale
+    if band is not None:
+        mask = band_mask(Sq, Sk, band, stride_q=stride_q, stride_kv=stride_kv)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.maximum(m, NEG_INF)  # fully-masked rows
+    p = jnp.exp(s - m)
+    if band is not None:
+        p = jnp.where(mask[None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    l_safe = jnp.where(l > 0, l, 1.0)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p / l_safe, vr.astype(jnp.float32))
+    lse = jnp.where(l[..., 0] > 0, m[..., 0] + jnp.log(l_safe[..., 0]), NEG_INF)
+    return o.astype(q.dtype), lse.astype(jnp.float32)
+
+
+def combine_partials(
+    o1: jnp.ndarray, lse1: jnp.ndarray, o2: jnp.ndarray, lse2: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Online-softmax reduce of two partial attention outputs over disjoint KV
+    sets (the paper's reduce-scatter operator for O chunks, §2.2/Alg. 1).
+
+    o: [B, S, H, D]; lse: [B, H, S].  Safe for NEG_INF (empty) partials.
+    """
+    m = jnp.maximum(lse1, lse2)
+    m = jnp.maximum(m, NEG_INF)
+    w1 = jnp.exp(lse1 - m)  # [B,H,S]
+    w2 = jnp.exp(lse2 - m)
+    tot = w1 + w2
+    tot_safe = jnp.where(tot > 0, tot, 1.0)
+    c1 = (w1 / tot_safe)[..., None].swapaxes(1, 2)  # [B,S,H,1]
+    c2 = (w2 / tot_safe)[..., None].swapaxes(1, 2)
+    o = o1 * c1.astype(o1.dtype) + o2 * c2.astype(o2.dtype)
+    lse = jnp.where(tot > 0, m + jnp.log(tot_safe), NEG_INF)
+    return o, lse
+
+
+def attention_bwd_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    o: Optional[jnp.ndarray],
+    lse: jnp.ndarray,
+    do: jnp.ndarray,
+    *,
+    scale: Optional[float] = None,
+    band: Optional[Band] = None,
+    stride_q: int = 1,
+    stride_kv: int = 1,
+    delta: Optional[jnp.ndarray] = None,  # [B, Sq, H]; derived from o if None
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """FlashAttention-style backward from saved (o, lse): returns dq, dk, dv.
+
+    Identical math to the Pallas backward kernels; note dk/dv sum over the
+    GQA query-head group.  ``delta`` (= rowsum(do*o)) may be supplied
+    directly — the "QdOΔ wire" optimization circulates it instead of O.
+    """
+    B, Sq, H, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    if scale is None:
+        scale = D**-0.5
+    g = H // Hkv
+    kr = repeat_kv(k, H).astype(jnp.float32)
+    vr = repeat_kv(v, H).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kr) * scale
+    p = jnp.exp(s - lse[..., None])  # true softmax weights via final lse
+    if band is not None:
+        mask = band_mask(Sq, Sk, band, stride_q=stride_q, stride_kv=stride_kv)
+        p = jnp.where(mask[None, None], p, 0.0)
+    if delta is None:
+        delta = jnp.sum(dof * o.astype(jnp.float32), axis=-1)  # [B,Sq,H]
+    else:
+        delta = delta.astype(jnp.float32)
+    dp = jnp.einsum("bqhd,bkhd->bhqk", dof, vr)
+    ds = p * (dp - delta.swapaxes(1, 2)[..., None]) * scale
+    dq = jnp.einsum("bhqk,bkhd->bqhd", ds, kr)
+    dk_full = jnp.einsum("bhqk,bqhd->bkhd", ds, qf)
+    dv_full = jnp.einsum("bhqk,bqhd->bkhd", p, dof)
+    dk = dk_full.reshape(B, Sk, Hkv, g, D).sum(axis=3)
+    dv = dv_full.reshape(B, Sk, Hkv, g, D).sum(axis=3)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality) oracle — used by kernels/ssd_scan.py
+# --------------------------------------------------------------------------
+
+
+def ssd_ref(
+    x: jnp.ndarray,  # [B, S, H, P]   (P = head channel dim)
+    dt: jnp.ndarray,  # [B, S, H]     (softplus-activated step sizes)
+    A: jnp.ndarray,  # [H]            (negative decay rates)
+    Bm: jnp.ndarray,  # [B, S, G, N]  (input projection, G state groups)
+    Cm: jnp.ndarray,  # [B, S, G, N]  (output projection)
+    *,
+    initial_state: Optional[jnp.ndarray] = None,  # [B, H, P, N]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential reference of the SSD recurrence (arXiv:2405.21060 eq. SSM):
+
+        h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T
+        y_t = C_t h_t
+
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)  # [B,S,H,N]
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * A[None, None, :])  # [B,S,H]
+
+    if initial_state is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    else:
+        h0 = initial_state.astype(jnp.float32)
+
+    def step(h, t):
+        d = decay[:, t][..., None, None]  # [B,H,1,1]
+        upd = (dtf[:, t][..., None, None] * xf[:, t][..., None]) * Bh[:, t][:, :, None, :]
+        h = d * h + upd  # [B,H,P,N]
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch[:, t])
+        return h, y
+
+    hT, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    y = ys.transpose(1, 0, 2, 3)  # [B,S,H,P]
+    return y.astype(x.dtype), hT

@@ -1,0 +1,204 @@
+"""Dry-run cell construction: (architecture x input shape x mesh) -> a
+lowerable jitted step with fully-specified shardings and ShapeDtypeStruct
+inputs (no allocation — the 'shannon/kernels' pattern).
+
+Cell kinds (see configs.base.SHAPES):
+  train_4k    -> train_step  (loss + grads + AdamW update, remat'd scan)
+  prefill_32k -> prefill     (forward + striped-cache writes, no grads)
+  decode_32k  -> decode_step (one token against a seq_len cache)
+  long_500k   -> decode_step; only sub-quadratic archs (SSM/hybrid/SWA) —
+                 full-attention archs are recorded as SKIP per the assignment.
+
+MODEL_FLOPS for the roofline: 6·N_params·D_tokens for training (3x forward
+for fwd+bwd), 2·N·D for inference steps; MoE uses active params only.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.optim.adamw import AdamWConfig, OptState, adamw_update, init_opt_state
+from repro.parallel import sharding as shd
+from repro.parallel.context import ParallelCtx
+
+__all__ = ["cell_applicable", "build_cell", "active_params", "model_flops"]
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{cfg.name} is pure full-attention (assignment rule: SKIP)"
+        )
+    return True, ""
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Parameter count active per token (MoE counts top_k + shared experts)."""
+    abs_params = jax.eval_shape(
+        lambda: tfm.init_params(cfg, jax.random.PRNGKey(0), jnp.bfloat16)
+    )
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(abs_params))
+    if cfg.moe is None:
+        return float(total)
+    # subtract inactive routed experts
+    m = cfg.moe
+    flat = jax.tree_util.tree_flatten_with_path(abs_params)[0]
+    routed = sum(
+        int(np.prod(x.shape))
+        for path, x in flat
+        if any(getattr(e, "key", "") in ("we1", "we2", "we3") for e in path)
+    )
+    active_routed = routed * (m.top_k / max(1, m.num_experts))
+    return float(total - routed + active_routed)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def _named(ctx, spec):
+    return NamedSharding(ctx.mesh, spec) if ctx.mesh is not None else None
+
+
+def _batch_structs(cfg: ModelConfig, ctx: ParallelCtx, seq: int, batch: int, kind: str):
+    from repro.data.pipeline import batch_spec_shapes
+
+    shapes = batch_spec_shapes(cfg, seq, batch)
+    specs = shd.batch_specs(cfg, ctx, kind=kind, batch=batch)
+    structs = {}
+    shardings = {}
+    for k, (shp, dt) in shapes.items():
+        structs[k] = jax.ShapeDtypeStruct(shp, dt)
+        shardings[k] = _named(ctx, specs[k])
+    return structs, shardings
+
+
+def _abstract_params(cfg: ModelConfig, ctx: ParallelCtx, strategy: str):
+    abs_p = jax.eval_shape(
+        lambda: tfm.init_params(cfg, jax.random.PRNGKey(0), jnp.bfloat16, ctx)
+    )
+    shardings = shd.param_shardings(abs_p, ctx, strategy)
+    return abs_p, shardings
+
+
+def _cache_structs(cfg: ModelConfig, ctx: ParallelCtx, batch: int, cap: int):
+    abs_c = jax.eval_shape(lambda: tfm.init_cache(cfg, batch, cap, dtype=jnp.bfloat16))
+    bs = ctx.eff_batch_spec(batch)
+
+    def spec_for(path, leaf):
+        name = None
+        for e in reversed(path):
+            if hasattr(e, "key"):
+                name = str(e.key)
+                break
+        nd = len(leaf.shape)
+        if name in ("k", "v"):
+            return P(None, bs, ctx.sp_axis, None, None)
+        if name in ("cross_k", "cross_v"):
+            return P(None, bs, ctx.sp_axis, None, None)
+        if name in ("conv", "state"):
+            return P(None, bs, *([None] * (nd - 2)))
+        return P()  # pos scalar
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, abs_c)
+    shardings = jax.tree.map(lambda s: _named(ctx, s), specs)
+    return abs_c, shardings
+
+
+def build_cell(arch: str, shape_name: str, ctx: ParallelCtx, cfg: Optional[ModelConfig] = None):
+    """-> (jitted_fn, example_args (ShapeDtypeStructs)) ready to .lower()."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"SKIP: {why}")
+
+    if shape.kind == "train":
+        abs_p, p_shard = _abstract_params(cfg, ctx, "train")
+        abs_o = jax.eval_shape(init_opt_state, abs_p)
+        o_shard = OptState(
+            _named(ctx, P()),
+            shd.param_shardings(abs_p, ctx, "train"),
+            shd.param_shardings(abs_p, ctx, "train"),
+        )
+        b_structs, b_shard = _batch_structs(cfg, ctx, shape.seq_len, shape.global_batch, "train")
+        opt_cfg = AdamWConfig(total_steps=10000)
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: tfm.loss_fn(p, cfg, ctx, batch), has_aux=True
+            )(params)
+            if ctx.grads_rs and ctx.mesh is not None:
+                # force the gradient reduction into the params' sharded layout
+                # (reduce-scatter) instead of all-reduce-to-replicated
+                grads = jax.tree.map(
+                    lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, p_shard
+                )
+            params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg)
+            return params, opt_state, loss
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        )
+        return fn, (abs_p, abs_o, b_structs)
+
+    if shape.kind == "prefill":
+        # NOTE (§Perf hypothesis B3, REFUTED): serve/TP weight sharding for
+        # prefill does NOT remove the per-layer weight gathers because the
+        # model axis is double-booked (sequence CP + TP weights) — GSPMD must
+        # gather one side anyway.  Proper fix = Megatron SP<->TP transitions
+        # per block; prefill keeps the train (FSDP) sharding.
+        abs_p, p_shard = _abstract_params(cfg, ctx, "train")
+        abs_c, c_shard = _cache_structs(cfg, ctx, shape.global_batch, shape.seq_len)
+        b_structs, b_shard = _batch_structs(
+            cfg, ctx, shape.seq_len, shape.global_batch, "prefill"
+        )
+
+        def prefill_step(params, batch, cache):
+            return tfm.prefill(params, cfg, ctx, batch, cache)
+
+        fn = jax.jit(
+            prefill_step,
+            in_shardings=(p_shard, b_shard, c_shard),
+            out_shardings=(None, c_shard),
+            donate_argnums=(2,),
+        )
+        return fn, (abs_p, b_structs, abs_c)
+
+    # decode
+    abs_p, p_shard = _abstract_params(cfg, ctx, "serve")
+    abs_c, c_shard = _cache_structs(cfg, ctx, shape.global_batch, shape.seq_len)
+    tok_struct = jax.ShapeDtypeStruct((shape.global_batch, 1), np.int32)
+    tok_shard = _named(ctx, P(ctx.eff_batch_spec(shape.global_batch), None))
+
+    def serve_step(params, cache, tokens):
+        return tfm.decode_step(params, cache, tokens, cfg, ctx)
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(p_shard, c_shard, tok_shard),
+        out_shardings=(tok_shard, c_shard, None),
+        donate_argnums=(1,),
+    )
+    return fn, (abs_p, abs_c, tok_struct)

@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import (jax locks the device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        [--arch ID ...] [--shape NAME ...] [--mesh single|multi|both]
+        [--out benchmarks/results/dryrun] [--force]
+
+Success criterion (deliverable e): ``.lower().compile()`` succeeds for every
+cell on the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh.  Results
+are written incrementally as JSON (one file per cell) so a long sweep can be
+resumed; benchmarks and EXPERIMENTS.md read these files.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+
+def _metrics(compiled):
+    from repro.launch import hlo_analysis as ha
+
+    ca = compiled.cost_analysis() or {}
+    coll = ha.collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll": coll,
+    }
+
+
+def _layer_cost_extrapolation(arch, shape_name, ctx, cfg):
+    """XLA cost analysis counts a while-loop (scan) body ONCE, so the
+    full-depth compile undercounts per-layer work by ~L.  Lower UNROLLED
+    1-layer and 2-layer variants of the same cell at full width; the delta is
+    one true layer's cost and base = cost(1) - delta covers embed/loss:
+        corrected_total = base + L * delta.
+    """
+    import dataclasses
+
+    from repro.launch.cells import build_cell
+
+    uctx = dataclasses.replace(ctx, unroll_layers=True)
+    out = {}
+    for L in (1, 2):
+        cfg_l = dataclasses.replace(
+            cfg,
+            num_layers=L,
+            encoder_layers=min(cfg.encoder_layers, L) if cfg.encoder_layers else 0,
+        )
+        fn, args = build_cell(arch, shape_name, uctx, cfg=cfg_l)
+        out[L] = _metrics(fn.lower(*args).compile())
+    L_full = cfg.num_layers
+
+    def extrap(key):
+        if key == "coll":
+            d = {
+                k: out[2]["coll"][k] - out[1]["coll"][k] for k in out[1]["coll"]
+            }
+            return {
+                k: max(0.0, out[1]["coll"][k] - d[k] + L_full * d[k]) for k in d
+            }
+        delta = out[2][key] - out[1][key]
+        return max(0.0, out[1][key] - delta + L_full * delta)
+
+    return {
+        "flops": extrap("flops"),
+        "bytes": extrap("bytes"),
+        "coll": extrap("coll"),
+        "one_layer": out[1],
+        "two_layer": out[2],
+    }
+
+
+def _cell_result(arch, shape_name, mesh_kind, *, perf_overrides=None):
+    from repro.configs import SHAPES, get_config
+    from repro.launch import hlo_analysis as ha
+    from repro.launch.cells import build_cell, cell_applicable, model_flops
+    from repro.launch.mesh import make_context, make_production_mesh
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "status": "skip" if not ok else "pending",
+    }
+    if not ok:
+        rec["reason"] = why
+        return rec
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    ctx = make_context(mesh, **(perf_overrides or {}))
+    chips = mesh.size
+
+    # 1) the deliverable: full-depth lower + compile must succeed
+    t0 = time.time()
+    fn, args = build_cell(arch, shape_name, ctx)
+    lowered = fn.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+    rec["status"] = "ok"
+    raw = _metrics(compiled)
+    rec["raw_flops_per_device"] = raw["flops"]
+    rec["raw_bytes_per_device"] = raw["bytes"]
+    rec["raw_collective_bytes_per_device"] = raw["coll"]
+
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for name in (
+                "temp_size_in_bytes",
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "generated_code_size_in_bytes",
+            ):
+                val = getattr(ma, name, None)
+                if val is not None:
+                    rec[name] = int(val)
+    except Exception as e:  # pragma: no cover - backend dependent
+        rec["memory_analysis_error"] = str(e)
+
+    # 2) per-layer cost extrapolation for the roofline terms
+    ext = _layer_cost_extrapolation(arch, shape_name, ctx, cfg)
+    rec["flops_per_device"] = ext["flops"]
+    rec["bytes_per_device"] = ext["bytes"]
+    rec["collective_bytes_per_device"] = ext["coll"]
+    rec["roofline"] = ha.roofline_terms(
+        ext["flops"],
+        ext["bytes"],
+        ext["coll"]["total"],
+        chips=chips,
+        model_flops=model_flops(cfg, shape),
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", default=None)
+    ap.add_argument("--shape", nargs="*", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tile-a", type=int, default=None, help="Mesh-Attention tile height override")
+    ap.add_argument("--attn", default=None, choices=[None, "mesh", "ring", "ulysses"])
+    ap.add_argument("--tag", default="", help="suffix for result files (perf experiments)")
+    ap.add_argument("--no-remat", action="store_true", help="disable activation remat")
+    ap.add_argument("--grads-rs", action="store_true", help="reduce-scatter gradients")
+    ap.add_argument("--mla-wire", action="store_true", help="MLA latent KV wire")
+    ap.add_argument("--concurrent-rings", action="store_true", help="Q+KV permutes per step")
+    args = ap.parse_args()
+
+    from repro.configs import ALL_ARCHS, SHAPES
+
+    archs = args.arch or ALL_ARCHS
+    shapes = args.shape or list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    overrides = {}
+    if args.tile_a is not None:
+        overrides["mesh_a"] = args.tile_a
+    if args.attn:
+        overrides["attn_impl"] = args.attn
+    if args.no_remat:
+        overrides["remat"] = False
+    if args.grads_rs:
+        overrides["grads_rs"] = True
+    if args.mla_wire:
+        overrides["mla_latent_wire"] = True
+    if args.concurrent_rings:
+        overrides["allow_concurrent_rings"] = True
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                name = f"{arch}__{shape}__{mesh_kind}{args.tag}.json"
+                path = os.path.join(args.out, name)
+                if os.path.exists(path) and not args.force:
+                    print(f"[dryrun] cached {name}")
+                    continue
+                print(f"[dryrun] {arch} x {shape} x {mesh_kind} ...", flush=True)
+                try:
+                    rec = _cell_result(arch, shape, mesh_kind, perf_overrides=overrides)
+                except Exception as e:  # noqa: BLE001
+                    rec = {
+                        "arch": arch, "shape": shape, "mesh": mesh_kind,
+                        "status": "error", "error": str(e),
+                        "tb": traceback.format_exc(),
+                    }
+                    failures += 1
+                    print(f"[dryrun]   ERROR: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(
+                        f"[dryrun]   ok lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                        f"dominant={r['dominant']} compute={r['compute_s']:.4f}s "
+                        f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s",
+                        flush=True,
+                    )
+                elif rec["status"] == "skip":
+                    print(f"[dryrun]   SKIP: {rec['reason']}", flush=True)
+    print(f"[dryrun] done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

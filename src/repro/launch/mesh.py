@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Single pod: 256 chips as (data=16, model=16).  Multi-pod: 2 pods x 256 =
+512 chips as (pod=2, data=16, model=16) — the pod axis is pure data
+parallelism across DCN.  A FUNCTION (not a module constant) so importing
+never touches jax device state; the dry-run forces 512 host devices before
+any jax import (see launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_context"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_context(mesh=None, *, multi_pod: bool = False, **kw):
+    """ParallelCtx wired to the production axis roles."""
+    from repro.parallel.context import ParallelCtx
+
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    batch_axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    return ParallelCtx(mesh=mesh, batch_axes=batch_axes, sp_axis="model", **kw)

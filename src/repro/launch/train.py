@@ -1,0 +1,81 @@
+"""Training entry point.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
+        [--reduced] [--steps 100] [--seq 128] [--batch 8] \
+        [--ckpt-dir DIR] [--compress] [--multi-pod]
+
+On real hardware the mesh comes from `make_production_mesh()`; on this
+container pass --fake-devices N to emulate (sets XLA_FLAGS; must be first).
+"""
+
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", help="family-preserving small config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--compress", action="store_true", help="int8+EF cross-pod grad compression")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fake-devices", type=int, default=0)
+    ap.add_argument("--tile-a", type=int, default=None)
+    ap.add_argument("--attn", default="mesh", choices=["mesh", "ring", "ulysses"])
+    args = ap.parse_args()
+
+    if args.fake_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.fake_devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_context, make_production_mesh
+    from repro.optim.adamw import AdamWConfig
+    from repro.parallel.compression import CompressionConfig
+    from repro.parallel.context import ParallelCtx
+    from repro.train.loop import TrainConfig, fit
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    n = jax.device_count()
+    if n >= 512 and args.multi_pod:
+        ctx = make_context(multi_pod=True, mesh_a=args.tile_a, attn_impl=args.attn)
+    elif n >= 256:
+        ctx = make_context(multi_pod=False, mesh_a=args.tile_a, attn_impl=args.attn)
+    elif n >= 8:
+        shape, axes = ((2, 2, 2), ("pod", "data", "model")) if args.multi_pod else ((2, 4), ("data", "model"))
+        mesh = jax.make_mesh(shape, axes)
+        ctx = ParallelCtx(
+            mesh=mesh,
+            batch_axes=("pod", "data") if args.multi_pod else ("data",),
+            sp_axis="model", mesh_a=args.tile_a, attn_impl=args.attn,
+            block_q=16, block_kv=16,
+        )
+    else:
+        ctx = ParallelCtx()
+    print(f"devices={n} mesh={'none' if ctx.mesh is None else dict(ctx.mesh.shape)}")
+
+    tcfg = TrainConfig(
+        steps=args.steps, seq=args.seq, batch=args.batch,
+        ckpt_dir=args.ckpt_dir,
+        compression=CompressionConfig(kind="int8") if args.compress else None,
+    )
+    out = fit(cfg, ctx, tcfg, AdamWConfig(total_steps=args.steps),
+              hooks={"on_step": lambda s, m: (s % 10 == 0) and print(
+                  f"step {s}: loss {float(m['loss']):.4f}")})
+    print(f"done: step={out['step']} final_loss={out.get('final_loss')}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

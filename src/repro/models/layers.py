@@ -1,0 +1,74 @@
+"""Shared building blocks: norms, rotary embeddings, initializers, losses."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "rope",
+    "dense_init",
+    "vocab_cross_entropy",
+]
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def rope(
+    x: jnp.ndarray,  # [B, S, H, D]
+    positions: jnp.ndarray,  # [S] or [B, S] int32 (true token positions; striped-aware)
+    theta: float = 10000.0,
+) -> jnp.ndarray:
+    """Rotary position embedding over the last dim (pairs interleaved as
+    [first half, second half], llama convention)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.float32) -> jnp.ndarray:
+    """Truncated-normal fan-in init (scale 1/sqrt(fan_in))."""
+    fan_in = shape[in_axis]
+    std = fan_in**-0.5
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def vocab_cross_entropy(
+    logits: jnp.ndarray,  # [B, S, V] (any float dtype; reductions in fp32)
+    labels: jnp.ndarray,  # [B, S] int32
+    mask: Optional[jnp.ndarray] = None,  # [B, S] 0/1
+) -> jnp.ndarray:
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,46 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, layer_norm, rms_norm
+from repro.parallel.context import ParallelCtx
+
+__all__ = ["init_mlp_params", "mlp_block"]
+
+_ACT = {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True)}
+
+
+def init_mlp_params(key, cfg: ModelConfig, L: int, dtype, d_ff=None) -> dict:
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": dense_init(ks[0], (L, D, F), dtype=dtype),
+        "w2": dense_init(ks[1], (L, F, D), dtype=dtype),
+    }
+    if cfg.mlp_gated:
+        p["w3"] = dense_init(ks[2], (L, D, F), dtype=dtype)
+    if cfg.norm == "layernorm":
+        p["ln"] = jnp.ones((L, D), dtype)
+        p["ln_b"] = jnp.zeros((L, D), dtype)
+    else:
+        p["ln"] = jnp.zeros((L, D), dtype)
+    return p
+
+
+def mlp_block(x: jnp.ndarray, p: dict, cfg: ModelConfig, ctx: ParallelCtx) -> jnp.ndarray:
+    act = _ACT[cfg.mlp_act]
+    if cfg.norm == "layernorm":
+        h = layer_norm(x, p["ln"], p["ln_b"])
+    else:
+        h = rms_norm(x, p["ln"])
+    up = h @ p["w1"]
+    if cfg.mlp_gated:
+        up = act(up) * (h @ p["w3"])
+    else:
+        up = act(up)
+    return x + up @ p["w2"]

@@ -1,0 +1,491 @@
+"""Model assembly: init / forward / loss / prefill / decode for every family.
+
+Layers are stacked along a leading L dim and iterated with ``lax.scan`` (+
+optional remat) so the lowered HLO is depth-independent — essential for the
+512-device dry-run compiles.  Family switches:
+
+  dense   — attention + gated MLP
+  moe     — attention + MoE (TP or EP mode)
+  ssm     — SSD blocks only (attention-free; Mesh-Attention N/A)
+  hybrid  — parallel attention + SSD heads, then MLP (hymba)
+  audio   — whisper-style encoder(full attn)-decoder(causal+cross) w/ stub
+  vlm     — pixtral: decoder backbone + patch-embedding merge (stub frontend)
+
+Decode uses the striped KV cache (core/decode_attention) for attention
+families, O(1) state updates for SSM, and absorbed-latent MLA decode
+(DeepSeek-style matrix absorption) for MiniCPM3 — the cache stores the
+256-d latent, not 40 decompressed heads.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import dense_init, layer_norm, rms_norm, rope, vocab_cross_entropy
+from repro.models.mlp import init_mlp_params, mlp_block
+from repro.parallel.context import ParallelCtx
+
+__all__ = [
+    "init_params",
+    "forward",
+    "loss_fn",
+    "init_cache",
+    "prefill",
+    "decode_step",
+    "param_count",
+]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32, ctx: Optional[ParallelCtx] = None):
+    ctx = ctx or ParallelCtx()
+    keys = jax.random.split(key, 12)
+    D, V, L = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    p: Dict = {"embed": dense_init(keys[0], (V, D), in_axis=-1, dtype=dtype)}
+
+    layers: Dict = {}
+    if cfg.family != "ssm":
+        layers["attn"] = attn.init_attention_params(keys[1], cfg, L, dtype)
+    if cfg.ssm is not None:
+        layers["ssm"] = ssm_mod.init_ssm_params(keys[2], cfg, L, dtype)
+    if cfg.moe is not None:
+        layers["moe"] = moe_mod.init_moe_params(keys[3], cfg, L, dtype, ctx)
+    elif cfg.family != "ssm" and cfg.d_ff > 0:
+        layers["mlp"] = init_mlp_params(keys[4], cfg, L, dtype)
+    if cfg.encoder_layers:
+        layers["xattn"] = attn.init_cross_attention_params(keys[5], cfg, L, dtype)
+    p["layers"] = layers
+
+    if cfg.norm == "layernorm":
+        p["final_ln"] = jnp.ones((D,), dtype)
+        p["final_ln_b"] = jnp.zeros((D,), dtype)
+    else:
+        p["final_ln"] = jnp.zeros((D,), dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[6], (D, V), dtype=dtype)
+
+    if cfg.encoder_layers:
+        Le = cfg.encoder_layers
+        enc_layers = {
+            "attn": attn.init_attention_params(keys[7], cfg, Le, dtype),
+            "mlp": init_mlp_params(keys[8], cfg, Le, dtype),
+        }
+        enc = {"layers": enc_layers}
+        if cfg.norm == "layernorm":
+            enc["final_ln"] = jnp.ones((D,), dtype)
+            enc["final_ln_b"] = jnp.zeros((D,), dtype)
+        else:
+            enc["final_ln"] = jnp.zeros((D,), dtype)
+        p["encoder"] = enc
+    if cfg.frontend:
+        p["frontend"] = {"proj": dense_init(keys[9], (cfg.frontend_dim, D), dtype=dtype)}
+    return p
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+
+def _final_norm(x, p, cfg):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["final_ln"], p["final_ln_b"])
+    return rms_norm(x, p["final_ln"])
+
+
+def _decoder_block(x, lp, cfg: ModelConfig, ctx: ParallelCtx, positions, enc=None):
+    """One decoder layer. Returns (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if cfg.family == "ssm":
+        return ssm_mod.ssm_block(x, lp["ssm"], cfg, ctx), aux
+    if cfg.hybrid:
+        a = attn.attention_block(x, lp["attn"], cfg, ctx, positions) - x
+        s = ssm_mod.ssm_block(x, lp["ssm"], cfg, ctx) - x
+        x = x + 0.5 * (a + s)
+    else:
+        x = attn.attention_block(x, lp["attn"], cfg, ctx, positions)
+    if enc is not None:
+        x = attn.cross_attention_block(x, enc, lp["xattn"], cfg, ctx)
+    if cfg.moe is not None:
+        x, aux = moe_mod.moe_block(x, lp["moe"], cfg, ctx)
+    elif cfg.d_ff > 0:
+        x = mlp_block(x, lp["mlp"], cfg, ctx)
+    return x, aux
+
+
+def _encoder_block(x, lp, cfg: ModelConfig, ctx: ParallelCtx, positions):
+    x = attn.attention_block(x, lp["attn"], cfg, ctx, positions, causal=False)
+    return mlp_block(x, lp["mlp"], cfg, ctx)
+
+
+def _stack_scan(f, carry, xs, ctx: ParallelCtx):
+    """lax.scan over stacked layers, or a python unroll (ctx.unroll_layers —
+    used by the dry-run so XLA cost analysis sees every layer)."""
+    if not ctx.unroll_layers:
+        return lax.scan(f, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        carry, y = f(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _scan_layers(x, layers, body, ctx: ParallelCtx):
+    """scan over stacked layer params, accumulating aux loss."""
+
+    def f(carry, lp):
+        x, aux = carry
+        x, a = body(x, lp)
+        return (x, aux + a), None
+
+    if ctx.remat:
+        f = jax.checkpoint(f, prevent_cse=False)
+    (x, aux), _ = _stack_scan(f, (x, jnp.float32(0.0)), layers, ctx)
+    return x, aux
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+
+
+def _encode_audio(params, cfg, ctx, frames):
+    """Stubbed conv frontend: mel frames -> projected embeddings -> encoder."""
+    x = frames.astype(params["embed"].dtype) @ params["frontend"]["proj"]
+    x = ctx.constrain(x, "seq", None)
+    pos = jnp.arange(cfg.encoder_seq, dtype=jnp.int32)
+    enc = params["encoder"]
+
+    def body(h, lp):
+        return _encoder_block(h, lp, cfg, ctx, pos), jnp.float32(0.0)
+
+    x, _ = _scan_layers(x, enc["layers"], body, ctx)
+    if cfg.norm == "layernorm":
+        x = layer_norm(x, enc["final_ln"], enc["final_ln_b"])
+    else:
+        x = rms_norm(x, enc["final_ln"])
+    return x
+
+
+def _merge_patches(x, params, positions, patches, num_patches):
+    """VLM stub: positions < num_patches take projected patch embeddings
+    (works under striping: gathered by true position)."""
+    px = patches.astype(x.dtype) @ params["frontend"]["proj"]  # [B, P, D]
+    idx = jnp.clip(positions, 0, num_patches - 1)
+    gathered = jnp.take(px, idx, axis=1)  # [B, S, D]
+    mask = (positions < num_patches)[None, :, None]
+    return jnp.where(mask, gathered, x)
+
+
+def forward(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (logits [B,S,V], aux_loss). batch: tokens [B,S], positions [S],
+    optional frames [B,S_enc,F] (audio) / patches [B,P,F] (vlm)."""
+    tokens = batch["tokens"]
+    positions = batch["positions"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend == "vision_stub":
+        x = _merge_patches(x, params, positions, batch["patches"], cfg.num_patches)
+    x = ctx.constrain(x, "seq", None)
+
+    enc = None
+    if cfg.encoder_layers:
+        enc = _encode_audio(params, cfg, ctx, batch["frames"])
+
+    body = functools.partial(_decoder_block, cfg=cfg, ctx=ctx, positions=positions, enc=enc)
+    x, aux = _scan_layers(x, params["layers"], lambda h, lp: body(h, lp), ctx)
+    x = _final_norm(x, params, cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    return logits, aux
+
+
+def loss_fn(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux = forward(params, cfg, ctx, batch)
+    ce = vocab_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    loss = ce + 0.01 * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# --------------------------------------------------------------------------
+
+
+def _attn_cache_dims(cfg: ModelConfig):
+    """(kv_heads, k_dim, v_dim) as stored in the cache."""
+    if cfg.mla is not None:
+        m = cfg.mla
+        d = m.kv_lora_rank + m.qk_rope_head_dim
+        return 1, d, d  # absorbed-latent cache: one "head" of latent width
+    return cfg.num_kv_heads, cfg.hd, cfg.hd
+
+
+def init_cache(cfg: ModelConfig, batch: int, cap: int, dtype=jnp.bfloat16, ctx=None):
+    L = cfg.num_layers
+    cache: Dict = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family != "ssm":
+        hkv, dk, dv = _attn_cache_dims(cfg)
+        cache["k"] = jnp.zeros((L, batch, cap, hkv, dk), dtype)
+        cache["v"] = jnp.zeros((L, batch, cap, hkv, dv), dtype)
+    if cfg.ssm is not None:
+        cache["ssm"] = ssm_mod.init_ssm_cache(cfg, L, batch, dtype)
+    if cfg.encoder_layers:
+        # cross-attention K/V precomputed from the encoder at prefill
+        H, hd = cfg.num_heads, cfg.hd
+        cache["cross_k"] = jnp.zeros((L, batch, cfg.encoder_seq, H, hd), dtype)
+        cache["cross_v"] = jnp.zeros((L, batch, cfg.encoder_seq, H, hd), dtype)
+    return cache
+
+
+def _decode_qkv(h, lp, cfg: ModelConfig, pos):
+    """Single-token projections in cache space. h [B,1,D] ->
+    (q [B,1,Hq,dk], k_new [B,1,hkv,dk], v_new [B,1,hkv,dv], scale)."""
+    B = h.shape[0]
+    positions = jnp.full((1,), pos, jnp.int32)
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+        cq = rms_norm(h @ lp["wq_a"], lp["q_ln"])
+        q = (cq @ lp["wq_b"]).reshape(B, 1, cfg.num_heads, qk)
+        q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+        q_rope = rope(q_rope, positions, cfg.rope_theta)
+        kv_a = h @ lp["wkv_a"]
+        c_kv = rms_norm(kv_a[..., : m.kv_lora_rank], lp["kv_ln"])
+        k_rope = rope(kv_a[..., None, m.kv_lora_rank :], positions, cfg.rope_theta)
+        # absorb W^{kv_b}_K into q: q_lat[h, r] = sum_n q_nope[h,n] Wb[r, h, n]
+        wb = lp["wkv_b"].reshape(m.kv_lora_rank, cfg.num_heads, -1)
+        wb_k = wb[..., : m.qk_nope_head_dim]
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wb_k)
+        q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)  # [B,1,H,kvr+rope]
+        kv_new = jnp.concatenate([c_kv[:, :, None, :], k_rope], axis=-1)  # latent "K"
+        scale = qk**-0.5
+        return q_eff, kv_new, kv_new, scale
+    hd = cfg.hd
+    q = h @ lp["wq"]
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = rope(q.reshape(B, 1, cfg.num_heads, hd), positions, cfg.rope_theta)
+    k = rope(k.reshape(B, 1, cfg.num_kv_heads, hd), positions, cfg.rope_theta)
+    v = v.reshape(B, 1, cfg.num_kv_heads, hd)
+    return q, k, v, hd**-0.5
+
+
+def _decode_attn_out(o, h_in, lp, cfg: ModelConfig):
+    B = o.shape[0]
+    if cfg.mla is not None:
+        m = cfg.mla
+        o_lat = o[..., : m.kv_lora_rank]  # latent-space values
+        wb = lp["wkv_b"].reshape(m.kv_lora_rank, cfg.num_heads, -1)
+        wb_v = wb[..., m.qk_nope_head_dim :]
+        ov = jnp.einsum("bshr,rhv->bshv", o_lat, wb_v)
+        return h_in + ov.reshape(B, 1, -1) @ lp["wo"]
+    return h_in + o.reshape(B, 1, -1) @ lp["wo"]
+
+
+def _decode_block(x, lp, cache_l, cfg: ModelConfig, ctx: ParallelCtx, pos):
+    """One layer's decode. cache_l: dict of this layer's cache slices."""
+    new_cache = dict(cache_l)
+    if cfg.family == "ssm":
+        y, new_cache["ssm"] = ssm_mod.ssm_decode_step(x, lp["ssm"], cache_l["ssm"], cfg)
+        return y, new_cache
+
+    h = rms_norm(x, lp["attn"]["ln"]) if cfg.norm == "rmsnorm" else layer_norm(
+        x, lp["attn"]["ln"], lp["attn"]["ln_b"]
+    )
+    q, k_new, v_new, scale = _decode_qkv(h, lp["attn"], cfg, pos)
+    # the decode cache is ALWAYS striped (even for contiguous-train archs):
+    # prefill restripes K/V once; appends then stay load-balanced forever
+    o, ck, cv = attn.decode_attention_step(
+        q, k_new, v_new, cache_l["k"], cache_l["v"], pos, ctx,
+        window=cfg.window, layout="striped", scale=scale,
+    )
+    new_cache["k"], new_cache["v"] = ck, cv
+    y = _decode_attn_out(o, x, lp["attn"], cfg)
+
+    if cfg.hybrid:
+        s, new_cache["ssm"] = ssm_mod.ssm_decode_step(x, lp["ssm"], cache_l["ssm"], cfg)
+        y = x + 0.5 * ((y - x) + (s - x))
+
+    if cfg.encoder_layers:
+        # cross-attention against the precomputed encoder K/V
+        hc = rms_norm(y, lp["xattn"]["ln"]) if cfg.norm == "rmsnorm" else layer_norm(
+            y, lp["xattn"]["ln"], lp["xattn"]["ln_b"]
+        )
+        B = y.shape[0]
+        qc = (hc @ lp["xattn"]["wq"]).reshape(B, 1, cfg.num_heads, cfg.hd)
+        oc, _ = kops.block_attention(
+            qc, cache_l["cross_k"], cache_l["cross_v"], kops.full_band()
+        )
+        y = y + oc.reshape(B, 1, -1) @ lp["xattn"]["wo"]
+
+    if cfg.moe is not None:
+        y, _ = moe_mod.moe_block(y, lp["moe"], cfg, ctx)
+    elif cfg.d_ff > 0:
+        y = mlp_block(y, lp["mlp"], cfg, ctx)
+    return y, new_cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: ParallelCtx):
+    """One greedy decode step.
+    tokens [B,1] -> (next [B,1], new cache, logits [B,1,V])."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = ctx.constrain(x, None, None)
+
+    layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+
+    def body(x, inp):
+        lp, cl = inp
+        x, new_cl = _decode_block(x, lp, cl, cfg, ctx, pos)
+        return x, new_cl
+
+    x, new_layer_cache = _stack_scan(body, x, (params["layers"], layer_cache), ctx)
+    x = _final_norm(x, params, cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    nxt = jnp.argmax(logits, axis=-1).astype(tokens.dtype)
+    new_cache = dict(new_layer_cache)
+    new_cache["pos"] = pos + 1
+    return nxt, new_cache, logits
+
+
+def _cache_scatter_indices(cfg: ModelConfig, S: int, cap: int, n: int):
+    """Static map: prefill K/V index j -> striped-cache global index.
+
+    Striped cache convention: position p lives at global index
+    (p % n) * (cap/n) + p // n (shard p % n, slot p // n).  For striped-train
+    archs the prefill array index j already means position
+    (j // (S/n)) + n*(j % (S/n)), which maps to contiguous per-shard blocks —
+    zero data movement.  Contiguous-train archs (hymba) pay one restripe.
+    """
+    import numpy as np
+
+    j = np.arange(S)
+    if n <= 1:
+        return jnp.asarray(j)
+    if cfg.causal_layout == "striped":
+        p = (j // (S // n)) + n * (j % (S // n))
+    else:
+        p = j
+    g = (p % n) * (cap // n) + p // n
+    return jnp.asarray(g)
+
+
+def prefill(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
+    """Forward over the prompt, writing the striped KV cache per layer.
+
+    For striped-layout archs the prefill chunks ARE the cache shards (token t
+    on shard t mod n) — K/V land with no resharding; this is the paper's
+    locality property carried into serving.
+    """
+    tokens, positions = batch["tokens"], batch["positions"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend == "vision_stub":
+        x = _merge_patches(x, params, positions, batch["patches"], cfg.num_patches)
+    x = ctx.constrain(x, "seq", None)
+    enc = None
+    if cfg.encoder_layers:
+        enc = _encode_audio(params, cfg, ctx, batch["frames"])
+
+    S = tokens.shape[1]
+    has_attn = cfg.family != "ssm"
+    has_ssm = cfg.ssm is not None
+    cap = cache["k"].shape[2] if has_attn else None
+    g_idx = _cache_scatter_indices(cfg, S, cap, ctx.sp_size) if has_attn else None
+    keys = [k for k in ("k", "v", "ssm", "cross_k", "cross_v") if k in cache]
+    layer_cache = {k: cache[k] for k in keys}
+
+    def _kv_for_cache(h, lp):
+        if cfg.mla is not None:
+            m = cfg.mla
+            kv_a = h @ lp["wkv_a"]
+            c_kv = rms_norm(kv_a[..., : m.kv_lora_rank], lp["kv_ln"])
+            k_rope = rope(kv_a[..., None, m.kv_lora_rank :], positions, cfg.rope_theta)
+            lat = jnp.concatenate([c_kv[:, :, None, :], k_rope], axis=-1)
+            return lat, lat
+        k = h @ lp["wk"]
+        v = h @ lp["wv"]
+        if cfg.qkv_bias:
+            k, v = k + lp["bk"], v + lp["bv"]
+        B = h.shape[0]
+        k = rope(k.reshape(B, S, cfg.num_kv_heads, cfg.hd), positions, cfg.rope_theta)
+        v = v.reshape(B, S, cfg.num_kv_heads, cfg.hd)
+        return k, v
+
+    def body(x, inp):
+        lp, cl = inp
+        new_cl = dict(cl)
+        aux = jnp.float32(0.0)
+        if has_attn:
+            h = rms_norm(x, lp["attn"]["ln"]) if cfg.norm == "rmsnorm" else layer_norm(
+                x, lp["attn"]["ln"], lp["attn"]["ln_b"]
+            )
+            kk, vv = _kv_for_cache(h, lp["attn"])
+            new_cl["k"] = cl["k"].at[:, g_idx].set(kk.astype(cl["k"].dtype))
+            new_cl["v"] = cl["v"].at[:, g_idx].set(vv.astype(cl["v"].dtype))
+        if cfg.encoder_layers:
+            B = x.shape[0]
+            new_cl["cross_k"] = (enc @ lp["xattn"]["wk"]).reshape(
+                B, cfg.encoder_seq, cfg.num_heads, cfg.hd
+            ).astype(cl["cross_k"].dtype)
+            new_cl["cross_v"] = (enc @ lp["xattn"]["wv"]).reshape(
+                B, cfg.encoder_seq, cfg.num_heads, cfg.hd
+            ).astype(cl["cross_v"].dtype)
+        # run the block; collect SSM final state where present
+        if cfg.family == "ssm":
+            x, st = ssm_mod.ssm_block(x, lp["ssm"], cfg, ctx, return_state=True)
+            new_cl["ssm"] = {
+                "conv": st["conv"].astype(cl["ssm"]["conv"].dtype),
+                "state": st["state"],
+            }
+        elif cfg.hybrid:
+            a = attn.attention_block(x, lp["attn"], cfg, ctx, positions) - x
+            sx, st = ssm_mod.ssm_block(x, lp["ssm"], cfg, ctx, return_state=True)
+            new_cl["ssm"] = {
+                "conv": st["conv"].astype(cl["ssm"]["conv"].dtype),
+                "state": st["state"],
+            }
+            x = x + 0.5 * (a + (sx - x))
+            if cfg.d_ff > 0:
+                x = mlp_block(x, lp["mlp"], cfg, ctx)
+        else:
+            x, aux = _decoder_block(x, lp, cfg, ctx, positions, enc=enc)
+        return x, new_cl
+
+    if ctx.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, new_layer_cache = _stack_scan(body, x, (params["layers"], layer_cache), ctx)
+    x = _final_norm(x, params, cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    # under striping the LAST POSITION is not the last index
+    last_idx = jnp.argmax(positions)
+    logits = jnp.take(x, last_idx[None], axis=1) @ head.astype(x.dtype)
+    new_cache = dict(cache)
+    new_cache.update(new_layer_cache)
+    new_cache["pos"] = jnp.asarray(S, jnp.int32)
+    return logits, new_cache

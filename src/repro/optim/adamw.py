@@ -1,0 +1,86 @@
+"""AdamW in pure JAX pytrees (fp32 moments), with global-norm clipping and
+wsd/cosine learning-rate schedules.  No optax dependency — the optimizer
+state sharding must follow parallel/sharding rules exactly."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "init_opt_state", "adamw_update", "make_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    schedule: str = "cosine"  # constant | cosine | wsd
+    warmup_steps: int = 100
+    total_steps: int = 10000
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray  # int32 scalar
+    m: object  # pytree like params (fp32)
+    v: object  # pytree like params (fp32)
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+
+def make_schedule(cfg: AdamWConfig) -> Callable:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        if cfg.schedule == "constant":
+            decay = 1.0
+        elif cfg.schedule == "wsd":
+            # warmup-stable-decay: linear decay over the last 10%
+            tail = 0.9 * cfg.total_steps
+            decay = jnp.clip(1.0 - (step - tail) / jnp.maximum(0.1 * cfg.total_steps, 1), 0.1, 1.0)
+        else:  # cosine
+            frac = jnp.clip(step / jnp.maximum(cfg.total_steps, 1), 0.0, 1.0)
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return cfg.lr * warm * decay
+
+    return sched
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    params, grads, state: OptState, cfg: AdamWConfig
+) -> Tuple[object, OptState, dict]:
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+    step = state.step + 1
+    lr = make_schedule(cfg)(step)
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32), state.m, grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.v, grads)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1**t
+    bc2 = 1 - b2**t
+
+    def upd(p, mm, vv):
+        u = (mm / bc1) / (jnp.sqrt(vv / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, OptState(step=step, m=m, v=v), {"grad_norm": gnorm, "lr": lr}

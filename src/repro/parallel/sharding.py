@@ -1,0 +1,175 @@
+"""Parameter / optimizer / activation sharding rules.
+
+Strategies:
+  * train ("cp_fsdp"): context parallelism for attention (seq over `model`)
+    + ZeRO-style parameter sharding.  Each weight's largest shardable dim is
+    sharded over ("data","model") combined when divisible, else over "data"
+    with the next dim over "model" — XLA all-gathers per layer inside the
+    scan.  Params stay replicated across pods (cross-pod traffic is gradient
+    all-reduce only, optionally compressed).
+  * serve ("tp"): Megatron row/column parallelism over `model` so decode
+    never gathers weights: QKV/up projections column-parallel, O/down
+    row-parallel (psum per block), vocab sharded for embed/lm_head.
+
+Specs are produced per-leaf with tree_map_with_path; divisibility is always
+checked against the actual mesh, so any assigned architecture (e.g. expert
+d_ff 1408) gets a legal, if less aggressive, sharding.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.parallel.context import ParallelCtx
+
+__all__ = ["param_specs", "param_shardings", "opt_specs", "batch_specs"]
+
+# name-based roles for the serve (TP) strategy
+_COL_PARALLEL = {
+    "wq", "wk", "wv", "w1", "w3", "ws1", "ws3", "wq_b", "wkv_b", "in_proj",
+    "bq", "bk", "bv", "lm_head",
+}
+_ROW_PARALLEL = {"wo", "w2", "ws2", "out_proj"}
+_EXPERT_COL = {"we1", "we3"}
+_EXPERT_ROW = {"we2"}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def _axsize(ctx: ParallelCtx, name: str) -> int:
+    if ctx.mesh is None or name not in ctx.mesh.shape:
+        return 1
+    return ctx.mesh.shape[name]
+
+
+def _train_spec(name: str, shape, ctx: ParallelCtx, *, for_opt: bool) -> P:
+    dp = _axsize(ctx, "data")
+    mp = _axsize(ctx, "model")
+    nd = len(shape)
+    if name in ("we1", "we3", "we2") and nd == 4:
+        # expert weights [L, E, d_in, d_out]: EP when the (padded) expert
+        # count divides the model axis (the dispatch all-to-all reshards
+        # tokens), else TP on the expert FFN dim (mixtral: 8 experts < 16)
+        E = shape[1]
+        spec = [None, None, None, None]
+        if mp > 1 and E % mp == 0:
+            spec[1] = "model"
+            big = 2 if shape[2] >= shape[3] else 3
+            if dp > 1 and shape[big] % dp == 0:
+                spec[big] = "data"
+        else:
+            ff = 3 if name in ("we1", "we3") else 2
+            other = 2 if ff == 3 else 3
+            if mp > 1 and shape[ff] % mp == 0:
+                spec[ff] = "model"
+            if dp > 1 and shape[other] % dp == 0:
+                spec[other] = "data"
+        return P(*spec)
+    if name == "embed":
+        if shape[0] % (dp * mp) == 0 and dp * mp > 1:
+            return P(("data", "model"), *([None] * (nd - 1)))
+        if shape[0] % mp == 0 and mp > 1:
+            return P("model", *([None] * (nd - 1)))
+        return P(*([None] * nd))
+    # stacked layer tensors: never shard the leading L dim
+    start = 1 if nd >= 2 else 0
+    dims = list(range(start, nd))
+    if not dims:
+        return P(*([None] * nd))
+    order = sorted(dims, key=lambda d: -shape[d])
+    spec = [None] * nd
+    big = order[0]
+    if dp * mp > 1 and shape[big] % (dp * mp) == 0:
+        spec[big] = ("data", "model")
+        return P(*spec)
+    if dp > 1 and shape[big] % dp == 0:
+        spec[big] = "data"
+        for d in order[1:]:
+            if mp > 1 and shape[d] % mp == 0:
+                spec[d] = "model"
+                break
+        return P(*spec)
+    if mp > 1 and shape[big] % mp == 0:
+        spec[big] = "model"
+        return P(*spec)
+    return P(*spec)
+
+
+def _serve_spec(name: str, shape, ctx: ParallelCtx) -> P:
+    mp = _axsize(ctx, "model")
+    nd = len(shape)
+    if mp <= 1:
+        return P(*([None] * nd))
+
+    def ok(d):
+        return shape[d] % mp == 0
+
+    spec = [None] * nd
+    if name == "embed":
+        if ok(0):
+            spec[0] = "model"
+        return P(*spec)
+    if name in _COL_PARALLEL and ok(nd - 1):
+        spec[nd - 1] = "model"
+        return P(*spec)
+    if name in _ROW_PARALLEL and nd >= 2 and ok(nd - 2):
+        spec[nd - 2] = "model"
+        return P(*spec)
+    if name in _EXPERT_COL and ok(nd - 1):
+        spec[nd - 1] = "model"
+        return P(*spec)
+    if name in _EXPERT_ROW and nd >= 2 and ok(nd - 2):
+        spec[nd - 2] = "model"
+        return P(*spec)
+    return P(*spec)
+
+
+def param_specs(params, ctx: ParallelCtx, strategy: str = "train"):
+    """Pytree of PartitionSpec matching ``params``."""
+
+    def f(path, leaf):
+        name = _leaf_name(path)
+        if strategy == "serve":
+            return _serve_spec(name, leaf.shape, ctx)
+        return _train_spec(name, leaf.shape, ctx, for_opt=False)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def param_shardings(params, ctx: ParallelCtx, strategy: str = "train"):
+    if ctx.mesh is None:
+        return jax.tree.map(lambda _: None, params)
+    return jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, s), param_specs(params, ctx, strategy)
+    )
+
+
+def opt_specs(params, ctx: ParallelCtx):
+    """Adam moments use the same (maximally 2-D) sharding as the params."""
+    return param_specs(params, ctx, "train")
+
+
+def batch_specs(cfg, ctx: ParallelCtx, *, kind: str = "train", batch: Optional[int] = None):
+    """Sharding specs for one batch dict (tokens/labels/positions/...)."""
+    bs = ctx.batch_spec if batch is None else ctx.eff_batch_spec(batch)
+    seq = ctx.sp_axis if kind in ("train", "prefill") else None
+    specs = {
+        "tokens": P(bs, seq),
+        "labels": P(bs, seq),
+        "positions": P(seq),
+    }
+    if cfg.frontend == "audio_stub":
+        # encoder frame count need not divide the model axis; keep seq local
+        specs["frames"] = P(bs, None, None)
+    if cfg.frontend == "vision_stub":
+        specs["patches"] = P(bs, None, None)
+    return specs

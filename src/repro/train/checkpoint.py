@@ -1,0 +1,180 @@
+"""Fault-tolerant checkpointing: atomic, content-hashed, keep-k, async.
+
+Layout (one directory per step):
+    <dir>/step_000123/
+        arrays.npz          flattened pytree ("/"-joined paths)
+        manifest.json       {step, keys, shapes, dtypes, sha256(arrays.npz)}
+    <dir>/step_000123.tmp-* during write; os.replace() makes publish atomic.
+
+Restores verify the manifest hash, skip corrupt/partial checkpoints, and
+device_put with the *target* shardings — so a run checkpointed on one mesh
+restarts on a different device count (elastic resume; resharding happens at
+load).  ``AsyncCheckpointer`` moves serialization off the train loop.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+
+    def name(path):
+        parts = []
+        for e in path:
+            if hasattr(e, "key"):
+                parts.append(str(e.key))
+            elif hasattr(e, "idx"):
+                parts.append(str(e.idx))
+            else:
+                parts.append(str(e))
+        return _SEP.join(parts)
+
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[name(path)] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save(directory: str, step: int, tree, *, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:09d}")
+    tmp = tempfile.mkdtemp(prefix=f"step_{step:09d}.tmp-", dir=directory)
+    try:
+        arrays = _flatten(tree)
+        npz_path = os.path.join(tmp, "arrays.npz")
+        np.savez(npz_path, **arrays)
+        with open(npz_path, "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        manifest = {
+            "step": step,
+            "keys": sorted(arrays),
+            "shapes": {k: list(v.shape) for k, v in arrays.items()},
+            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+            "sha256": digest,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _cleanup(directory, keep)
+    return final
+
+
+def _cleanup(directory: str, keep: int) -> None:
+    steps = sorted(_list_steps(directory))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:09d}"), ignore_errors=True)
+
+
+def _list_steps(directory: str) -> List[int]:
+    out = []
+    if not os.path.isdir(directory):
+        return out
+    for name in os.listdir(directory):
+        if name.startswith("step_") and ".tmp" not in name:
+            if _valid(os.path.join(directory, name)):
+                out.append(int(name[5:]))
+    return out
+
+
+def _valid(path: str) -> bool:
+    man = os.path.join(path, "manifest.json")
+    npz = os.path.join(path, "arrays.npz")
+    if not (os.path.isfile(man) and os.path.isfile(npz)):
+        return False
+    try:
+        with open(man) as f:
+            manifest = json.load(f)
+        with open(npz, "rb") as f:
+            return hashlib.sha256(f.read()).hexdigest() == manifest["sha256"]
+    except (OSError, ValueError, KeyError):
+        return False
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = _list_steps(directory)
+    return max(steps) if steps else None
+
+
+def restore(directory: str, tree_like, *, step: Optional[int] = None, shardings=None):
+    """Restore into the structure of ``tree_like``; device_put with target
+    shardings (resharding = elastic resume).  Returns (tree, step)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:09d}")
+    if not _valid(path):
+        raise IOError(f"checkpoint {path} corrupt")
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    flat_paths, tdef = jax.tree_util.tree_flatten_with_path(tree_like)
+
+    def name(path_):
+        parts = []
+        for e in path_:
+            parts.append(str(e.key) if hasattr(e, "key") else str(getattr(e, "idx", e)))
+        return _SEP.join(parts)
+
+    leaves = []
+    shard_flat = (
+        jax.tree.leaves(shardings) if shardings is not None else [None] * len(flat_paths)
+    )
+    for (p, like), sh in zip(flat_paths, shard_flat):
+        arr = arrays[name(p)]
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(f"shape mismatch for {name(p)}: {arr.shape} vs {like.shape}")
+        arr = arr.astype(like.dtype)
+        leaves.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
+    return jax.tree.unflatten(tdef, leaves), step
+
+
+class AsyncCheckpointer:
+    """Serialize checkpoints on a background thread; at most one in flight
+    (the next save waits), and ``wait()`` blocks until published."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def run():
+            try:
+                save(self.directory, step, host_tree, keep=self.keep)
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,82 @@
+"""Communication-volume analytics vs the paper's Table 2 / §3.8 formulas."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import am
+from repro.core.tiling import factorizations
+
+
+def test_ring_volume():
+    assert am.ring_volume(9) == pytest.approx(2 - 2 / 9)
+    # paper: ~2Nd asymptotically
+    assert am.ring_volume(4096) == pytest.approx(2.0, abs=1e-3)
+
+
+def test_mesh_volume_formula():
+    # (2a/n + 2/a - 4/n) Nd
+    for n in (9, 16, 64, 256):
+        for a, b in factorizations(n):
+            want = 2 * a / n + 2 / a - 4 / n
+            assert am.mesh_volume(n, a) == pytest.approx(want)
+
+
+def test_mesh_optimum_sqrt_n():
+    """AM-GM: volume minimized at a = sqrt(n) -> ~4/sqrt(n) Nd."""
+    for n in (16, 64, 256, 1024):
+        r = int(math.isqrt(n))
+        vols = {a: am.mesh_volume(n, a) for a, _ in factorizations(n)}
+        assert min(vols, key=vols.get) == r
+        assert vols[r] == pytest.approx(4 / r - 4 / n)
+
+
+def test_mesh_covers_ring_special_case():
+    for n in (4, 9, 256):
+        assert am.mesh_volume(n, 1) == pytest.approx(am.ring_volume(n))
+
+
+def test_paper_256gpu_reduction():
+    """Paper §4.5: ~78-85% comm reduction at 256 GPUs (fwd theory: 1-4/sqrt(n)/2)."""
+    n = 256
+    red = 1 - am.mesh_volume(n) / am.ring_volume(n)
+    assert 0.85 <= red <= 0.90  # theory: 1 - (4/16-4/256)/(2-2/256) = 0.877
+
+
+def test_table2_ordering():
+    """At any realistic n: ulysses < mesh < startrail < ring (per Table 2)."""
+    for n in (64, 256, 1024):
+        t = am.table2(n)
+        assert t["ulysses"] < t["mesh"] < t["startrail"] < t["ring"]
+
+
+@given(st.integers(4, 1024))
+@settings(max_examples=80, deadline=None)
+def test_scaling_property(n):
+    """Mesh per-device volume decreases ~1/sqrt(n); Ring stays ~constant
+    (paper §4.5 observation)."""
+    assert am.mesh_volume(4 * n) < am.mesh_volume(n) + 1e-12
+    assert abs(am.ring_volume(4 * n) - am.ring_volume(n)) < 0.5
+
+
+def test_comm_model_bytes():
+    m = am.CommModel(seq=8192, hidden=4096, n=16, kv_hidden=1024, bytes_per_elem=2)
+    chunk = 8192 // 16 * 2  # tokens * bytes
+    assert m.chunk_bytes("q") == chunk * 4096
+    assert m.chunk_bytes("kv") == chunk * 2 * 1024
+    assert m.chunk_bytes("odoq") == chunk * 3 * 4096
+    # fwd bytes at a=4: 3 Q + 3 KV + 3 O
+    assert m.fwd_bytes(4) == 3 * m.chunk_bytes("q") + 3 * m.chunk_bytes("kv") + 3 * m.chunk_bytes("o")
+    # ring = (n-1) KV chunks
+    assert m.ring_fwd_bytes() == 15 * m.chunk_bytes("kv")
+
+
+def test_gqa_shifts_optimum_toward_smaller_a():
+    """GQA (small KV) makes KV cheap relative to Q/O, so the byte-optimal tile
+    gets flatter (smaller a) — the §4.7 effect."""
+    mha = am.CommModel(seq=1 << 20, hidden=4096, n=64)
+    gqa8 = am.CommModel(seq=1 << 20, hidden=4096, n=64, kv_hidden=4096 // 8)
+    assert gqa8.best_a() <= mha.best_a()
+    assert mha.best_a() == 8  # sqrt(64) for symmetric traffic

@@ -1,0 +1,152 @@
+"""Autotuner (Fig. 6), simulator invariants, HLO collective parsing, and
+dry-run cell bookkeeping."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.am import CommModel
+from repro.core.autotune import plan_for, tune
+from repro.core.simulator import HardwareModel, make_cost_model, simulate
+from repro.core.tiling import factorizations
+
+COMM_HW = HardwareModel(peak_flops=989e12, link_bw=2e9, attn_efficiency=0.3)
+FAST_HW = HardwareModel(peak_flops=50e12, link_bw=400e9, attn_efficiency=0.9)
+
+
+def test_autotune_picks_square_for_mha_comm_bound():
+    """Communication-bound + MHA: the tuned tile approaches sqrt(n) (paper
+    §3.8 AM-GM optimum)."""
+    plan = tune(CommModel(seq=1 << 20, hidden=4096, n=64), COMM_HW, causal=True)
+    assert plan.a in (4, 8, 16)  # near sqrt(64), never the ring extreme
+    assert plan.a != 1
+
+
+def test_autotune_compute_bound_indifferent_but_valid():
+    """Compute-bound: any tile hides comm; the tuner must return a valid plan
+    whose simulated time ~= pure compute."""
+    plan = tune(CommModel(seq=1 << 18, hidden=4096, n=16), FAST_HW, causal=False)
+    assert plan.fwd_sim.exposed_comm < 0.05 * plan.fwd_sim.total
+
+
+def test_autotune_beats_or_ties_every_fixed_tile():
+    comm = CommModel(seq=1 << 19, hidden=4096, n=32)
+    best = tune(comm, COMM_HW, causal=True)
+    for a, _ in factorizations(32):
+        assert best.total <= plan_for(comm, a, COMM_HW, causal=True).total * 1.0001
+
+
+def test_gqa_moves_tuned_tile_flatter():
+    """EXPERIMENTS.md §Perf B2: with GQA the byte-optimal tile has smaller a
+    (measured on compiled HLO; here the analytic/tuner view)."""
+    mha = CommModel(seq=1 << 20, hidden=4096, n=16)
+    gqa = CommModel(seq=1 << 20, hidden=4096, n=16, kv_hidden=4096 // 8)
+    assert gqa.best_a() <= mha.best_a()
+    assert gqa.best_a() <= 2
+
+
+@given(st.integers(2, 32).flatmap(lambda n: st.tuples(st.just(n), st.sampled_from([a for a, _ in factorizations(n)]))))
+@settings(max_examples=50, deadline=None)
+def test_simulator_invariants(na):
+    """total >= compute, total >= serialized-comm/rings, exposed <= comm."""
+    n, a = na
+    comm = CommModel(seq=1 << 16, hidden=1024, n=n)
+    plan = plan_for(comm, a, COMM_HW, causal=False, with_backward=False)
+    sim = plan.fwd_sim
+    assert sim.total >= sim.compute - 1e-12
+    assert sim.exposed_comm <= sim.comm + 1e-12
+    assert sim.total >= sim.compute + sim.exposed_comm - 1e-9
+    # wire bytes match the analytic model exactly
+    assert sim.comm_bytes == comm.fwd_bytes(a)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+  %ag = bf16[16,1024,128]{2,1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar.1 = f32[256,256]{1,0} all-reduce(%y), replica_groups=[8,2]<=[16], to_apply=%add
+  %rs = f32[64,128]{1,0} reduce-scatter(%z), replica_groups={{0,1}}, dimensions={0}
+  %cp = bf16[2,512]{1,0} collective-permute(%w), source_target_pairs={{0,1},{1,0}}
+  %ags = (bf16[8,8]{1,0}, bf16[32,8]{1,0}) all-gather-start(%v), replica_groups={{0,1,2,3}}
+  %agd = bf16[32,8]{1,0} all-gather-done(%ags)
+"""
+
+
+def test_collective_bytes_parsing():
+    from repro.launch.hlo_analysis import collective_bytes
+
+    out = collective_bytes(HLO_SAMPLE)
+    # all-gather: 16*1024*128*2 bytes * 3/4  +  start form: 32*8*2 * 3/4
+    assert out["all-gather"] == pytest.approx(16 * 1024 * 128 * 2 * 0.75 + 32 * 8 * 2 * 0.75)
+    # all-reduce: 2 * payload * (g-1)/g with iota groups [8,2] -> g=2
+    assert out["all-reduce"] == pytest.approx(2 * 256 * 256 * 4 * 0.5)
+    # reduce-scatter: result * (g-1)
+    assert out["reduce-scatter"] == pytest.approx(64 * 128 * 4 * 1)
+    # collective-permute: full payload
+    assert out["collective-permute"] == pytest.approx(2 * 512 * 2)
+    assert out["total"] == pytest.approx(sum(out[k] for k in (
+        "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")))
+
+
+def test_roofline_terms_math():
+    from repro.launch.hlo_analysis import HW, roofline_terms
+
+    r = roofline_terms(1e12, 1e11, 1e9, chips=256, model_flops=200e12)
+    assert r["compute_s"] == pytest.approx(1e12 / HW["peak_flops"])
+    assert r["memory_s"] == pytest.approx(1e11 / HW["hbm_bw"])
+    assert r["collective_s"] == pytest.approx(1e9 / HW["link_bw"])
+    assert r["dominant"] == "memory"  # 122ms > 5.1ms > 0.02ms
+    assert r["useful_flops_ratio"] == pytest.approx(200e12 / (1e12 * 256))
+    r2 = roofline_terms(1e14, 1e10, 1e9, chips=8)
+    assert r2["dominant"] == "compute"
+
+
+# ---------------------------------------------------------------------------
+# dry-run cell bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_cell_applicability_rules():
+    from repro.configs import ALL_ARCHS, SHAPES, get_config
+    from repro.launch.cells import cell_applicable
+
+    runs_500k = {
+        a for a in ALL_ARCHS
+        if cell_applicable(get_config(a), SHAPES["long_500k"])[0]
+    }
+    assert runs_500k == {"mamba2-370m", "hymba-1.5b", "mixtral-8x7b"}
+    for a in ALL_ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert cell_applicable(get_config(a), SHAPES[s])[0]
+
+
+def test_model_flops_sane():
+    from repro.configs import SHAPES, get_config
+    from repro.launch.cells import active_params, model_flops
+
+    dense = active_params(get_config("granite-8b"))
+    assert 7.5e9 < dense < 9.5e9
+    moe_total_vs_active = active_params(get_config("mixtral-8x7b"))
+    assert 11e9 < moe_total_vs_active < 16e9  # 2-of-8 experts active + shared
+    f = model_flops(get_config("granite-8b"), SHAPES["train_4k"])
+    assert f == pytest.approx(6 * dense * 4096 * 256, rel=1e-6)
+
+
+def test_dryrun_results_complete_and_clean():
+    """The shipped dry-run artifacts: 40 cells x 2 meshes, no errors."""
+    import json
+    import os
+
+    d = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "results", "dryrun")
+    if not os.path.isdir(d):
+        pytest.skip("dry-run results not generated")
+    base = [f for f in os.listdir(d) if f.endswith("single.json") or f.endswith("multi.json")]
+    assert len(base) == 80
+    statuses = {}
+    for fn in base:
+        with open(os.path.join(d, fn)) as f:
+            statuses[fn] = json.load(f)["status"]
+    assert all(s in ("ok", "skip") for s in statuses.values()), statuses
+    assert sum(1 for s in statuses.values() if s == "ok") == 66

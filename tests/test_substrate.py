@@ -1,0 +1,218 @@
+"""Substrate tests: optimizer, checkpointing/fault-tolerance, compression,
+straggler monitor, serving engine, end-to-end training loop."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state, make_schedule
+from repro.parallel.compression import CompressionConfig, compress_grads, init_error_state
+from repro.parallel.context import ParallelCtx
+from repro.train import checkpoint as ckpt
+from repro.train.loop import TrainConfig, fit
+from repro.train.monitor import StepMonitor, StragglerPolicy
+
+CTX = ParallelCtx()
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+
+
+def test_adamw_converges_quadratic():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, total_steps=300, warmup_steps=1, schedule="constant")
+    state = init_opt_state(params)
+    loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, g, state, cfg)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_clipping_and_schedule():
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, warmup_steps=10, total_steps=100)
+    params = {"w": jnp.zeros(4)}
+    state = init_opt_state(params)
+    big = {"w": jnp.full(4, 1e6)}
+    params, state, m = adamw_update(params, big, state, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+    assert np.isfinite(np.asarray(params["w"])).all()
+    sched = make_schedule(cfg)
+    assert float(sched(jnp.int32(0))) == 0.0
+    assert float(sched(jnp.int32(10))) == pytest.approx(1.0, rel=0.05)
+    assert float(sched(jnp.int32(100))) < 0.01
+
+
+# --------------------------------------------------------------------------
+# checkpointing / fault tolerance
+# --------------------------------------------------------------------------
+
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = _tree()
+    ckpt.save(d, 5, tree)
+    restored, step = ckpt.restore(d, jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree))
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4):
+        ckpt.save(d, s, _tree(), keep=2)
+    assert ckpt.latest_step(d) == 4
+    assert sorted(ckpt._list_steps(d)) == [3, 4]
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, _tree())
+    ckpt.save(d, 2, _tree())
+    # corrupt the newest
+    with open(os.path.join(d, "step_000000002", "arrays.npz"), "r+b") as f:
+        f.seek(10)
+        f.write(b"\x00\x00garbage\x00")
+    # latest_step must skip the corrupt one
+    assert ckpt.latest_step(d) == 1
+    restored, step = ckpt.restore(d, jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), _tree()))
+    assert step == 1
+
+
+def test_async_checkpointer(tmp_path):
+    d = str(tmp_path / "ck")
+    saver = ckpt.AsyncCheckpointer(d, keep=2)
+    for s in (1, 2, 3):
+        saver.save(s, _tree())
+    saver.wait()
+    assert ckpt.latest_step(d) == 3
+
+
+def test_train_resume_after_injected_failure(tmp_path):
+    """Train 6 steps with a crash at step 4; resume must continue from the
+    checkpoint and produce the SAME final loss as an uninterrupted run
+    (bitwise-deterministic data pipeline + state restore)."""
+    cfg = get_config("granite-8b").reduced()
+    d = str(tmp_path / "ck")
+    tcfg = TrainConfig(steps=6, seq=16, batch=2, ckpt_dir=d, ckpt_every=2, log_every=100)
+    with pytest.raises(RuntimeError):
+        fit(cfg, CTX, tcfg, hooks={"fail_at": 4})
+    assert ckpt.latest_step(d) == 4
+    out = fit(cfg, CTX, tcfg)  # resumes from step 4
+    assert out["step"] == 6 and not out["interrupted"]
+
+    ref = fit(cfg, CTX, TrainConfig(steps=6, seq=16, batch=2, ckpt_dir=None))
+    np.testing.assert_allclose(out["history"][-1], ref["history"][-1], rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# compression
+# --------------------------------------------------------------------------
+
+
+def test_int8_error_feedback_unbiased():
+    """With error feedback, the cumulative transmitted signal tracks the
+    cumulative true gradient (residual stays bounded)."""
+    key = jax.random.PRNGKey(0)
+    cfg = CompressionConfig(kind="int8")
+    g_true = {"w": jax.random.normal(key, (64,))}
+    err = init_error_state(g_true)
+    total_sent = jnp.zeros(64)
+    for i in range(50):
+        g = {"w": g_true["w"] * (1 + 0.01 * i)}
+        sent, err = compress_grads(g, err, cfg)
+        total_sent = total_sent + sent["w"]
+    resid = jnp.abs(err["w"])
+    assert float(jnp.max(resid)) < float(jnp.max(jnp.abs(g_true["w"]))) * 0.2
+
+
+def test_topk_sparsity():
+    cfg = CompressionConfig(kind="topk", topk_frac=0.1, error_feedback=False)
+    g = {"w": jnp.arange(100.0) + 1.0}  # tie-free magnitudes
+    sent, _ = compress_grads(g, init_error_state(g), cfg)
+    assert int(jnp.sum(sent["w"] != 0)) == 10
+
+
+def test_compressed_training_matches_uncompressed():
+    """int8+EF training loss within a few percent of exact after 40 steps."""
+    cfg = get_config("granite-8b").reduced()
+    t = TrainConfig(steps=25, seq=16, batch=2)
+    exact = fit(cfg, CTX, t)["history"]
+    # single-device: compression config is a no-op path-wise (no pod axis),
+    # so emulate by compressing grads in a custom hook-free run below
+    from repro.models import transformer as tfm
+    from repro.optim.adamw import AdamWConfig
+
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    comp = CompressionConfig(kind="int8")
+    errs = init_error_state(params)
+    from repro.data.pipeline import make_batch
+
+    hist = []
+    ocfg = AdamWConfig(total_steps=25)
+    for step in range(25):
+        batch = make_batch(cfg, 16, 2, step=step)
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: tfm.loss_fn(p, cfg, CTX, batch), has_aux=True
+        )(params)
+        grads, errs = compress_grads(grads, errs, comp)
+        params, opt, _ = adamw_update(params, grads, opt, ocfg)
+        hist.append(float(loss))
+    assert abs(hist[-1] - exact[-1]) / exact[-1] < 0.05
+
+
+# --------------------------------------------------------------------------
+# straggler monitor
+# --------------------------------------------------------------------------
+
+
+def test_straggler_detection():
+    mon = StepMonitor(StragglerPolicy(sigma=3.0, patience=2, action="remesh"))
+    for _ in range(20):
+        assert mon.record(1.0) is None
+    assert mon.is_straggler(3.0)
+    assert mon.record(3.0) is None  # patience 1
+    assert mon.record(3.0) == "remesh"  # escalates
+    assert len(mon.events) == 2
+
+
+# --------------------------------------------------------------------------
+# serving engine
+# --------------------------------------------------------------------------
+
+
+def test_serve_engine_greedy_consistency():
+    """Engine generation must equal naive forward-argmax re-encoding."""
+    from repro.models import transformer as tfm
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config("granite-8b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, max_seq=64)
+    prompts = np.arange(8, dtype=np.int32).reshape(1, 8) % cfg.vocab_size
+    out = eng.generate(prompts, max_new_tokens=4)
+    assert out.shape == (1, 4)
+
+    # oracle: repeatedly run the full forward and take argmax
+    toks = list(prompts[0])
+    for _ in range(4):
+        batch = {
+            "tokens": jnp.asarray([toks], jnp.int32),
+            "positions": jnp.arange(len(toks), dtype=jnp.int32),
+        }
+        logits, _ = tfm.forward(params, cfg, CTX, batch)
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    np.testing.assert_array_equal(out[0], np.asarray(toks[8:]))
