@@ -16,6 +16,13 @@ import os
 import sys
 import time
 
+try:
+    import repro  # noqa: F401
+except ImportError:  # running from a checkout without `pip install -e .`
+    sys.path.insert(
+        0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    )
+
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
@@ -334,15 +341,16 @@ def bench_measured_mesh_attention():
     code = r"""
 import time, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
-from repro.core.mesh_attention import MeshAttentionConfig, mesh_attention
+from repro.compat import shard_map
+from repro.core.dispatch import AttentionPlanConfig, attention_in_shard_map
 n=8
 mesh = jax.make_mesh((n,), ("sp",))
 B,S,H,D = 1, 8*256, 4, 32
 q,k,v = (jax.random.normal(kk,(B,S,H,D)) for kk in jax.random.split(jax.random.PRNGKey(0),3))
 for a in (1, 2, 4):
-    cfg = MeshAttentionConfig(axis_name="sp", n=n, a=a, causal=False, block_q=64, block_kv=64)
-    f = jax.jit(shard_map(lambda q,k,v: mesh_attention(q,k,v,cfg), mesh=mesh,
+    cfg = AttentionPlanConfig(backend="ring" if a == 1 else "mesh", axis_name="sp",
+        n=n, a=a, causal=False, block_q=64, block_kv=64)
+    f = jax.jit(shard_map(lambda q,k,v: attention_in_shard_map(q,k,v,cfg), mesh=mesh,
         in_specs=(P(None,"sp"),)*3, out_specs=P(None,"sp"), check_vma=False))
     f(q,k,v).block_until_ready()
     t0=time.perf_counter()

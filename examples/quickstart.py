@@ -11,22 +11,28 @@
 """
 
 import os
+import sys
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
+try:
+    import repro  # noqa: F401
+except ImportError:  # running from a checkout without `pip install -e .`
+    sys.path.insert(
+        0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    )
+
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax import shard_map
-from jax.sharding import PartitionSpec as P
 
 from repro.core.am import CommModel, table2
 from repro.core.autotune import tune
-from repro.core.mesh_attention import MeshAttentionConfig, mesh_attention
+from repro.core.dispatch import distributed_attention, plan_from_ctx
 from repro.core.schedule import greedy_forward_schedule
 from repro.core.simulator import HardwareModel
 from repro.core.tiling import TileLayout, stripe_permutation, unstripe_permutation
 from repro.kernels import ref
+from repro.parallel.context import ParallelCtx
 
 
 def main():
@@ -41,23 +47,16 @@ def main():
     for i, step in enumerate(sched.steps):
         print(f"  step {i}: comm={list(step.comms)} compute={list(step.compute)}")
 
-    # --- 2. distributed vs single-device ------------------------------------
+    # --- 2. distributed vs single-device (via the dispatch seam) ------------
     mesh = jax.make_mesh((n,), ("sp",))
     B, S, H, D = 2, n * 32, 4, 16
     q, k, v = (
         jax.random.normal(kk, (B, S, H, D))
         for kk in jax.random.split(jax.random.PRNGKey(0), 3)
     )
-    cfg = MeshAttentionConfig(axis_name="sp", n=n, a=a, causal=True, block_q=32, block_kv=32)
-    f = jax.jit(
-        shard_map(
-            lambda q, k, v: mesh_attention(q, k, v, cfg),
-            mesh=mesh,
-            in_specs=(P(None, "sp"),) * 3,
-            out_specs=P(None, "sp"),
-            check_vma=False,
-        )
-    )
+    ctx = ParallelCtx(mesh=mesh, sp_axis="sp", mesh_a=a, block_q=32, block_kv=32)
+    cfg = plan_from_ctx(ctx, causal=True)  # backend + tile as config
+    f = jax.jit(lambda q, k, v: distributed_attention(q, k, v, cfg=cfg, ctx=ctx))
     perm = stripe_permutation(S, n)
     inv = unstripe_permutation(S, n)
     o = f(q[:, perm], k[:, perm], v[:, perm])[:, inv]

@@ -9,6 +9,9 @@ Layers:
   mesh_attention— the distributed op (shard_map + ppermute sub-rings)
   ring_attention, ulysses — baselines
   decode_attention — distributed flash-decode over a striped KV cache
+  dispatch      — THE seam: backend registry + declarative AttentionPlanConfig
+                  + simulator-planned tiles with an on-disk plan cache; the
+                  only module the rest of the tree calls attention through
 """
 
 from repro.core.am import CommModel, mesh_volume, ring_volume, table2, ulysses_volume
@@ -20,6 +23,8 @@ from repro.core.schedule import (
     greedy_forward_schedule,
     naive_forward_schedule,
     ring_forward_schedule,
+    schedule_from_json,
+    schedule_to_json,
     validate_schedule,
 )
 from repro.core.simulator import CostModel, HardwareModel, SimResult, make_cost_model, simulate

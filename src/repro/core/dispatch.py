@@ -1,0 +1,544 @@
+"""Unified distributed-attention dispatch: "which attention" is a config.
+
+The paper's pitch is that Mesh-Attention *generalizes* the existing
+distributed-attention family — Ring-Attention is the (a=1, b=n) tile, DS-
+Ulysses the head-parallel alternative, flash-decode the inference analogue —
+so the repo routes every attention call through ONE seam:
+
+    distributed_attention(q, k, v, cfg=plan, ctx=ctx)
+
+``AttentionPlanConfig`` names a backend from the **registry** (``mesh``,
+``ring``, ``ulysses``, ``decode``, ``local-flash``) plus the tile/mask/block
+knobs; ``plan_from_ctx`` derives one from a ``ParallelCtx`` the way the model
+layers used to hand-wire it.  When ``autotune=True`` the (a, b) tile and the
+greedy comm/compute schedules come from the Figure-6 flow
+(``autotune.plan_for`` / ``autotune.tune`` over the event simulator), with an
+on-disk **plan cache** keyed by (shape, dtype, n, hardware profile) so
+repeated serve/train launches skip re-tuning.
+
+Layering: this module may import every backend under ``core/`` and the
+``compat`` shim; nothing outside ``core/`` (and tests) imports backends
+directly anymore.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import autotune
+from repro.core import schedule as S
+from repro.core.am import CommModel
+from repro.core.decode_attention import sharded_cache_decode, sharded_cache_update
+from repro.core.mesh_attention import MeshAttentionConfig, mesh_attention, mesh_attention_wire
+from repro.core.simulator import HardwareModel
+from repro.core.tiling import best_square_a
+from repro.core.ulysses import ulysses_attention
+from repro.kernels import ops
+from repro.kernels.ref import BAND_INF
+
+__all__ = [
+    "AttentionPlanConfig",
+    "Backend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "resolve_backend_name",
+    "distributed_attention",
+    "attention_in_shard_map",
+    "decode_attention_step",
+    "latent_wire_attention",
+    "plan_from_ctx",
+    "plan_schedules",
+    "plan_cache_dir",
+    "clear_plan_cache",
+    "HW_PROFILES",
+]
+
+
+# --------------------------------------------------------------------------
+# plan config
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionPlanConfig:
+    """Declarative selection + configuration of a distributed-attention call.
+
+    ``backend="auto"`` resolves to ``local-flash`` when the sequence axis is
+    unsharded (n <= 1) and to ``mesh`` otherwise.  ``a=None`` on the mesh
+    backend means: autotune via the simulator when ``autotune`` is set,
+    otherwise the sqrt-n heuristic (``best_square_a``).
+    """
+
+    backend: str = "auto"
+    axis_name: Optional[str] = None
+    n: int = 1
+    a: Optional[int] = None
+    causal: bool = False
+    window: Optional[int] = None
+    layout: str = "striped"  # striped (§3.7) | contiguous (SSM/hybrid, Ulysses)
+    scale: Optional[float] = None
+    block_q: int = 128
+    block_kv: int = 128
+    bwd_wire: str = "qdod"
+    allow_concurrent_rings: bool = False
+    # --- Figure-6 autotuning (simulator-planned tile + schedules) ---
+    autotune: bool = False
+    with_backward: bool = True
+    hw_profile: str = "default"
+    plan_cache_dir: Optional[str] = None  # None -> $REPRO_PLAN_CACHE_DIR or ~/.cache
+
+    def resolved_backend(self) -> str:
+        return resolve_backend_name(self)
+
+
+def plan_from_ctx(
+    ctx,
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    layout: str = "striped",
+    scale: Optional[float] = None,
+    backend: Optional[str] = None,
+) -> AttentionPlanConfig:
+    """Derive the attention plan a ``ParallelCtx`` implies (the knobs the
+    model layers used to wire into ``MeshAttentionConfig`` by hand)."""
+    impl = backend or ctx.attn_impl
+    return AttentionPlanConfig(
+        backend=impl,
+        axis_name=ctx.sp_axis,
+        n=ctx.sp_size,
+        a=1 if impl == "ring" else ctx.mesh_a,
+        causal=causal,
+        window=window,
+        layout=layout,
+        scale=scale,
+        block_q=ctx.block_q,
+        block_kv=ctx.block_kv,
+        bwd_wire=ctx.bwd_wire,
+        allow_concurrent_rings=ctx.allow_concurrent_rings,
+        autotune=getattr(ctx, "attn_autotune", False),
+        plan_cache_dir=getattr(ctx, "plan_cache_dir", None),
+    )
+
+
+# --------------------------------------------------------------------------
+# backend registry
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """A registered distributed-attention implementation.
+
+    ``apply`` runs INSIDE ``shard_map`` on device-local chunks (exactly like
+    the raw ops in ``core/``); ``step`` is the incremental-decode entry for
+    cache-based backends.  Either may be None when the mode is unsupported.
+    """
+
+    name: str
+    apply: Optional[Callable] = None  # (q, k, v, cfg) -> o, local chunks
+    step: Optional[Callable] = None  # decode step, see decode_attention_step
+    description: str = ""
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown attention backend {name!r}; registered backends: "
+            f"{', '.join(available_backends())}"
+        ) from None
+
+
+def available_backends() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def resolve_backend_name(cfg: AttentionPlanConfig) -> str:
+    if cfg.backend == "auto":
+        return "local-flash" if cfg.n <= 1 else "mesh"
+    get_backend(cfg.backend)  # raise early on unknown names
+    return cfg.backend
+
+
+# --------------------------------------------------------------------------
+# simulator-planned schedules + on-disk plan cache
+# --------------------------------------------------------------------------
+
+HW_PROFILES: Dict[str, HardwareModel] = {
+    "default": HardwareModel(),
+    "tpu_v5e": HardwareModel(),
+    # the paper's calibrated GPU cluster (also used by benchmarks/common.py)
+    "paper_a100": HardwareModel(
+        peak_flops=312e12, hbm_bw=2039e9, link_bw=25e9, attn_efficiency=0.45
+    ),
+}
+
+_MEM_CACHE: Dict[str, Tuple[int, S.Schedule, Optional[S.Schedule]]] = {}
+
+
+def plan_cache_dir(cfg: Optional[AttentionPlanConfig] = None) -> str:
+    if cfg is not None and cfg.plan_cache_dir:
+        return cfg.plan_cache_dir
+    env = os.environ.get("REPRO_PLAN_CACHE_DIR")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro", "attention-plans")
+
+
+def clear_plan_cache(cfg: Optional[AttentionPlanConfig] = None) -> None:
+    _MEM_CACHE.clear()
+    d = plan_cache_dir(cfg)
+    if os.path.isdir(d):
+        for fn in os.listdir(d):
+            if fn.endswith(".json"):
+                os.unlink(os.path.join(d, fn))
+
+
+def _plan_key(cfg: AttentionPlanConfig, comm: CommModel, hw: HardwareModel) -> Tuple[str, dict]:
+    """Cache key over everything the simulated plan depends on: the call's
+    shape/dtype geometry, device count, tile request, and hardware profile."""
+    desc = {
+        "v": 1,
+        "n": comm.n,
+        "a": cfg.a,
+        "seq": comm.seq,
+        "hidden": comm.hidden,
+        "kv_hidden": comm.kvh,
+        "bytes_per_elem": comm.bytes_per_elem,
+        "batch": comm.batch,
+        "causal": cfg.causal,
+        "with_backward": cfg.with_backward,
+        "allow_concurrent_rings": cfg.allow_concurrent_rings,
+        "hw_profile": cfg.hw_profile,
+        "hw": dataclasses.asdict(hw),
+    }
+    blob = json.dumps(desc, sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest(), desc
+
+
+def plan_schedules(
+    cfg: AttentionPlanConfig, comm: CommModel
+) -> Tuple[int, S.Schedule, Optional[S.Schedule]]:
+    """Figure-6 planning through the cache: returns (a, fwd, bwd).
+
+    ``cfg.a`` fixed -> ``autotune.plan_for`` (a=1 degenerates to the ring
+    backend's schedule shape); ``cfg.a`` None -> ``autotune.tune`` argmin over
+    every factorization of n.  Results are memoized in-process and persisted
+    as JSON under :func:`plan_cache_dir` so later launches skip the simulator.
+    """
+    hw = HW_PROFILES.get(cfg.hw_profile)
+    if hw is None:
+        raise ValueError(
+            f"unknown hw_profile {cfg.hw_profile!r}; known: {sorted(HW_PROFILES)}"
+        )
+    key, desc = _plan_key(cfg, comm, hw)
+    if key in _MEM_CACHE:
+        return _MEM_CACHE[key]
+
+    cache_dir = plan_cache_dir(cfg)
+    path = os.path.join(cache_dir, f"{key}.json")
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            fwd = S.schedule_from_json(payload["fwd"])
+            bwd = S.schedule_from_json(payload["bwd"]) if payload.get("bwd") else None
+            out = (int(payload["a"]), fwd, bwd)
+            _MEM_CACHE[key] = out
+            return out
+        except (KeyError, TypeError, ValueError, json.JSONDecodeError):
+            pass  # corrupt entry: fall through and re-plan
+
+    kw = dict(
+        causal=cfg.causal,
+        with_backward=cfg.with_backward,
+        allow_concurrent_rings=cfg.allow_concurrent_rings,
+    )
+    if cfg.a is not None:
+        plan = autotune.plan_for(comm, cfg.a, hw, **kw)
+    else:
+        plan = autotune.tune(comm, hw, **kw)
+
+    payload = {
+        "key": desc,
+        "a": plan.a,
+        "b": plan.b,
+        "fwd": S.schedule_to_json(plan.fwd),
+        "bwd": S.schedule_to_json(plan.bwd) if plan.bwd else None,
+        "sim": {"total_s": plan.total, "comm_bytes": plan.comm_bytes},
+    }
+    os.makedirs(cache_dir, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
+    with os.fdopen(fd, "w") as f:
+        json.dump(payload, f, indent=1)
+    os.replace(tmp, path)  # atomic: concurrent launchers race benignly
+
+    out = (plan.a, plan.fwd, plan.bwd)
+    _MEM_CACHE[key] = out
+    return out
+
+
+def _comm_model_for(cfg: AttentionPlanConfig, q, k) -> CommModel:
+    """CommModel from the call's global-logical shapes (q: [B, S, H, D])."""
+    return CommModel(
+        seq=int(q.shape[1]),
+        hidden=int(q.shape[2] * q.shape[3]),
+        n=cfg.n,
+        kv_hidden=int(k.shape[2] * k.shape[3]),
+        bytes_per_elem=int(jnp.dtype(q.dtype).itemsize),
+        batch=int(q.shape[0]),
+    )
+
+
+# --------------------------------------------------------------------------
+# backend implementations (run inside shard_map)
+# --------------------------------------------------------------------------
+
+
+def _mesh_cfg(
+    cfg: AttentionPlanConfig,
+    *,
+    a: int,
+    fwd: Optional[S.Schedule] = None,
+    bwd: Optional[S.Schedule] = None,
+) -> MeshAttentionConfig:
+    return MeshAttentionConfig(
+        axis_name=cfg.axis_name,
+        n=cfg.n,
+        a=a,
+        causal=cfg.causal,
+        window=cfg.window,
+        layout=cfg.layout,
+        scale=cfg.scale,
+        fwd_schedule=fwd,
+        bwd_schedule=bwd,
+        bwd_wire=cfg.bwd_wire,
+        block_q=cfg.block_q,
+        block_kv=cfg.block_kv,
+        allow_concurrent_rings=cfg.allow_concurrent_rings,
+    )
+
+
+def _mesh_apply(q, k, v, cfg: AttentionPlanConfig):
+    if cfg.autotune and cfg.n > 1:
+        # inside shard_map q is the LOCAL chunk, so the CommModel geometry
+        # would be wrong by a factor of n; distributed_attention resolves
+        # autotuned plans from the global view before entering shard_map
+        raise ValueError(
+            "autotuned mesh plans must be resolved outside shard_map "
+            "(use distributed_attention, or bake schedules via plan_schedules)"
+        )
+    a = cfg.a if cfg.a is not None else best_square_a(cfg.n)
+    return mesh_attention(q, k, v, _mesh_cfg(cfg, a=a))
+
+
+def _ring_apply(q, k, v, cfg: AttentionPlanConfig):
+    """Ring-Attention as the (a=1, b=n) special case — one-block-per-step
+    ring schedule, identical kernels and ring machinery (paper §2.2)."""
+    fwd = S.ring_forward_schedule(cfg.n) if cfg.n > 1 else None
+    return mesh_attention(q, k, v, _mesh_cfg(cfg, a=1, fwd=fwd))
+
+
+def _ulysses_apply(q, k, v, cfg: AttentionPlanConfig):
+    if cfg.layout != "contiguous":
+        raise ValueError("Ulysses requires the contiguous layout")
+    return ulysses_attention(
+        q, k, v, cfg.axis_name, cfg.n,
+        causal=cfg.causal, window=cfg.window, scale=cfg.scale,
+    )
+
+
+def _local_flash_apply(q, k, v, cfg: AttentionPlanConfig):
+    return ops.flash_attention(
+        q, k, v, causal=cfg.causal, window=cfg.window, scale=cfg.scale
+    )
+
+
+def _decode_step_local(q, k_new, v_new, k_cache, v_cache, pos, cfg: AttentionPlanConfig):
+    """One decode tick over the local cache slice (inside shard_map)."""
+    k_cache, v_cache = sharded_cache_update(
+        k_cache, v_cache, k_new, v_new, pos, cfg.axis_name, cfg.n, layout=cfg.layout
+    )
+    o = sharded_cache_decode(
+        q, k_cache, v_cache, pos, cfg.axis_name, cfg.n,
+        layout=cfg.layout, window=cfg.window, scale=cfg.scale,
+    )
+    return o, k_cache, v_cache
+
+
+def _decode_apply(q, k, v, cfg: AttentionPlanConfig):
+    raise ValueError(
+        "the 'decode' backend is step-wise (sequence-sharded KV cache); "
+        "call repro.core.dispatch.decode_attention_step instead of "
+        "distributed_attention"
+    )
+
+
+register_backend(Backend(
+    "mesh", apply=_mesh_apply,
+    description="Mesh-Attention (a x b tile; autotunable via the simulator)",
+))
+register_backend(Backend(
+    "ring", apply=_ring_apply,
+    description="Ring-Attention baseline = mesh with a=1 and the ring schedule",
+))
+register_backend(Backend(
+    "ulysses", apply=_ulysses_apply,
+    description="DeepSpeed-Ulysses head-parallel (capped at the KV-head count)",
+))
+register_backend(Backend(
+    "local-flash", apply=_local_flash_apply,
+    description="single-device Pallas/reference flash attention (n == 1 fallback)",
+))
+register_backend(Backend(
+    "decode", apply=_decode_apply, step=_decode_step_local,
+    description="striped/contiguous sequence-sharded KV-cache flash-decode",
+))
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+
+
+def attention_in_shard_map(q, k, v, cfg: AttentionPlanConfig):
+    """Registry-dispatched local op for callers already inside shard_map."""
+    return get_backend(resolve_backend_name(cfg)).apply(q, k, v, cfg)
+
+
+def _require_ctx(ctx, cfg: AttentionPlanConfig):
+    if ctx is None or ctx.mesh is None:
+        raise ValueError(
+            f"backend {cfg.backend!r} with n={cfg.n} needs a ParallelCtx "
+            "carrying a mesh; pass ctx= or use n=1 / backend='local-flash'"
+        )
+
+
+def distributed_attention(q, k, v, *, cfg: AttentionPlanConfig, ctx=None):
+    """THE attention seam: every workload (train, prefill, benchmarks, tests)
+    calls this with a declarative plan.
+
+    q: [B, S, H, D]; k, v: [B, S, Hkv, D] — global-logical views under pjit.
+    Causal striped-layout inputs must already be in stripe order (§3.7, the
+    data pipeline / serve engine handle the permutation).  ``ctx`` supplies
+    the mesh + batch sharding for the ``shard_map`` wrapper; it is optional
+    when the plan resolves to the local backend.
+    """
+    name = resolve_backend_name(cfg)
+    if name == "local-flash" or cfg.n <= 1:
+        return _local_flash_apply(q, k, v, cfg)
+
+    backend = get_backend(name)
+    if backend.apply is None:
+        raise ValueError(f"backend {name!r} does not support the batched-attention mode")
+    _require_ctx(ctx, cfg)
+
+    if name == "mesh" and cfg.autotune:
+        # plan at trace time (pure python) so the schedule is baked into the
+        # hashable MeshAttentionConfig before shard_map tracing begins
+        a, fwd, bwd = plan_schedules(cfg, _comm_model_for(cfg, q, k))
+        macfg = _mesh_cfg(cfg, a=a, fwd=fwd, bwd=bwd)
+        local = lambda q, k, v: mesh_attention(q, k, v, macfg)
+    else:
+        local = lambda q, k, v: backend.apply(q, k, v, cfg)
+
+    spec = P(ctx.eff_batch_spec(q.shape[0]), cfg.axis_name, None, None)
+    f = shard_map(
+        local,
+        mesh=ctx.shard_map_mesh(), in_specs=(spec, spec, spec), out_specs=spec,
+        check_vma=False,
+    )
+    return f(q, k, v)
+
+
+def decode_attention_step(
+    q,  # [B, 1, H, D]
+    k_new,  # [B, 1, Hkv, D]
+    v_new,
+    k_cache,  # [B, cap(/n), Hkv, D]; sharded over the sequence axis
+    v_cache,
+    pos,  # int32 scalar
+    ctx,
+    *,
+    window: Optional[int] = None,
+    layout: str = "striped",
+    scale: Optional[float] = None,
+):
+    """One token of cache-based decode through the 'decode' backend.
+
+    Returns (o, new_k_cache, new_v_cache).  n == 1 runs the dense local
+    update + flash-decode; otherwise the sequence-sharded cache path.
+    """
+    n = ctx.sp_size
+    if n == 1:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k_new.astype(k_cache.dtype), pos, axis=1
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v_new.astype(v_cache.dtype), pos, axis=1
+        )
+        hi = (window - 1) if window else BAND_INF
+        band = jnp.stack([jnp.asarray(pos, jnp.int32), jnp.int32(0), jnp.int32(0), jnp.int32(hi)])
+        o, _ = ops.block_attention(q, k_cache, v_cache, band, scale=scale)
+        return o.astype(q.dtype), k_cache, v_cache
+
+    cfg = AttentionPlanConfig(
+        backend="decode", axis_name=ctx.sp_axis, n=n,
+        window=window, layout=layout, scale=scale,
+    )
+    step = get_backend("decode").step
+
+    bs = ctx.eff_batch_spec(q.shape[0])
+    rep = P(bs, None, None, None)
+    cache_spec = P(bs, ctx.sp_axis, None, None)
+
+    f = shard_map(
+        lambda q, kn, vn, kc, vc, pos: step(q, kn, vn, kc, vc, pos, cfg),
+        mesh=ctx.shard_map_mesh(),
+        in_specs=(rep, rep, rep, cache_spec, cache_spec, P()),
+        out_specs=(rep, cache_spec, cache_spec),
+        check_vma=False,
+    )
+    return f(q, k_new, v_new, k_cache, v_cache, jnp.asarray(pos, jnp.int32))
+
+
+def latent_wire_attention(q, wire, wire_params, kv_transform, *, cfg: AttentionPlanConfig, ctx):
+    """Mesh-Attention with a compressed KV wire (beyond-paper §Perf): the
+    opaque ``wire`` chunk circulates on the KV ring and ``kv_transform(chunk,
+    wire_params) -> (k, v)`` expands it per-head at first use (e.g. MLA's
+    latent).  Forward-only; ``wire_params`` stays replicated."""
+    _require_ctx(ctx, cfg)
+    a = cfg.a if cfg.a is not None else best_square_a(cfg.n)
+    macfg = _mesh_cfg(cfg, a=a)
+
+    def inner(q, wire, wp):
+        return mesh_attention_wire(q, wire, macfg, lambda chunk: kv_transform(chunk, wp))
+
+    spec = P(ctx.eff_batch_spec(q.shape[0]), cfg.axis_name, None, None)
+    f = shard_map(
+        inner,
+        mesh=ctx.shard_map_mesh(), in_specs=(spec, spec, P()), out_specs=spec,
+        check_vma=False,
+    )
+    return f(q, wire, wire_params)

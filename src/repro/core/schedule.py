@@ -37,6 +37,8 @@ __all__ = [
     "naive_forward_schedule",
     "ring_forward_schedule",
     "validate_schedule",
+    "schedule_to_json",
+    "schedule_from_json",
 ]
 
 Block = Tuple[int, int]
@@ -394,6 +396,31 @@ def greedy_backward_schedule(
         steps.append(Step((), chooser.pop(1)))
 
     return Schedule(a, b, "bwd", tuple(steps))
+
+
+# --------------------------------------------------------------------------
+# (de)serialization — the autotuner's on-disk plan cache stores schedules
+# --------------------------------------------------------------------------
+
+
+def schedule_to_json(s: Schedule) -> dict:
+    return {
+        "a": s.a,
+        "b": s.b,
+        "direction": s.direction,
+        "steps": [
+            {"comms": list(st.comms), "compute": [list(blk) for blk in st.compute]}
+            for st in s.steps
+        ],
+    }
+
+
+def schedule_from_json(d: dict) -> Schedule:
+    steps = tuple(
+        Step(tuple(st["comms"]), tuple((int(u), int(v)) for u, v in st["compute"]))
+        for st in d["steps"]
+    )
+    return Schedule(int(d["a"]), int(d["b"]), d["direction"], steps)
 
 
 # --------------------------------------------------------------------------

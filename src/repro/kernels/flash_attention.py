@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import vma_struct
 from repro.kernels.ref import BAND_INF, NEG_INF
 
 DEFAULT_BLOCK_Q = 128
@@ -43,8 +44,7 @@ DEFAULT_BLOCK_KV = 128
 def _struct(shape, dtype, *like):
     """ShapeDtypeStruct whose varying-manual-axes set is the union of the
     inputs' — required for pallas_call outputs under shard_map(check_vma)."""
-    vma = frozenset().union(*(getattr(jax.typeof(x), "vma", frozenset()) for x in like))
-    return jax.ShapeDtypeStruct(shape, dtype, vma=vma if vma else None)
+    return vma_struct(shape, dtype, *like)
 
 
 def _block_visible(band_ref, iq, ik, bq, bk, stride_q, stride_kv):

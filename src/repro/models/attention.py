@@ -1,30 +1,21 @@
-"""Attention layer: GQA/MHA/MLA projections + the distributed attention core.
+"""Attention layer: GQA/MHA/MLA projections over the unified dispatch seam.
 
 The projection math runs under pjit (GSPMD shards the weights); the attention
-itself dispatches on the parallel context:
-
-  * no sequence parallelism  -> ops.flash_attention (Pallas on TPU)
-  * train / prefill with SP  -> shard_map(Mesh-Attention | Ring | Ulysses)
-    over ctx.sp_axis — the paper's op, tile shape from ctx.mesh_a
-  * decode with SP           -> striped-cache flash-decode (core.decode_attention)
+itself goes through ``repro.core.dispatch`` — the backend (mesh | ring |
+ulysses | decode | local-flash) is a registry lookup driven by the
+``ParallelCtx``, and the tile/schedule may come from the autotuner's plan
+cache.  No backend module is imported here.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core.decode_attention import sharded_cache_decode, sharded_cache_update
-from repro.core.mesh_attention import MeshAttentionConfig, mesh_attention
-from repro.core.ulysses import ulysses_attention
-from repro.kernels import ops
-from repro.kernels.ref import BAND_INF
+from repro.core import dispatch
 from repro.models.layers import dense_init, rms_norm, rope
 from repro.parallel.context import ParallelCtx
 
@@ -39,7 +30,7 @@ __all__ = [
 
 
 # --------------------------------------------------------------------------
-# distributed dispatch
+# distributed dispatch (thin adapters over repro.core.dispatch)
 # --------------------------------------------------------------------------
 
 
@@ -53,33 +44,8 @@ def distributed_attention(
     window: Optional[int] = None,
     layout: str = "striped",
 ) -> jnp.ndarray:
-    n = ctx.sp_size
-    if n == 1:
-        return ops.flash_attention(q, k, v, causal=causal, window=window)
-    spec = P(ctx.eff_batch_spec(q.shape[0]), ctx.sp_axis, None, None)
-    if ctx.attn_impl == "ulysses":
-        if layout != "contiguous":
-            raise ValueError("Ulysses requires the contiguous layout")
-        f = shard_map(
-            functools.partial(
-                ulysses_attention, axis_name=ctx.sp_axis, n=n, causal=causal, window=window
-            ),
-            mesh=ctx.shard_map_mesh(), in_specs=(spec, spec, spec), out_specs=spec,
-            check_vma=False,
-        )
-        return f(q, k, v)
-    a = 1 if ctx.attn_impl == "ring" else ctx.tile_a()
-    macfg = MeshAttentionConfig(
-        axis_name=ctx.sp_axis, n=n, a=a, causal=causal, window=window,
-        layout=layout, bwd_wire=ctx.bwd_wire, block_q=ctx.block_q,
-        block_kv=ctx.block_kv, allow_concurrent_rings=ctx.allow_concurrent_rings,
-    )
-    f = shard_map(
-        functools.partial(mesh_attention, cfg=macfg),
-        mesh=ctx.shard_map_mesh(), in_specs=(spec, spec, spec), out_specs=spec,
-        check_vma=False,
-    )
-    return f(q, k, v)
+    cfg = dispatch.plan_from_ctx(ctx, causal=causal, window=window, layout=layout)
+    return dispatch.distributed_attention(q, k, v, cfg=cfg, ctx=ctx)
 
 
 def decode_attention_step(
@@ -96,40 +62,10 @@ def decode_attention_step(
     scale: Optional[float] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns (o, new_k_cache, new_v_cache)."""
-    n = ctx.sp_size
-    if n == 1:
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            k_cache, k_new.astype(k_cache.dtype), pos, axis=1
-        )
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            v_cache, v_new.astype(v_cache.dtype), pos, axis=1
-        )
-        hi = (window - 1) if window else BAND_INF
-        band = jnp.stack([jnp.asarray(pos, jnp.int32), jnp.int32(0), jnp.int32(0), jnp.int32(hi)])
-        o, _ = ops.block_attention(q, k_cache, v_cache, band, scale=scale)
-        return o.astype(q.dtype), k_cache, v_cache
-
-    bs = ctx.eff_batch_spec(q.shape[0])
-    rep = P(bs, None, None, None)
-    cache_spec = P(bs, ctx.sp_axis, None, None)
-
-    def _step(q, k_new, v_new, k_cache, v_cache, pos):
-        k_cache, v_cache = sharded_cache_update(
-            k_cache, v_cache, k_new, v_new, pos, ctx.sp_axis, n, layout=layout
-        )
-        o = sharded_cache_decode(
-            q, k_cache, v_cache, pos, ctx.sp_axis, n,
-            layout=layout, window=window, scale=scale,
-        )
-        return o, k_cache, v_cache
-
-    f = shard_map(
-        _step, mesh=ctx.shard_map_mesh(),
-        in_specs=(rep, rep, rep, cache_spec, cache_spec, P()),
-        out_specs=(rep, cache_spec, cache_spec),
-        check_vma=False,
+    return dispatch.decode_attention_step(
+        q, k_new, v_new, k_cache, v_cache, pos, ctx,
+        window=window, layout=layout, scale=scale,
     )
-    return f(q, k_new, v_new, k_cache, v_cache, jnp.asarray(pos, jnp.int32))
 
 
 # --------------------------------------------------------------------------
@@ -256,27 +192,13 @@ def _latent_wire_attention(q, lat, wkv_b, cfg: ModelConfig, ctx: ParallelCtx, *,
     """MLA x Mesh-Attention with the compressed latent on the KV ring
     (beyond-paper; forward-only — see EXPERIMENTS.md §Perf): wire bytes per
     KV hop drop from 2·H·qk to kvr+rope (MiniCPM3: 15360 -> 288 per token)."""
-    from repro.core.mesh_attention import mesh_attention_wire
-
-    n = ctx.sp_size
-    spec = P(ctx.eff_batch_spec(q.shape[0]), ctx.sp_axis, None, None)
-    macfg = MeshAttentionConfig(
-        axis_name=ctx.sp_axis, n=n, a=ctx.tile_a(), causal=causal,
-        layout=cfg.causal_layout, block_q=ctx.block_q, block_kv=ctx.block_kv,
-        allow_concurrent_rings=ctx.allow_concurrent_rings,
+    plan = dispatch.plan_from_ctx(
+        ctx, causal=causal, layout=cfg.causal_layout, backend="mesh",
         scale=(cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim) ** -0.5,
     )
-
-    def inner(q, lat, wb):
-        return mesh_attention_wire(
-            q, lat, macfg, lambda chunk: _mla_expand(chunk, wb, cfg)
-        )
-
-    f = shard_map(
-        inner, mesh=ctx.shard_map_mesh(),
-        in_specs=(spec, spec, P()), out_specs=spec, check_vma=False,
+    return dispatch.latent_wire_attention(
+        q, lat, wkv_b, lambda chunk, wb: _mla_expand(chunk, wb, cfg), cfg=plan, ctx=ctx
     )
-    return f(q, lat, wkv_b)
 
 
 def attention_block(

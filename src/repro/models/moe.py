@@ -180,7 +180,9 @@ def _moe_ep_manual(x, p, cfg: ModelConfig, ctx: ParallelCtx):
     the production EP path is the segmented pure-GSPMD variant above.
     """
     import jax
-    from jax import lax, shard_map
+    from jax import lax
+
+    from repro.compat import shard_map
 
     m = cfg.moe
     act = _ACT[cfg.mlp_act]

@@ -15,6 +15,8 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+
 __all__ = ["ParallelCtx"]
 
 
@@ -24,12 +26,15 @@ class ParallelCtx:
     batch_axes: Tuple[str, ...] = ()  # e.g. ("pod", "data")
     sp_axis: Optional[str] = None  # sequence-parallel axis (e.g. "model")
     # --- Mesh-Attention configuration (the paper's knobs) ---
-    attn_impl: str = "mesh"  # mesh | ring | ulysses
+    attn_impl: str = "mesh"  # any registered dispatch backend (mesh | ring | ulysses | ...)
     mesh_a: Optional[int] = None  # tile height; None -> divisor closest to sqrt(n)
     allow_concurrent_rings: bool = False
     bwd_wire: str = "qdod"
     block_q: int = 128
     block_kv: int = 128
+    attn_autotune: bool = False  # pick (a, b) + schedules via the simulator
+    # (Figure 6) through the on-disk plan cache instead of the sqrt-n heuristic
+    plan_cache_dir: Optional[str] = None  # None -> dispatch's default cache dir
     # --- other knobs ---
     remat: bool = True
     unroll_layers: bool = False  # python-loop the layer stack (dry-run cost
@@ -99,7 +104,7 @@ class ParallelCtx:
         happens under a mesh context (e.g. inside a partial-manual
         shard_map over the pod axis), the AMBIENT abstract mesh must be
         used — its axis_types carry which axes are already manual."""
-        am = jax.sharding.get_abstract_mesh()
+        am = compat.get_abstract_mesh()
         if am is not None and am.shape_tuple:
             return am
         return self.mesh

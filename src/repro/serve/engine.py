@@ -16,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import dispatch
+from repro.core.am import CommModel
 from repro.data.pipeline import make_batch
 from repro.models import transformer as tfm
 from repro.parallel.context import ParallelCtx
@@ -38,6 +40,11 @@ class ServeEngine:
         self.params = params
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
+        # the declarative attention plan this engine serves under (the
+        # prefill path resolves its backend/tile through this via dispatch)
+        self.attn_plan = dispatch.plan_from_ctx(
+            self.ctx, causal=True, layout=cfg.causal_layout
+        )
         self._prefill = jax.jit(
             lambda p, b, c: tfm.prefill(p, cfg, self.ctx, b, c)
         )
@@ -65,6 +72,26 @@ class ServeEngine:
         striped here (the serving analogue of the data pipeline's §3.7
         permutation)."""
         B, S0 = prompts.shape
+        if self.attn_plan.autotune and self.ctx.sp_size > 1:
+            # resolve the (a, b) tile + schedules for this prefill geometry
+            # through the on-disk plan cache BEFORE tracing, so repeated
+            # serve launches skip the simulator entirely.  The key must match
+            # what dispatch computes at trace time: activations inherit the
+            # PARAM dtype (q flows from the embedding), not the cache dtype.
+            # (with_backward stays at the plan default for the same reason —
+            # a fwd-only tuning mode needs a serve-aware ParallelCtx first.)
+            act_dtype = jax.tree.leaves(self.params)[0].dtype
+            dispatch.plan_schedules(
+                self.attn_plan,
+                CommModel(
+                    seq=S0,
+                    hidden=self.cfg.num_heads * self.cfg.hd,
+                    n=self.ctx.sp_size,
+                    kv_hidden=self.cfg.num_kv_heads * self.cfg.hd,
+                    bytes_per_elem=jnp.dtype(act_dtype).itemsize,
+                    batch=B,
+                ),
+            )
         cache = tfm.init_cache(self.cfg, B, self.max_seq, dtype=self.cache_dtype, ctx=self.ctx)
         tokens = jnp.asarray(prompts, jnp.int32)
         n = self.ctx.sp_size

@@ -44,7 +44,7 @@ def check_mesh_attention_forward():
     import jax
     import jax.numpy as jnp
     from jax.sharding import Mesh, PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
 
     from repro.core.mesh_attention import MeshAttentionConfig, mesh_attention
     from repro.core.tiling import factorizations, stripe_permutation, unstripe_permutation
@@ -94,7 +94,7 @@ def check_mesh_attention_backward():
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
 
     from repro.core.mesh_attention import MeshAttentionConfig, mesh_attention
     from repro.core.tiling import factorizations, stripe_permutation, unstripe_permutation
@@ -158,7 +158,7 @@ def check_mesh_attention_pallas_interpret():
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
 
     from repro.core.mesh_attention import MeshAttentionConfig, mesh_attention
     from repro.core.tiling import stripe_permutation, unstripe_permutation
@@ -220,7 +220,7 @@ def check_ring_equals_mesh_a1():
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
 
     from repro.core.mesh_attention import MeshAttentionConfig, mesh_attention
     from repro.core.ring_attention import ring_config
@@ -251,7 +251,7 @@ def check_ulysses():
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
 
     from repro.core.ulysses import ulysses_attention
     from repro.kernels import ref
@@ -291,7 +291,7 @@ def check_striped_decode():
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
 
     from repro.core.decode_attention import striped_cache_decode, striped_cache_update
     from repro.kernels import ref
@@ -339,6 +339,101 @@ def check_striped_decode():
         max_err = max(max_err, float(jnp.max(jnp.abs(o - o_ref))))
     assert max_err < 2e-5, max_err
     return {"max_err": max_err}
+
+
+def check_dispatch_seam():
+    """The unified dispatch entry (registry + autotuned plan cache) ==
+    single-device oracle for every backend it can route on this mesh."""
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.dispatch import (
+        AttentionPlanConfig,
+        distributed_attention,
+        plan_from_ctx,
+        plan_schedules,
+    )
+    from repro.core.am import CommModel
+    from repro.core.tiling import stripe_permutation, unstripe_permutation
+    from repro.kernels import ref
+    from repro.parallel.context import ParallelCtx
+
+    n = 8
+    mesh = jax.make_mesh((n,), ("sp",))
+    B, S, H, Hkv, D = 2, n * 16, 4, 2, 16
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(21), 3)
+    q = jax.random.normal(kq, (B, S, H, D))
+    k = jax.random.normal(kk, (B, S, Hkv, D))
+    v = jax.random.normal(kv, (B, S, Hkv, D))
+    results = {}
+
+    with tempfile.TemporaryDirectory() as cache_dir:
+        base = ParallelCtx(mesh=mesh, sp_axis="sp", block_q=16, block_kv=16,
+                           plan_cache_dir=cache_dir)
+        cases = [
+            ("mesh", dict(attn_impl="mesh"), True, "striped"),
+            ("mesh_autotuned", dict(attn_impl="mesh", attn_autotune=True), True, "striped"),
+            ("ring", dict(attn_impl="ring"), True, "striped"),
+            # ulysses runs below on its own 2-device mesh (n=8 > Hkv=2 here)
+        ]
+        import dataclasses
+
+        for name, over, causal, layout in cases:
+            ctx = dataclasses.replace(base, **over)
+            cfg = plan_from_ctx(ctx, causal=causal, layout=layout)
+            f = jax.jit(lambda q, k, v, cfg=cfg, ctx=ctx: distributed_attention(
+                q, k, v, cfg=cfg, ctx=ctx))
+            if causal and layout == "striped":
+                perm = stripe_permutation(S, n)
+                inv = unstripe_permutation(S, n)
+                o = f(q[:, perm], k[:, perm], v[:, perm])[:, inv]
+                band = ref.causal_band()
+            else:
+                o, band = f(q, k, v), None
+            o_ref, _ = ref.attention_ref(q, k, v, band=band)
+            err = float(jnp.max(jnp.abs(o - o_ref)))
+            results[name] = err
+            assert err < 2e-5, (name, err)
+
+        # ulysses routes when the head cap allows (2 devices over Hkv=2)
+        mesh2 = jax.make_mesh((2,), ("sp",))
+        ctx2 = ParallelCtx(mesh=mesh2, sp_axis="sp", attn_impl="ulysses",
+                           block_q=16, block_kv=16)
+        cfg2 = plan_from_ctx(ctx2, causal=False, layout="contiguous")
+        o = jax.jit(lambda q, k, v: distributed_attention(q, k, v, cfg=cfg2, ctx=ctx2))(q, k, v)
+        o_ref, _ = ref.attention_ref(q, k, v)
+        err = float(jnp.max(jnp.abs(o - o_ref)))
+        results["ulysses"] = err
+        assert err < 2e-5, ("ulysses", err)
+
+        # the autotuned case must have persisted its plan; a fresh in-memory
+        # state must round-trip it from disk
+        import os
+
+        from repro.core import dispatch as dsp
+
+        plans = [fn for fn in os.listdir(cache_dir) if fn.endswith(".json")]
+        assert plans, "autotuned run left no on-disk plan"
+        dsp._MEM_CACHE.clear()
+        cfg_at = plan_from_ctx(
+            dataclasses.replace(base, attn_impl="mesh", attn_autotune=True),
+            causal=True, layout="striped",
+        )
+        comm = CommModel(seq=S, hidden=H * D, n=n, kv_hidden=Hkv * D,
+                         bytes_per_elem=4, batch=B)
+        a, fwd, bwd = plan_schedules(cfg_at, comm)
+        assert fwd.n == n and (bwd is None or bwd.n == n)
+        results["plan_cache_files"] = len(plans)
+
+    # unknown backend must fail loudly
+    try:
+        distributed_attention(q, k, v, cfg=AttentionPlanConfig(backend="nope", n=n))
+        raise AssertionError("expected ValueError for unknown backend")
+    except ValueError:
+        pass
+    return results
 
 
 def check_pipeline_parallel():
@@ -393,7 +488,7 @@ def check_collective_mode():
     == single-device oracle AND == the ring-decomposed implementation."""
     import jax
     import jax.numpy as jnp
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     from repro.core.mesh_attention import MeshAttentionConfig, mesh_attention
@@ -595,6 +690,7 @@ CHECKS = {
     "moe_ep": check_moe_ep_manual,
     "collective_mode": check_collective_mode,
     "pipeline": check_pipeline_parallel,
+    "dispatch": check_dispatch_seam,
 }
 
 

@@ -1,0 +1,109 @@
+"""Dependency-free fallback for the slice of `hypothesis` this repo uses.
+
+The property-based test modules import ``given``/``settings``/``strategies``.
+When the real hypothesis package is installed (CI installs the pin from
+requirements-dev.txt) it is always preferred; this shim exists so the tier-1
+suite still collects and runs in hermetic containers where ``pip install``
+is unavailable.  ``tests/conftest.py`` calls :func:`install` only when
+``import hypothesis`` fails.
+
+Semantics: each ``@given`` test runs a deterministic sweep — one "minimal"
+example (every strategy at its lower bound, hypothesis-style boundary
+probing) followed by pseudo-random examples from a seed derived from the
+test name, up to ``settings(max_examples=...)``.  No shrinking; the failing
+example is attached to the exception notes instead.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+from repro.testing.hypothesis_shim import strategies
+
+__all__ = ["given", "settings", "strategies", "install", "__version__"]
+
+__version__ = "0.0.0+repro-shim"
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+def settings(**kw):
+    """Decorator recording run options; composes with @given in either order."""
+
+    def decorate(fn):
+        fn._shim_settings = dict(kw)
+        return fn
+
+    return decorate
+
+
+# make bare uses like ``settings.default`` not explode if they ever appear
+settings.default = {"max_examples": _DEFAULT_MAX_EXAMPLES}
+
+
+def _bind_names(fn, n_positional, kw_strategies):
+    """Right-align positional @given strategies to fn's parameters, the way
+    hypothesis does (leading params may be filled by pytest fixtures or
+    parametrize)."""
+    params = [
+        p.name
+        for p in inspect.signature(fn).parameters.values()
+        if p.kind in (p.POSITIONAL_OR_KEYWORD, p.KEYWORD_ONLY)
+    ]
+    tail = [p for p in params if p not in kw_strategies]
+    return tail[len(tail) - n_positional :]
+
+
+def given(*pos_strategies, **kw_strategies):
+    def decorate(fn):
+        names = _bind_names(fn, len(pos_strategies), kw_strategies)
+        all_strats = dict(zip(names, pos_strategies))
+        all_strats.update(kw_strategies)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = (
+                getattr(wrapper, "_shim_settings", None)
+                or getattr(fn, "_shim_settings", None)
+                or {}
+            )
+            max_examples = int(conf.get("max_examples", _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(max(1, max_examples)):
+                if i == 0:
+                    drawn = {k: s.minimal() for k, s in all_strats.items()}
+                else:
+                    drawn = {k: s.draw(rng) for k, s in all_strats.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    note = f"[hypothesis-shim] falsifying example #{i}: {drawn!r}"
+                    if hasattr(e, "add_note"):
+                        e.add_note(note)
+                    raise
+            return None
+
+        # hide the drawn parameters from pytest's fixture resolution (real
+        # hypothesis does the same signature rewrite)
+        sig = inspect.signature(fn)
+        remaining = [p for p in sig.parameters.values() if p.name not in all_strats]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        del wrapper.__wrapped__  # or inspect follows it back to the full sig
+        # marker some tooling sniffs for (anyio's pytest plugin reads
+        # ``obj.hypothesis.inner_test``)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return decorate
+
+
+def install():
+    """Register this package as the ``hypothesis`` module family."""
+    me = sys.modules[__name__]
+    sys.modules.setdefault("hypothesis", me)
+    sys.modules.setdefault("hypothesis.strategies", strategies)

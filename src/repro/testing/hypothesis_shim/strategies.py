@@ -1,0 +1,120 @@
+"""Strategy combinators for the hypothesis fallback shim.
+
+Only the API surface the repo's tests use: integers, floats, booleans,
+sampled_from, just, tuples, builds, lists, plus .map/.flatmap/.filter.
+Every strategy carries a deterministic ``minimal()`` (lower-bound) example
+alongside the seeded ``draw(rng)``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+__all__ = [
+    "SearchStrategy",
+    "integers",
+    "floats",
+    "booleans",
+    "sampled_from",
+    "just",
+    "tuples",
+    "builds",
+    "lists",
+]
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable, minimal: Callable[[], Any]):
+        self._draw = draw
+        self._minimal = minimal
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def minimal(self):
+        return self._minimal()
+
+    def map(self, f):
+        return SearchStrategy(lambda rng: f(self._draw(rng)), lambda: f(self._minimal()))
+
+    def flatmap(self, f):
+        return SearchStrategy(
+            lambda rng: f(self._draw(rng)).draw(rng),
+            lambda: f(self._minimal()).minimal(),
+        )
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(10_000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise RuntimeError("hypothesis-shim: filter predicate too strict")
+
+        def minimal():
+            v = self._minimal()
+            if pred(v):
+                return v
+            import random
+
+            return draw(random.Random(0))
+
+        return SearchStrategy(draw, minimal)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value), lambda: min_value)
+
+
+def floats(min_value: float, max_value: float) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value), lambda: min_value)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.getrandbits(1)), lambda: False)
+
+
+def sampled_from(elements: Sequence) -> SearchStrategy:
+    elems = list(elements)
+    if not elems:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return SearchStrategy(lambda rng: rng.choice(elems), lambda: elems[0])
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value, lambda: value)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.draw(rng) for s in strategies),
+        lambda: tuple(s.minimal() for s in strategies),
+    )
+
+
+def _resolve(v, rng):
+    return v.draw(rng) if isinstance(v, SearchStrategy) else v
+
+
+def _resolve_min(v):
+    return v.minimal() if isinstance(v, SearchStrategy) else v
+
+
+def builds(target: Callable, *args, **kwargs) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: target(
+            *(_resolve(a, rng) for a in args),
+            **{k: _resolve(v, rng) for k, v in kwargs.items()},
+        ),
+        lambda: target(
+            *(_resolve_min(a) for a in args),
+            **{k: _resolve_min(v) for k, v in kwargs.items()},
+        ),
+    )
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0, max_size: int = 10) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: [elements.draw(rng) for _ in range(rng.randint(min_size, max_size))],
+        lambda: [elements.minimal() for _ in range(min_size)],
+    )

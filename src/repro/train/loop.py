@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map, supports_nested_manual_grad
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import make_batch
 from repro.models import transformer as tfm
@@ -68,6 +69,10 @@ def make_train_step(cfg: ModelConfig, ctx: ParallelCtx, opt_cfg: AdamWConfig,
         and ctx.mesh is not None
         and "pod" in ctx.mesh.shape
         and ctx.mesh.shape["pod"] > 1
+        # the compressed path differentiates the model INSIDE a manual-pod
+        # shard_map; on jax 0.4.x that nesting cannot lower (see compat) and
+        # the step falls back to the plain uncompressed all-reduce
+        and supports_nested_manual_grad()
     )
 
     def grads_and_metrics(params, batch, the_ctx):
@@ -105,7 +110,7 @@ def make_train_step(cfg: ModelConfig, ctx: ParallelCtx, opt_cfg: AdamWConfig,
             rep = jax.tree.map(lambda _: P(), params)
             orep = OptState(P(), rep, rep)
             bspec = {k: (P() if k == "positions" else P("pod")) for k in batch}
-            f = jax.shard_map(
+            f = shard_map(
                 partial(inner),
                 mesh=ctx.mesh,
                 in_specs=(rep, orep, rep, bspec),

@@ -1,0 +1,19 @@
+"""Test bootstrap: make ``repro`` importable and fall back to the vendored
+hypothesis shim when the real package is absent (hermetic containers)."""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    try:
+        import repro  # noqa: F401
+    except ImportError:
+        sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from repro.testing import hypothesis_shim
+
+    hypothesis_shim.install()

@@ -112,11 +112,12 @@ def test_sharding_spec_rules():
     """Spec rules on an AbstractMesh (no devices needed): serve = row/col
     parallel over model; train = largest-dim FSDP; expert weights follow the
     EP/TP divisibility rule; the stacked layer dim is never sharded."""
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
+    from repro.compat import abstract_mesh
     from repro.parallel import sharding as shd
 
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     ctx = ParallelCtx(mesh=mesh, batch_axes=("data",), sp_axis="model")
     params = {
         "embed": jnp.zeros((4096, 512)),

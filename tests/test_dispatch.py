@@ -1,0 +1,212 @@
+"""Unit tests for the unified dispatch layer (registry, planning, cache).
+
+Single-device: everything here exercises registry resolution and the
+simulator-backed plan cache without a mesh; the multi-device routing is
+covered by ``repro.testing.dist_check`` (tests/test_distributed.py).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dispatch as D
+from repro.core import schedule as S
+from repro.core.am import CommModel
+from repro.core.dispatch import AttentionPlanConfig
+from repro.kernels import ref
+from repro.parallel.context import ParallelCtx
+
+
+# --------------------------------------------------------------------------
+# registry resolution
+# --------------------------------------------------------------------------
+
+
+def test_registry_contains_all_paper_backends():
+    assert {"mesh", "ring", "ulysses", "decode", "local-flash"} <= set(
+        D.available_backends()
+    )
+
+
+def test_auto_resolution():
+    assert AttentionPlanConfig(backend="auto", n=1).resolved_backend() == "local-flash"
+    assert AttentionPlanConfig(backend="auto", n=8).resolved_backend() == "mesh"
+    assert AttentionPlanConfig(backend="ring", n=8).resolved_backend() == "ring"
+
+
+def test_unknown_backend_raises_with_known_list():
+    with pytest.raises(ValueError, match="unknown attention backend"):
+        D.get_backend("does-not-exist")
+    with pytest.raises(ValueError, match="mesh"):
+        AttentionPlanConfig(backend="nope", n=4).resolved_backend()
+
+
+def test_decode_backend_rejects_batched_mode():
+    q = jnp.zeros((1, 8, 2, 4))
+    with pytest.raises(ValueError, match="step-wise"):
+        D.attention_in_shard_map(q, q, q, AttentionPlanConfig(backend="decode", n=1))
+
+
+def test_distributed_backend_without_mesh_raises():
+    q = jnp.zeros((1, 8, 2, 4))
+    with pytest.raises(ValueError, match="ParallelCtx"):
+        D.distributed_attention(
+            q, q, q, cfg=AttentionPlanConfig(backend="mesh", axis_name="sp", n=4)
+        )
+
+
+def test_local_fallback_matches_reference():
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (2, 32, 4, 16))
+    k = jax.random.normal(kk, (2, 32, 2, 16))
+    v = jax.random.normal(kv, (2, 32, 2, 16))
+    o = D.distributed_attention(q, k, v, cfg=AttentionPlanConfig(causal=True))
+    o_ref, _ = ref.attention_ref(q, k, v, band=ref.causal_band())
+    assert float(jnp.max(jnp.abs(o - o_ref))) < 2e-5
+
+
+# --------------------------------------------------------------------------
+# plan_from_ctx
+# --------------------------------------------------------------------------
+
+
+def test_plan_from_ctx_single_device_defaults():
+    cfg = D.plan_from_ctx(ParallelCtx(), causal=True)
+    assert cfg.n == 1 and cfg.backend == "mesh"
+    assert cfg.resolved_backend() == "mesh"  # n==1 short-circuits at call time
+
+
+def test_plan_from_ctx_ring_forces_a1():
+    ctx = ParallelCtx(attn_impl="ring", mesh_a=4)
+    cfg = D.plan_from_ctx(ctx, causal=False)
+    assert cfg.a == 1 and cfg.backend == "ring"
+
+
+# --------------------------------------------------------------------------
+# simulator planning + cache
+# --------------------------------------------------------------------------
+
+
+def _comm(n=8, seq=1024):
+    return CommModel(seq=seq, hidden=512, n=n, kv_hidden=256, bytes_per_elem=2)
+
+
+def test_a1_mesh_plan_degenerates_to_ring_schedule(tmp_path):
+    """The paper's 'covers Ring-Attention as a special case': planning the
+    mesh backend at a=1 yields schedules with the ring backend's structure —
+    same comm-op multiset and the one-KV-recv-per-step cadence."""
+    n = 8
+    cfg = AttentionPlanConfig(
+        backend="mesh", axis_name="sp", n=n, a=1, causal=False,
+        autotune=True, plan_cache_dir=str(tmp_path),
+    )
+    D._MEM_CACHE.clear()
+    a, fwd, bwd = D.plan_schedules(cfg, _comm(n))
+    assert a == 1 and (fwd.a, fwd.b) == (1, n)
+    ring = S.ring_forward_schedule(n)
+    assert fwd.comm_ops() == ring.comm_ops() == [S.RECV_KV] * (n - 1)
+    assert sorted(fwd.blocks()) == sorted(ring.blocks())
+    S.validate_schedule(fwd, strict_paper=True)
+    assert bwd is not None and (bwd.a, bwd.b) == (1, n)
+
+
+def test_plan_cache_roundtrip(tmp_path):
+    cfg = AttentionPlanConfig(
+        backend="mesh", axis_name="sp", n=8, a=None, causal=True,
+        autotune=True, plan_cache_dir=str(tmp_path),
+    )
+    D._MEM_CACHE.clear()
+    a1, fwd1, bwd1 = D.plan_schedules(cfg, _comm())
+    files = list(tmp_path.glob("*.json"))
+    assert len(files) == 1, "one plan file per (shape, dtype, n, hw) key"
+    # cold in-memory state must reload the identical plan from disk
+    D._MEM_CACHE.clear()
+    a2, fwd2, bwd2 = D.plan_schedules(cfg, _comm())
+    assert (a1, fwd1, bwd1) == (a2, fwd2, bwd2)
+    assert len(list(tmp_path.glob("*.json"))) == 1  # no re-tune, no new file
+
+
+def test_plan_cache_distinguishes_geometry(tmp_path):
+    cfg = AttentionPlanConfig(
+        backend="mesh", axis_name="sp", n=8, causal=True,
+        autotune=True, plan_cache_dir=str(tmp_path),
+    )
+    D._MEM_CACHE.clear()
+    D.plan_schedules(cfg, _comm(seq=1024))
+    D.plan_schedules(cfg, _comm(seq=4096))
+    assert len(list(tmp_path.glob("*.json"))) == 2
+
+
+def test_plan_cache_corrupt_entry_replans(tmp_path):
+    cfg = AttentionPlanConfig(
+        backend="mesh", axis_name="sp", n=4, causal=False,
+        autotune=True, plan_cache_dir=str(tmp_path),
+    )
+    D._MEM_CACHE.clear()
+    a1, fwd1, _ = D.plan_schedules(cfg, _comm(n=4))
+    (path,) = tmp_path.glob("*.json")
+    path.write_text("{not json")
+    D._MEM_CACHE.clear()
+    a2, fwd2, _ = D.plan_schedules(cfg, _comm(n=4))
+    assert (a1, fwd1) == (a2, fwd2)
+
+
+def test_unknown_hw_profile_raises(tmp_path):
+    cfg = AttentionPlanConfig(
+        backend="mesh", axis_name="sp", n=4, autotune=True,
+        hw_profile="quantum", plan_cache_dir=str(tmp_path),
+    )
+    with pytest.raises(ValueError, match="hw_profile"):
+        D.plan_schedules(cfg, _comm(n=4))
+
+
+def test_schedule_json_roundtrip():
+    sched = S.greedy_forward_schedule(2, 4)
+    assert S.schedule_from_json(S.schedule_to_json(sched)) == sched
+    bwd = S.greedy_backward_schedule(2, 4)
+    assert S.schedule_from_json(S.schedule_to_json(bwd)) == bwd
+
+
+def test_autotune_picks_near_sqrt_tile(tmp_path):
+    """With symmetric Q/KV widths the tuner lands near a = sqrt(n)."""
+    cfg = AttentionPlanConfig(
+        backend="mesh", axis_name="sp", n=16, causal=False,
+        autotune=True, plan_cache_dir=str(tmp_path),
+    )
+    D._MEM_CACHE.clear()
+    comm = CommModel(seq=1 << 16, hidden=4096, n=16, bytes_per_elem=2)
+    a, fwd, bwd = D.plan_schedules(cfg, comm)
+    assert a in (2, 4, 8)
+    S.validate_schedule(fwd)
+
+
+# --------------------------------------------------------------------------
+# call-site hygiene: nothing outside core/ (and tests) imports backends
+# --------------------------------------------------------------------------
+
+
+def test_no_direct_backend_imports_outside_core():
+    import os
+    import re
+
+    root = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src", "repro")
+    banned = re.compile(
+        r"from repro\.core\.(mesh_attention|ring_attention|ulysses|decode_attention"
+        r"|mesh_attention_collective) import|import repro\.core\.(mesh_attention"
+        r"|ring_attention|ulysses|decode_attention|mesh_attention_collective)\b"
+    )
+    offenders = []
+    for dirpath, _, files in os.walk(root):
+        rel = os.path.relpath(dirpath, root)
+        if rel.split(os.sep)[0] in ("core", "testing"):
+            continue  # core owns the backends; testing compares against them
+        for fn in files:
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path) as f:
+                if banned.search(f.read()):
+                    offenders.append(os.path.relpath(path, root))
+    assert not offenders, f"direct backend imports outside core/: {offenders}"

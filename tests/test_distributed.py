@@ -66,3 +66,9 @@ def test_beyond_paper_variants():
 def test_pipeline_parallelism():
     """GPipe over a 'pipe' axis == sequential stack, fwd and grads."""
     _run_checks("pipeline")
+
+
+def test_dispatch_seam():
+    """repro.core.dispatch routes every backend (incl. the autotuned mesh
+    plan with its on-disk cache) to oracle-identical results."""
+    _run_checks("dispatch")
