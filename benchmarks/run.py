@@ -374,6 +374,25 @@ for a in (1, 2, 4):
     return rows
 
 
+# ---- continuous-batching serve throughput/latency ---------------------------------
+
+
+def bench_serve():
+    """Mixed-length arrival trace through the slot-pool engine (reduced
+    config): tokens/s + latency percentiles, accumulated per commit."""
+    from benchmarks.serve_bench import run_bench
+
+    payload = run_bench("granite-8b", slots=4, requests=8, new_tokens=6)
+    _save("serve_bench", payload)
+    lat = payload["latency_s"]
+    _emit(
+        "serve_bench", payload["wall_s"] / max(payload["ticks"], 1) * 1e6,
+        f"tok_per_s={payload['tokens_per_s']:.1f} "
+        f"p50={lat['p50']:.3f}s p95={lat['p95']:.3f}s",
+    )
+    return payload
+
+
 # ---- roofline table from the dry-run ----------------------------------------------
 
 
@@ -408,6 +427,7 @@ BENCHES = {
     "fig6_autotune": bench_fig6_autotune,
     "arch_tiles": bench_arch_tiles,
     "measured_mesh_attention": bench_measured_mesh_attention,
+    "serve_bench": bench_serve,
     "roofline_table": bench_roofline_table,
 }
 

@@ -1,0 +1,141 @@
+"""Continuous-batching serve benchmark: tokens/s + latency percentiles.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--arch granite-8b] \
+        [--slots 4] [--requests 12] [--new-tokens 8] [--json-out PATH]
+
+Replays a mixed-length arrival trace through the slot-pool engine (reduced
+config, current backend — a smoke-level trajectory number on CPU CI, a real
+measurement on accelerators) and writes JSON next to the table-2 results in
+``benchmarks/results/serve_bench.json`` so the perf trajectory accumulates
+per commit (same convention as ``table2_comm_volume.json``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+try:
+    import repro  # noqa: F401
+except ImportError:  # running from a checkout without `pip install -e .`
+    sys.path.insert(
+        0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    )
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+
+
+def _pct(sorted_vals, p):
+    if not sorted_vals:
+        return None
+    i = min(len(sorted_vals) - 1, int(round(p / 100 * (len(sorted_vals) - 1))))
+    return sorted_vals[i]
+
+
+def run_bench(
+    arch: str = "granite-8b",
+    *,
+    slots: int = 4,
+    requests: int = 12,
+    new_tokens: int = 8,
+    max_seq: int = 128,
+    seed: int = 0,
+):
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import transformer as tfm
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config(arch).reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
+    eng = ServeEngine(cfg, params, max_seq=max_seq, num_slots=slots)
+
+    rng = np.random.default_rng(seed)
+    lengths = [int(rng.choice([16, 32, 64])) for _ in range(requests)]
+
+    # warm the jit caches OUTSIDE the timed region: jit compiles on the
+    # first concrete call, so actually serve one throwaway request per
+    # distinct bucket (2 tokens each: compiles that bucket's prefill AND
+    # the shared decode step)
+    warm_lens = {}
+    for ln in lengths:
+        warm_lens.setdefault(eng.scheduler.bucket_for(ln), ln)
+    for ln in warm_lens.values():
+        eng.submit(
+            rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32),
+            max_new_tokens=min(2, max_seq - ln),
+        )
+    eng.run()
+
+    # one request per tick arrival pattern keeps admission interleaved with
+    # decode so the bench exercises mixed-depth slots, not a static batch
+    base_tick = eng._tick
+    rids = []
+    for i, ln in enumerate(lengths):
+        prompt = rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32)
+        rids.append(
+            eng.submit(prompt, max_new_tokens=new_tokens, arrival_tick=base_tick + i // 2)
+        )
+
+    t0 = time.perf_counter()
+    while eng.has_work:
+        eng.step()
+    total_wall = time.perf_counter() - t0
+
+    reqs = [eng._finished[rid] for rid in rids]
+    total_tokens = sum(len(r.generated) for r in reqs)
+    # tick-driven replay: per-request latency = tick span x measured mean
+    # tick time (arrival-to-finish for end-to-end, arrival-to-first-token
+    # for TTFT); on a real clock-driven server these become wall timestamps
+    ticks = eng._tick - base_tick  # warmup ticks are outside the timed region
+    tick_s = total_wall / max(ticks, 1)
+    lat = sorted((r.finish_tick - r.arrival_tick + 1) * tick_s for r in reqs)
+    ttft = sorted((r.first_token_tick - r.arrival_tick + 1) * tick_s for r in reqs)
+    payload = {
+        "arch": arch,
+        "slots": slots,
+        "requests": requests,
+        "new_tokens": new_tokens,
+        "prompt_lengths": lengths,
+        "ticks": ticks,
+        "wall_s": total_wall,
+        "tokens_total": total_tokens,
+        "tokens_per_s": total_tokens / max(total_wall, 1e-9),
+        "latency_s": {"p50": _pct(lat, 50), "p95": _pct(lat, 95)},
+        "first_token_s": {"p50": _pct(ttft, 50), "p95": _pct(ttft, 95)},
+        "prefill_traces": dict(eng.prefill_trace_counts),
+        "decode_traces": eng.decode_trace_count,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+    }
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--json-out", default=os.path.join(RESULTS_DIR, "serve_bench.json"))
+    args = ap.parse_args(argv)
+    payload = run_bench(
+        args.arch, slots=args.slots, requests=args.requests,
+        new_tokens=args.new_tokens, max_seq=args.max_seq,
+    )
+    os.makedirs(os.path.dirname(args.json_out), exist_ok=True)
+    with open(args.json_out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(json.dumps({k: payload[k] for k in
+                      ("tokens_per_s", "latency_s", "first_token_s", "ticks")}))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,12 +14,19 @@ This replaces head-parallel (Ulysses-style) decode, which is capped at Hkv
 devices — with GQA (e.g. kv=8 on a 16-wide model axis) that cap binds, the
 sequence-sharded cache does not.  Striping additionally balances appends
 (shard t mod n) no matter how long generation runs.
+
+``pos`` may be a scalar (every batch row at the same depth — the static-batch
+case) or an int32 ``[B]`` vector of per-slot positions.  The vector form is
+what makes continuous batching cheap here: each slot's owner/band math is
+independent, so one step serves slots at arbitrary mixed depths with the same
+O(B·H·D) per-token combine.
 """
 
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -41,25 +48,40 @@ def sharded_cache_update(
     v_cache: jnp.ndarray,
     k_new: jnp.ndarray,  # [B, 1, Hkv, D] replicated across the axis
     v_new: jnp.ndarray,
-    pos,  # int32 scalar: global position being written
+    pos,  # int32 scalar or [B] vector: global position(s) being written
     axis_name: str,
     n: int,
     layout: str = "striped",
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     i = lax.axis_index(axis_name)
-    is_owner, slot = _owner_slot(pos, i, n, k_cache.shape[1], layout)
-    k_upd = lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
-    v_upd = lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
-    k_cache = jnp.where(is_owner, k_upd, k_cache)
-    v_cache = jnp.where(is_owner, v_upd, v_cache)
-    return k_cache, v_cache
+    m = k_cache.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        is_owner, slot = _owner_slot(pos, i, n, m, layout)
+        k_upd = lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
+        v_upd = lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+        k_cache = jnp.where(is_owner, k_upd, k_cache)
+        v_cache = jnp.where(is_owner, v_upd, v_cache)
+        return k_cache, v_cache
+    # per-slot positions: each batch row scatters into its own slot; rows past
+    # capacity (retired slots still ticking) are masked off rather than OOB
+    is_owner, slot = _owner_slot(pos, i, n, m, layout)
+    write = is_owner & (pos < n * m)
+    slot = jnp.clip(slot, 0, m - 1)
+    b = jnp.arange(k_cache.shape[0])
+    out = []
+    for cache, new in ((k_cache, k_new), (v_cache, v_new)):
+        cur = cache[b, slot]  # [B, Hkv, D]
+        val = jnp.where(write[:, None, None], new[:, 0].astype(cache.dtype), cur)
+        out.append(cache.at[b, slot].set(val))
+    return out[0], out[1]
 
 
 def sharded_cache_decode(
     q: jnp.ndarray,  # [B, 1, H, D] new token's query, replicated over the axis
     k_cache: jnp.ndarray,  # [B, m, Hkv, D] local slice
     v_cache: jnp.ndarray,
-    pos,  # int32 scalar: current position (attends to global positions <= pos)
+    pos,  # int32 scalar or [B] vector: current position(s); attends to <= pos
     axis_name: str,
     n: int,
     *,
@@ -70,23 +92,39 @@ def sharded_cache_decode(
     """One decode step: partial attention per shard + lse-weighted psum."""
     i = lax.axis_index(axis_name)
     m = k_cache.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
     hi = (window - 1) if window else BAND_INF
     # global position of local slot s: striped: i + n*s; contiguous: i*m + s
     if layout == "striped":
         kv_off, stride_kv = i, n
     else:
         kv_off, stride_kv = i * m, 1
-    band = jnp.stack(
-        [
-            jnp.asarray(pos, jnp.int32),
-            jnp.asarray(kv_off, jnp.int32),
-            jnp.int32(0),
-            jnp.int32(hi),
-        ]
-    )
-    o, lse = ops.block_attention(
-        q, k_cache, v_cache, band, scale=scale, stride_q=1, stride_kv=stride_kv
-    )
+    if pos.ndim == 0:
+        band = jnp.stack(
+            [
+                pos,
+                jnp.asarray(kv_off, jnp.int32),
+                jnp.int32(0),
+                jnp.int32(hi),
+            ]
+        )
+        o, lse = ops.block_attention(
+            q, k_cache, v_cache, band, scale=scale, stride_q=1, stride_kv=stride_kv
+        )
+    else:
+        # per-slot depths: the band's q offset differs per batch row, so map
+        # the kernel over the batch (the psum combine below stays batched)
+        def one(qb, kb, vb, pb):
+            band = jnp.stack(
+                [pb, jnp.asarray(kv_off, jnp.int32), jnp.int32(0), jnp.int32(hi)]
+            )
+            ob, lb = ops.block_attention(
+                qb[None], kb[None], vb[None], band,
+                scale=scale, stride_q=1, stride_kv=stride_kv,
+            )
+            return ob[0], lb[0]
+
+        o, lse = jax.vmap(one)(q, k_cache, v_cache, pos)
     # combine partials across shards: softmax-weighted by exp(lse - max)
     mx = lax.pmax(lse, axis_name)  # [B, H, 1]
     mx = jnp.maximum(mx, NEG_INF)

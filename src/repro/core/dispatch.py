@@ -478,7 +478,7 @@ def decode_attention_step(
     v_new,
     k_cache,  # [B, cap(/n), Hkv, D]; sharded over the sequence axis
     v_cache,
-    pos,  # int32 scalar
+    pos,  # int32 scalar, or [B] vector of per-slot positions
     ctx,
     *,
     window: Optional[int] = None,
@@ -489,18 +489,40 @@ def decode_attention_step(
 
     Returns (o, new_k_cache, new_v_cache).  n == 1 runs the dense local
     update + flash-decode; otherwise the sequence-sharded cache path.
+    Vector ``pos`` serves mixed-depth slots in one step (continuous batching).
     """
     n = ctx.sp_size
+    pos = jnp.asarray(pos, jnp.int32)
+    hi = (window - 1) if window else BAND_INF
     if n == 1:
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            k_cache, k_new.astype(k_cache.dtype), pos, axis=1
-        )
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            v_cache, v_new.astype(v_cache.dtype), pos, axis=1
-        )
-        hi = (window - 1) if window else BAND_INF
-        band = jnp.stack([jnp.asarray(pos, jnp.int32), jnp.int32(0), jnp.int32(0), jnp.int32(hi)])
-        o, _ = ops.block_attention(q, k_cache, v_cache, band, scale=scale)
+        if pos.ndim == 0:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k_new.astype(k_cache.dtype), pos, axis=1
+            )
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v_new.astype(v_cache.dtype), pos, axis=1
+            )
+            band = jnp.stack([pos, jnp.int32(0), jnp.int32(0), jnp.int32(hi)])
+            o, _ = ops.block_attention(q, k_cache, v_cache, band, scale=scale)
+            return o.astype(q.dtype), k_cache, v_cache
+        # per-slot positions: row-wise scatter, then a row-wise band
+        cap = k_cache.shape[1]
+        write = pos < cap
+        slot = jnp.clip(pos, 0, cap - 1)
+        b = jnp.arange(k_cache.shape[0])
+        caches = []
+        for cache, new in ((k_cache, k_new), (v_cache, v_new)):
+            cur = cache[b, slot]
+            val = jnp.where(write[:, None, None], new[:, 0].astype(cache.dtype), cur)
+            caches.append(cache.at[b, slot].set(val))
+        k_cache, v_cache = caches
+
+        def one(qb, kb, vb, pb):
+            band = jnp.stack([pb, jnp.int32(0), jnp.int32(0), jnp.int32(hi)])
+            ob, _ = ops.block_attention(qb[None], kb[None], vb[None], band, scale=scale)
+            return ob[0]
+
+        o = jax.vmap(one)(q, k_cache, v_cache, pos)
         return o.astype(q.dtype), k_cache, v_cache
 
     cfg = AttentionPlanConfig(
@@ -512,15 +534,16 @@ def decode_attention_step(
     bs = ctx.eff_batch_spec(q.shape[0])
     rep = P(bs, None, None, None)
     cache_spec = P(bs, ctx.sp_axis, None, None)
+    pos_spec = P(bs) if pos.ndim else P()
 
     f = shard_map(
         lambda q, kn, vn, kc, vc, pos: step(q, kn, vn, kc, vc, pos, cfg),
         mesh=ctx.shard_map_mesh(),
-        in_specs=(rep, rep, rep, cache_spec, cache_spec, P()),
+        in_specs=(rep, rep, rep, cache_spec, cache_spec, pos_spec),
         out_specs=(rep, cache_spec, cache_spec),
         check_vma=False,
     )
-    return f(q, k_new, v_new, k_cache, v_cache, jnp.asarray(pos, jnp.int32))
+    return f(q, k_new, v_new, k_cache, v_cache, pos)
 
 
 def latent_wire_attention(q, wire, wire_params, kv_transform, *, cfg: AttentionPlanConfig, ctx):

@@ -116,7 +116,7 @@ def _cache_structs(cfg: ModelConfig, ctx: ParallelCtx, batch: int, cap: int):
             return P(None, bs, ctx.sp_axis, None, None)
         if name in ("conv", "state"):
             return P(None, bs, *([None] * (nd - 2)))
-        return P()  # pos scalar
+        return P()  # pos: per-slot [B] vector, replicated
 
     specs = jax.tree_util.tree_map_with_path(spec_for, abs_c)
     shardings = jax.tree.map(lambda s: _named(ctx, s), specs)

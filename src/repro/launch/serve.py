@@ -1,23 +1,49 @@
-"""Serving entry point: batched greedy generation.
+"""Serving entry point: static-batch generation or streaming continuous
+batching over the slot-pool engine.
 
+    # static batch (legacy)
     PYTHONPATH=src python -m repro.launch.serve --arch minicpm3-4b --reduced \
         [--fake-devices 8] [--batch 4] [--prompt-len 16] [--new-tokens 8]
+
+    # streaming: replay a mixed-length arrival trace through the scheduler
+    PYTHONPATH=src python -m repro.launch.serve --reduced --stream \
+        [--fake-devices 8] [--trace 16:0,32:1,64:2,16:4] [--slots 4]
+
+``--trace`` is a comma list of ``prompt_len[:arrival_tick]`` items; slots at
+different depths decode in a single jitted step per tick.
 """
 
 import argparse
+import json
 import os
 import sys
 
 
+def _parse_trace(spec: str):
+    items = []
+    for part in spec.split(","):
+        if ":" in part:
+            ln, tick = part.split(":")
+        else:
+            ln, tick = part, 0
+        items.append((int(ln), int(tick)))
+    return items
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default="granite-8b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--fake-devices", type=int, default=0)
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous batching: replay --trace through the scheduler")
+    ap.add_argument("--trace", default="16:0,32:1,64:2,16:4",
+                    help="comma list of prompt_len[:arrival_tick]")
+    ap.add_argument("--slots", type=int, default=4)
     args = ap.parse_args()
 
     if args.fake_devices:
@@ -45,8 +71,32 @@ def main():
     else:
         ctx = ParallelCtx()
     params = tfm.init_params(cfg, jax.random.PRNGKey(0), ctx=ctx)
-    eng = ServeEngine(cfg, params, ctx=ctx, max_seq=args.max_seq)
+    eng = ServeEngine(cfg, params, ctx=ctx, max_seq=args.max_seq, num_slots=args.slots)
     rng = np.random.default_rng(0)
+
+    if args.stream:
+        trace = _parse_trace(args.trace)
+        for ln, tick in trace:
+            prompt = rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32)
+            eng.submit(prompt, max_new_tokens=args.new_tokens, arrival_tick=tick)
+        ticks = 0
+        while eng.has_work:
+            for req in eng.step():
+                print(
+                    f"rid={req.rid} len={len(req.prompt)} slot={req.slot} "
+                    f"arrived@{req.arrival_tick} admitted@{req.admit_tick} "
+                    f"finished@{req.finish_tick}: {req.generated}"
+                )
+            ticks += 1
+        summary = {
+            "requests": len(trace),
+            "ticks": ticks,
+            "prefill_traces": dict(eng.prefill_trace_counts),
+            "decode_traces": eng.decode_trace_count,
+        }
+        print(json.dumps(summary))
+        return 0
+
     prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32)
     out = eng.generate(prompts, max_new_tokens=args.new_tokens)
     for i, row in enumerate(out):

@@ -54,7 +54,7 @@ def decode_attention_step(
     v_new: jnp.ndarray,
     k_cache: jnp.ndarray,  # [B, cap(/n), Hkv, D]; sharded over sp_axis
     v_cache: jnp.ndarray,
-    pos,  # int32 scalar
+    pos,  # int32 scalar or [B] per-slot position vector
     ctx: ParallelCtx,
     *,
     window: Optional[int] = None,

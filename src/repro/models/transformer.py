@@ -244,8 +244,11 @@ def _attn_cache_dims(cfg: ModelConfig):
 
 
 def init_cache(cfg: ModelConfig, batch: int, cap: int, dtype=jnp.bfloat16, ctx=None):
+    """Decode cache with a PER-SLOT position vector ``pos: [B]`` — each batch
+    row (serving slot) may sit at a different depth, which is what lets the
+    continuous-batching engine decode mixed-depth slots in one jitted step."""
     L = cfg.num_layers
-    cache: Dict = {"pos": jnp.zeros((), jnp.int32)}
+    cache: Dict = {"pos": jnp.zeros((batch,), jnp.int32)}
     if cfg.family != "ssm":
         hkv, dk, dv = _attn_cache_dims(cfg)
         cache["k"] = jnp.zeros((L, batch, cap, hkv, dk), dtype)
@@ -264,7 +267,8 @@ def _decode_qkv(h, lp, cfg: ModelConfig, pos):
     """Single-token projections in cache space. h [B,1,D] ->
     (q [B,1,Hq,dk], k_new [B,1,hkv,dk], v_new [B,1,hkv,dv], scale)."""
     B = h.shape[0]
-    positions = jnp.full((1,), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
     if cfg.mla is not None:
         m = cfg.mla
         qk = m.qk_nope_head_dim + m.qk_rope_head_dim
@@ -351,8 +355,13 @@ def _decode_block(x, lp, cache_l, cfg: ModelConfig, ctx: ParallelCtx, pos):
 
 
 def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: ParallelCtx):
-    """One greedy decode step.
-    tokens [B,1] -> (next [B,1], new cache, logits [B,1,V])."""
+    """One greedy decode step over all slots.
+    tokens [B,1] -> (next [B,1], new cache, logits [B,1,V]).
+
+    ``cache["pos"]`` is the per-slot position vector [B] (a scalar still
+    works for legacy callers); every row advances by one — rows holding
+    retired/free slots tick harmlessly (their cache writes are masked past
+    capacity and their outputs are ignored by the engine)."""
     pos = cache["pos"]
     x = jnp.take(params["embed"], tokens, axis=0)
     x = ctx.constrain(x, None, None)
@@ -402,6 +411,14 @@ def prefill(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
     For striped-layout archs the prefill chunks ARE the cache shards (token t
     on shard t mod n) — K/V land with no resharding; this is the paper's
     locality property carried into serving.
+
+    ``batch`` may carry an optional ``"length": [B]`` of true prompt lengths
+    when tokens are right-padded to a bucket (the continuous-batching
+    engine's bucketed prefill): the returned logits are taken at each row's
+    own last REAL position and ``cache["pos"]`` starts each row at its own
+    length.  Causality makes the trailing pad tokens invisible to the real
+    ones, and decode overwrites each pad's cache entry before first reading
+    that position.
     """
     tokens, positions = batch["tokens"], batch["positions"]
     x = jnp.take(params["embed"], tokens, axis=0)
@@ -482,10 +499,21 @@ def prefill(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
     x, new_layer_cache = _stack_scan(body, x, (params["layers"], layer_cache), ctx)
     x = _final_norm(x, params, cfg)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    # under striping the LAST POSITION is not the last index
-    last_idx = jnp.argmax(positions)
-    logits = jnp.take(x, last_idx[None], axis=1) @ head.astype(x.dtype)
+    B = tokens.shape[0]
+    if "length" in batch:
+        # right-padded bucket: each row's last real token sits where
+        # positions == length-1 (striping scrambles index != position)
+        length = batch["length"].astype(jnp.int32)
+        last_idx = jnp.argmax(positions[None, :] == (length[:, None] - 1), axis=1)
+        x_last = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)
+        new_pos = length
+    else:
+        # under striping the LAST POSITION is not the last index
+        last_idx = jnp.argmax(positions)
+        x_last = jnp.take(x, last_idx[None], axis=1)
+        new_pos = jnp.full((B,), S, jnp.int32)
+    logits = x_last @ head.astype(x.dtype)
     new_cache = dict(cache)
     new_cache.update(new_layer_cache)
-    new_cache["pos"] = jnp.asarray(S, jnp.int32)
+    new_cache["pos"] = new_pos
     return logits, new_cache

@@ -1,31 +1,50 @@
-"""Batched serving engine over the distributed striped KV cache.
+"""Continuous-batching serving engine over the distributed striped KV cache.
 
-Request lifecycle: right-pad prompts to a common length, one jitted prefill
-(Mesh-Attention over the model axis, writing the striped cache in place),
-then jitted greedy decode steps.  The cache is allocated once at engine
-construction and donated through the step, so decode is allocation-free.
+The engine owns a fixed pool of ``num_slots`` cache rows, allocated ONCE at
+construction.  Requests flow through ``serve/scheduler.py``:
+
+  * **prefill**: an admitted request is right-padded to a bucket length and
+    prefilled alone (batch=1) through a per-bucket jitted function that
+    scatters the resulting cache row into its assigned slot — jit retraces
+    are bounded by the number of buckets, not by batch composition.
+  * **decode**: ONE jitted step advances every slot per tick.  The cache
+    carries a per-slot position vector ``pos: [B]`` (threaded through
+    ``core/decode_attention.py``), so slots at arbitrary mixed depths decode
+    together; per-token cross-device traffic stays O(B·H·D) (paper §3.7).
+  * **retire**: per-slot EOS / max-token checks free the slot for the queue.
+
+Because every decode op is batch-row-independent, a slot's tokens are exactly
+what single-request generation would produce (MoE capacity is the one
+documented exception: expert capacity couples rows by construction).
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.core import dispatch
 from repro.core.am import CommModel
-from repro.data.pipeline import make_batch
 from repro.models import transformer as tfm
 from repro.parallel.context import ParallelCtx
+from repro.serve.scheduler import Request, Scheduler, default_buckets
 
 __all__ = ["ServeEngine"]
 
 
 class ServeEngine:
+    """Slot-based continuous-batching engine.
+
+    ``generate(prompts, max_new_tokens)`` keeps the legacy static-batch API
+    (greedy, exactly max_new_tokens per row) on top of the streaming path:
+    ``submit()`` requests, ``step()`` ticks, ``run()`` to drain.
+    """
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -34,23 +53,52 @@ class ServeEngine:
         *,
         max_seq: int = 256,
         cache_dtype=jnp.float32,
+        num_slots: int = 4,
+        prefill_buckets: Optional[Sequence[int]] = None,
+        eos_id: Optional[int] = None,
     ):
         self.cfg = cfg
         self.ctx = ctx or ParallelCtx()
         self.params = params
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
+        self.num_slots = num_slots
+        self.eos_id = eos_id
+        n = self.ctx.sp_size
+        if max_seq % max(n, 1):
+            raise ValueError(f"max_seq={max_seq} must be divisible by sp_size={n}")
+        # SSD's recurrent state has no pad-correction: prefill exactly
+        exact = cfg.ssm is not None
+        buckets = tuple(prefill_buckets) if prefill_buckets else default_buckets(max_seq, n)
+        if any(b % max(n, 1) for b in buckets) and not exact:
+            raise ValueError(f"buckets {buckets} must be multiples of sp_size={n}")
+        self.scheduler = Scheduler(
+            num_slots, buckets, max_seq, exact=exact, multiple=n,
+            chunk=cfg.ssm.chunk if exact else None,
+        )
         # the declarative attention plan this engine serves under (the
         # prefill path resolves its backend/tile through this via dispatch)
         self.attn_plan = dispatch.plan_from_ctx(
             self.ctx, causal=True, layout=cfg.causal_layout
         )
-        self._prefill = jax.jit(
-            lambda p, b, c: tfm.prefill(p, cfg, self.ctx, b, c)
-        )
-        self._decode = jax.jit(
-            lambda p, c, t: tfm.decode_step(p, c, t, cfg, self.ctx)
-        )
+        # THE cache: allocated once here, threaded through prefill inserts
+        # and decode steps for the engine's whole lifetime
+        self._cache = tfm.init_cache(cfg, num_slots, max_seq, dtype=cache_dtype, ctx=self.ctx)
+        self._cur = np.zeros((num_slots, 1), np.int32)  # last token per slot
+        self._tick = 0
+        self._finished: Dict[int, Request] = {}
+        # jit bookkeeping: trace counters tick at TRACE time only, so tests
+        # can assert the retrace count is bounded by the bucket set
+        self._prefill_fns: Dict[int, object] = {}
+        self.prefill_trace_counts: Dict[int, int] = {}
+        self.decode_trace_count = 0
+        self._decode = jax.jit(self._decode_traced)
+
+    # -- jitted paths -------------------------------------------------------
+
+    def _decode_traced(self, params, cache, tokens):
+        self.decode_trace_count += 1  # python side effect: trace-time only
+        return tfm.decode_step(params, cache, tokens, self.cfg, self.ctx)
 
     def _aux_inputs(self, batch_size: int) -> Dict:
         """Frontend stub inputs (audio frames / vision patches)."""
@@ -66,52 +114,150 @@ class ServeEngine:
             )
         return extra
 
-    def generate(self, prompts: np.ndarray, max_new_tokens: int = 16) -> np.ndarray:
-        """prompts: [B, S0] int32 (S0 must be divisible by the mesh's sp
-        size).  Greedy decoding.  Striped-layout archs get their prompt
-        striped here (the serving analogue of the data pipeline's §3.7
-        permutation)."""
-        B, S0 = prompts.shape
-        if self.attn_plan.autotune and self.ctx.sp_size > 1:
-            # resolve the (a, b) tile + schedules for this prefill geometry
+    def _get_prefill(self, bucket: int):
+        """Jitted (prefill into a fresh row + scatter into slot) per bucket."""
+        if bucket in self._prefill_fns:
+            return self._prefill_fns[bucket]
+        cfg, ctx = self.cfg, self.ctx
+        n = ctx.sp_size
+        if self.attn_plan.autotune and n > 1:
+            # resolve the (a, b) tile + schedules for this bucket geometry
             # through the on-disk plan cache BEFORE tracing, so repeated
             # serve launches skip the simulator entirely.  The key must match
             # what dispatch computes at trace time: activations inherit the
             # PARAM dtype (q flows from the embedding), not the cache dtype.
-            # (with_backward stays at the plan default for the same reason —
-            # a fwd-only tuning mode needs a serve-aware ParallelCtx first.)
             act_dtype = jax.tree.leaves(self.params)[0].dtype
             dispatch.plan_schedules(
                 self.attn_plan,
                 CommModel(
-                    seq=S0,
-                    hidden=self.cfg.num_heads * self.cfg.hd,
-                    n=self.ctx.sp_size,
-                    kv_hidden=self.cfg.num_kv_heads * self.cfg.hd,
+                    seq=bucket,
+                    hidden=cfg.num_heads * cfg.hd,
+                    n=n,
+                    kv_hidden=cfg.num_kv_heads * cfg.hd,
                     bytes_per_elem=jnp.dtype(act_dtype).itemsize,
-                    batch=B,
+                    batch=1,
                 ),
             )
-        cache = tfm.init_cache(self.cfg, B, self.max_seq, dtype=self.cache_dtype, ctx=self.ctx)
-        tokens = jnp.asarray(prompts, jnp.int32)
-        n = self.ctx.sp_size
-        if n > 1 and self.cfg.causal_layout == "striped":
+        if n > 1 and cfg.causal_layout == "striped":
             from repro.core.tiling import stripe_permutation
 
-            perm = jnp.asarray(stripe_permutation(S0, n))
-            tokens = tokens[:, perm]
-            positions = perm.astype(jnp.int32)
+            perm = np.asarray(stripe_permutation(bucket, n))
         else:
-            positions = jnp.arange(S0, dtype=jnp.int32)
-        batch = {
-            "tokens": tokens,
-            "positions": positions,
-            **self._aux_inputs(B),
-        }
-        logits, cache = self._prefill(self.params, batch, cache)
-        cur = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out = [cur]
-        for _ in range(max_new_tokens - 1):
-            cur, cache, _ = self._decode(self.params, cache, cur)
-            out.append(cur)
-        return np.asarray(jnp.concatenate(out, axis=1))
+            perm = np.arange(bucket)
+        positions = jnp.asarray(perm, jnp.int32)
+        self.prefill_trace_counts.setdefault(bucket, 0)
+
+        def fn(params, cache, tokens, length, slot):
+            self.prefill_trace_counts[bucket] += 1  # trace-time only
+            # striping is the serving analogue of the data pipeline's §3.7
+            # permutation: token at index j carries true position perm[j]
+            toks = tokens[:, perm]
+            batch = {
+                "tokens": toks,
+                "positions": positions,
+                "length": jnp.reshape(length, (1,)),
+                **self._aux_inputs(1),
+            }
+            row = tfm.init_cache(cfg, 1, self.max_seq, dtype=self.cache_dtype, ctx=ctx)
+            logits, row = tfm.prefill(params, cfg, ctx, batch, row)
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [1,1]
+
+            def insert(big, small):
+                ax = 1 if big.ndim > 1 else 0  # pos is [B]; all else [L,B,...]
+                return lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), slot, axis=ax
+                )
+
+            return jax.tree.map(insert, cache, row), first
+
+        jitted = jax.jit(fn)
+        self._prefill_fns[bucket] = jitted
+        return jitted
+
+    # -- streaming API ------------------------------------------------------
+
+    def submit(
+        self, prompt: np.ndarray, max_new_tokens: int = 16, arrival_tick: int = 0
+    ) -> int:
+        """Queue one request; returns its rid.  ``arrival_tick`` defers
+        admission until the engine clock reaches it (trace replay)."""
+        req = self.scheduler.submit(prompt, max_new_tokens, arrival_tick)
+        return req.rid
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_work
+
+    def _finish(self, slot: int) -> Request:
+        req = self.scheduler.retire(slot, self._tick)
+        self._finished[req.rid] = req
+        return req
+
+    def _req_done(self, req: Request, tok: int) -> bool:
+        if self.eos_id is not None and tok == self.eos_id:
+            return True
+        return len(req.generated) >= req.max_new_tokens
+
+    def step(self) -> List[Request]:
+        """One engine tick: admit+prefill into free slots, then one jitted
+        decode over ALL slots.  Returns requests finished this tick."""
+        finished: List[Request] = []
+        # 1. admission: bucketed prefill straight into assigned slot rows
+        for slot, req in self.scheduler.admit(self._tick):
+            bucket = self.scheduler.bucket_for(len(req.prompt))
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, : len(req.prompt)] = req.prompt
+            fn = self._get_prefill(bucket)
+            self._cache, first = fn(
+                self.params,
+                self._cache,
+                jnp.asarray(toks),
+                jnp.asarray(len(req.prompt), jnp.int32),
+                jnp.asarray(slot, jnp.int32),
+            )
+            tok = int(np.asarray(first)[0, 0])
+            req.generated.append(tok)
+            req.first_token_tick = self._tick
+            self._cur[slot, 0] = tok
+            if self._req_done(req, tok):
+                finished.append(self._finish(slot))
+        # 2. one decode step over every slot (mixed depths via pos: [B])
+        active = self.scheduler.active_slots()
+        if active:
+            nxt, self._cache, _ = self._decode(
+                self.params, self._cache, jnp.asarray(self._cur)
+            )
+            nxt_np = np.asarray(nxt)
+            for slot in active:
+                req = self.scheduler.slots[slot]
+                tok = int(nxt_np[slot, 0])
+                req.generated.append(tok)
+                self._cur[slot, 0] = tok
+                if self._req_done(req, tok):
+                    finished.append(self._finish(slot))
+        self._tick += 1
+        return finished
+
+    def run(self) -> Dict[int, Request]:
+        """Drain the queue; returns {rid: finished Request}."""
+        while self.has_work:
+            self.step()
+        return dict(self._finished)
+
+    # -- legacy static-batch API --------------------------------------------
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 16) -> np.ndarray:
+        """prompts: [B, S0] int32.  Greedy decoding; returns [B,
+        max_new_tokens].  A thin wrapper over the streaming path: B requests
+        arrive at once and are served by the slot pool (in waves when B >
+        num_slots).  The striped prompt permutation (§3.7) happens inside the
+        bucketed prefill."""
+        prompts = np.asarray(prompts, np.int32)
+        rids = [self.submit(prompts[i], max_new_tokens, self._tick) for i in range(len(prompts))]
+        self.run()
+        out = []
+        for rid in rids:
+            row = self._finished.pop(rid).generated[:max_new_tokens]
+            row = row + [self.eos_id or 0] * (max_new_tokens - len(row))
+            out.append(row)
+        return np.asarray(out, np.int32)

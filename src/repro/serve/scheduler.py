@@ -1,0 +1,168 @@
+"""Continuous-batching scheduler: request queue over a fixed slot pool.
+
+Pure-python bookkeeping (no jax): the engine owns the device arrays, this
+module owns WHO occupies WHICH slot WHEN.  Lifecycle of a request:
+
+    submit() -> queued -> admit() assigns a free slot (FIFO among arrived
+    requests) -> prefill fills the slot row -> the slot decodes every tick ->
+    retire() on EOS / max_new_tokens -> slot returns to the free pool.
+
+Prompts are right-padded to a **bucket** length for prefill so the number of
+jit traces is bounded by ``len(buckets)``, not by the mix of prompt lengths
+(``exact=True`` disables padding for SSM/hybrid archs, whose recurrent state
+has no pad-correction — there the trace count is bounded by the number of
+distinct prompt lengths instead).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["Request", "Scheduler", "default_buckets"]
+
+
+def default_buckets(max_seq: int, n: int = 1, lo: int = 16) -> Tuple[int, ...]:
+    """Power-of-two bucket ladder up to the cache capacity; every bucket is a
+    multiple of the sequence-parallel size n (striping requirement)."""
+    lo = max(lo, n)
+    out = []
+    b = 1
+    while b < lo:
+        b *= 2
+    while b < max_seq:
+        if b % max(n, 1) == 0:
+            out.append(b)
+        b *= 2
+    out.append(max_seq)
+    return tuple(dict.fromkeys(out))
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S0] int32
+    max_new_tokens: int
+    arrival_tick: int = 0
+    # filled in by the engine as the request progresses:
+    generated: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    admit_tick: Optional[int] = None
+    first_token_tick: Optional[int] = None
+    finish_tick: Optional[int] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finish_tick is not None
+
+
+class Scheduler:
+    """Admission + slot assignment + retirement over ``num_slots`` slots."""
+
+    def __init__(
+        self,
+        num_slots: int,
+        buckets: Sequence[int],
+        max_seq: int,
+        *,
+        exact: bool = False,
+        multiple: int = 1,
+        chunk: Optional[int] = None,
+    ):
+        if num_slots < 1:
+            raise ValueError("need at least one slot")
+        self.num_slots = num_slots
+        self.multiple = max(1, multiple)  # sequence-parallel divisibility
+        self.chunk = chunk  # SSD scan chunk (exact mode only)
+        self.buckets = tuple(sorted(set(buckets)))
+        if not self.buckets or self.buckets[-1] > max_seq:
+            raise ValueError(f"buckets {buckets} must be non-empty and <= max_seq={max_seq}")
+        self.max_seq = max_seq
+        self.exact = exact
+        self.slots: List[Optional[Request]] = [None] * num_slots
+        self._queue: List[Request] = []
+        self._next_rid = 0
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int, arrival_tick: int = 0) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if len(prompt) + max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt({len(prompt)}) + max_new_tokens({max_new_tokens}) exceeds "
+                f"cache capacity {self.max_seq}"
+            )
+        self.bucket_for(len(prompt))  # raise early on un-bucketable prompts
+        req = Request(self._next_rid, prompt, max_new_tokens, arrival_tick)
+        self._next_rid += 1
+        self._queue.append(req)
+        return req
+
+    def bucket_for(self, length: int) -> int:
+        """Smallest bucket >= length (or the exact length in exact mode)."""
+        if length < 1 or length > self.max_seq:
+            raise ValueError(f"prompt length {length} outside (0, {self.max_seq}]")
+        if self.exact:
+            # no padding available, so the prompt itself must satisfy the
+            # sequence-parallel divisibility (hybrid archs still shard
+            # attention prefill over the model axis)
+            if length % self.multiple:
+                raise ValueError(
+                    f"exact prefill (SSM/hybrid archs) needs the prompt length to be "
+                    f"a multiple of the sequence-parallel size {self.multiple}; got {length}"
+                )
+            local = length // self.multiple
+            if self.chunk is not None and local > self.chunk and local % self.chunk:
+                raise ValueError(
+                    f"the SSD chunked scan needs the per-device prompt length "
+                    f"({local}) to be <= or a multiple of the chunk ({self.chunk})"
+                )
+            return length
+        for b in self.buckets:
+            if b >= length:
+                return b
+        raise ValueError(f"prompt length {length} exceeds largest bucket {self.buckets[-1]}")
+    # -- per-tick operations ------------------------------------------------
+
+    def admit(self, tick: int) -> List[Tuple[int, Request]]:
+        """Assign arrived queued requests to free slots, FIFO.  Returns
+        [(slot, request)] for the engine to prefill."""
+        assigned = []
+        for slot in range(self.num_slots):
+            if self.slots[slot] is not None:
+                continue
+            req = next(
+                (r for r in self._queue if r.arrival_tick <= tick), None
+            )
+            if req is None:
+                break
+            self._queue.remove(req)
+            req.slot, req.admit_tick = slot, tick
+            self.slots[slot] = req
+            assigned.append((slot, req))
+        return assigned
+
+    def retire(self, slot: int, tick: int) -> Request:
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is already free")
+        req.finish_tick = tick
+        self.slots[slot] = None
+        return req
+
+    # -- introspection ------------------------------------------------------
+
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(r is not None for r in self.slots)

@@ -341,6 +341,161 @@ def check_striped_decode():
     return {"max_err": max_err}
 
 
+def check_decode_edge():
+    """sharded_cache_decode/update edge cases on 8 fake devices: contiguous
+    layout, sliding-window banding, empty-shard (den == 0) safety, and the
+    per-slot position vector (mixed depths == per-row scalar decode)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+
+    from repro.core.decode_attention import sharded_cache_decode, sharded_cache_update
+    from repro.kernels import ref
+
+    n = 8
+    mesh = jax.make_mesh((n,), ("sp",))
+    B, H, Hkv, D = 2, 4, 2, 8
+    m = 4  # local slots: global capacity n*m = 32
+    T = 12
+    qs = jax.random.normal(jax.random.PRNGKey(5), (T, B, 1, H, D))
+    ks = jax.random.normal(jax.random.PRNGKey(6), (T, B, 1, Hkv, D))
+    vs = jax.random.normal(jax.random.PRNGKey(7), (T, B, 1, Hkv, D))
+
+    def build(layout, window=None, vec_pos=False):
+        pos_spec = P(None) if vec_pos else P()
+
+        def upd(kc, vc, kn, vn, pos):
+            return sharded_cache_update(kc, vc, kn, vn, pos, "sp", n, layout=layout)
+
+        def dec(q, kc, vc, pos):
+            return sharded_cache_decode(
+                q, kc, vc, pos, "sp", n, layout=layout, window=window
+            )
+
+        upd_f = jax.jit(shard_map(
+            upd, mesh=mesh,
+            in_specs=(P(None, "sp"), P(None, "sp"), P(None, None), P(None, None), pos_spec),
+            out_specs=(P(None, "sp"), P(None, "sp")),
+            check_vma=False,
+        ))
+        dec_f = jax.jit(shard_map(
+            dec, mesh=mesh,
+            in_specs=(P(None, None), P(None, "sp"), P(None, "sp"), pos_spec),
+            out_specs=P(None, None),
+            check_vma=False,
+        ))
+        return upd_f, dec_f
+
+    results = {}
+    # 1+2+3: contiguous layout and striped+window, stepwise vs the dense
+    # oracle.  Early steps (t < n under striping, t < m under contiguous)
+    # leave most shards EMPTY — exercising the den == 0 psum guard.
+    for name, layout, window in (
+        ("contiguous", "contiguous", None),
+        ("striped_window", "striped", 5),
+        ("contiguous_window", "contiguous", 5),
+    ):
+        upd_f, dec_f = build(layout, window)
+        k_cache = jnp.zeros((B, n * m, Hkv, D))
+        v_cache = jnp.zeros((B, n * m, Hkv, D))
+        max_err = 0.0
+        for t in range(T):
+            pos = jnp.int32(t)
+            k_cache, v_cache = upd_f(k_cache, v_cache, ks[t], vs[t], pos)
+            o = dec_f(qs[t], k_cache, v_cache, pos)
+            assert not np.isnan(np.asarray(o)).any(), (name, t, "NaN")
+            band = (t, 0, 0, (window - 1) if window else ref.BAND_INF)
+            o_ref, _ = ref.attention_ref(
+                qs[t],
+                ks[: t + 1, :, 0].transpose(1, 0, 2, 3),
+                vs[: t + 1, :, 0].transpose(1, 0, 2, 3),
+                band=band,
+            )
+            max_err = max(max_err, float(jnp.max(jnp.abs(o - o_ref))))
+        assert max_err < 2e-5, (name, max_err)
+        results[name] = max_err
+
+    # 4: per-slot position vector — rows at different depths in ONE call must
+    # equal each row decoded alone at its own scalar depth
+    for layout in ("striped", "contiguous"):
+        upd_s, dec_s = build(layout)
+        upd_v, dec_v = build(layout, vec_pos=True)
+        depths = (3, 9)  # row 0 shallow, row 1 deep
+        caches = []
+        for b, depth in enumerate(depths):
+            kc = jnp.zeros((1, n * m, Hkv, D))
+            vc = jnp.zeros((1, n * m, Hkv, D))
+            for t in range(depth):
+                kc, vc = upd_s(kc, vc, ks[t, b : b + 1], vs[t, b : b + 1], jnp.int32(t))
+            caches.append((kc, vc))
+        kc = jnp.concatenate([c[0] for c in caches], axis=0)
+        vc = jnp.concatenate([c[1] for c in caches], axis=0)
+        pos_vec = jnp.asarray(depths, jnp.int32)
+        # vector update writes each row at its own position...
+        t = max(depths)  # any step index for fresh K/V
+        kc2, vc2 = upd_v(kc, vc, ks[t], vs[t], pos_vec)
+        o_vec = dec_v(qs[t], kc2, vc2, pos_vec)
+        # ...and must match the per-row scalar path exactly
+        max_err = 0.0
+        for b, depth in enumerate(depths):
+            kb, vb = upd_s(
+                caches[b][0], caches[b][1],
+                ks[t, b : b + 1], vs[t, b : b + 1], jnp.int32(depth),
+            )
+            o_b = dec_s(qs[t, b : b + 1], kb, vb, jnp.int32(depth))
+            max_err = max(max_err, float(jnp.max(jnp.abs(o_vec[b : b + 1] - o_b))))
+        assert max_err == 0.0, (layout, "vector pos != scalar pos", max_err)
+        results[f"vec_pos_{layout}"] = max_err
+    return results
+
+
+def check_serve_stream():
+    """Continuous batching on a (2,4) mesh: a mixed-length arrival trace is
+    served with slots at different depths decoding in one jitted step per
+    tick; every request's tokens equal sequential single-request generation,
+    and jit retraces are bounded by the bucket set."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import transformer as tfm
+    from repro.parallel.context import ParallelCtx
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config("granite-8b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(3)
+    trace = [(16, 0), (32, 1), (64, 2), (16, 4)]
+    prompts = [
+        rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32) for ln, _ in trace
+    ]
+    new_tokens = 6
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    ctx = ParallelCtx(mesh=mesh, batch_axes=("data",), sp_axis="model",
+                      block_q=8, block_kv=8)
+    eng = ServeEngine(cfg, params, ctx=ctx, max_seq=128, num_slots=3)
+    rids = [
+        eng.submit(p, max_new_tokens=new_tokens, arrival_tick=tick)
+        for p, (_, tick) in zip(prompts, trace)
+    ]
+    finished = eng.run()
+    assert sum(eng.prefill_trace_counts.values()) == len({16, 32, 64})
+    assert eng.decode_trace_count == 1, eng.decode_trace_count
+
+    # sequential single-request oracle on a single device
+    seq_eng = ServeEngine(cfg, params, max_seq=128, num_slots=1)
+    for rid, p in zip(rids, prompts):
+        ref_out = seq_eng.generate(p[None, :], max_new_tokens=new_tokens)
+        got = finished[rid].generated
+        assert got == ref_out[0].tolist(), (rid, got, ref_out[0].tolist())
+    return {
+        "tokens": {rid: finished[rid].generated for rid in rids},
+        "prefill_traces": dict(eng.prefill_trace_counts),
+    }
+
+
 def check_dispatch_seam():
     """The unified dispatch entry (registry + autotuned plan cache) ==
     single-device oracle for every backend it can route on this mesh."""
@@ -684,8 +839,10 @@ CHECKS = {
     "ring_eq": check_ring_equals_mesh_a1,
     "ulysses": check_ulysses,
     "decode": check_striped_decode,
+    "decode_edge": check_decode_edge,
     "train_dist": check_train_distributed,
     "serve_dist": check_serve_distributed,
+    "serve_stream": check_serve_stream,
     "mla_wire": check_mla_latent_wire,
     "moe_ep": check_moe_ep_manual,
     "collective_mode": check_collective_mode,

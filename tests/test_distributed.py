@@ -34,8 +34,9 @@ def _run_checks(*names, timeout=900):
 
 
 def test_mesh_attention_forward_and_baselines():
-    """Fwd for every (a,b) x mask x GQA; ring == mesh(a=1); ulysses; decode."""
-    report = _run_checks("mesh_fwd", "ring_eq", "ulysses", "decode")
+    """Fwd for every (a,b) x mask x GQA; ring == mesh(a=1); ulysses; decode
+    (incl. contiguous/window/empty-shard/vector-pos edge cases)."""
+    report = _run_checks("mesh_fwd", "ring_eq", "ulysses", "decode", "decode_edge")
     assert max(report["mesh_fwd"]["detail"].values()) < 2e-5
 
 
@@ -53,8 +54,9 @@ def test_mesh_attention_with_pallas_kernels():
 def test_distributed_train_and_serve():
     """End-to-end on fake meshes: FSDP+CP training with int8 cross-pod
     gradient compression, injected crash, elastic resume on a different mesh
-    shape; distributed serving == single-device generation."""
-    _run_checks("train_dist", "serve_dist")
+    shape; distributed serving == single-device generation; a continuous-
+    batching mixed-length trace == sequential single-request generation."""
+    _run_checks("train_dist", "serve_dist", "serve_stream")
 
 
 def test_beyond_paper_variants():

@@ -1,0 +1,264 @@
+"""Continuous-batching serve stack: scheduler logic, slot-pool engine, and
+the vectorized-position decode path (single device; the multi-device trace
+replay goes through dist_check in tests/test_distributed.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as tfm
+from repro.parallel.context import ParallelCtx
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import Scheduler, default_buckets
+
+CTX = ParallelCtx()
+
+
+# --------------------------------------------------------------------------
+# scheduler (pure python)
+# --------------------------------------------------------------------------
+
+
+def test_default_buckets_ladder():
+    assert default_buckets(128, 1) == (16, 32, 64, 128)
+    assert default_buckets(128, 8) == (16, 32, 64, 128)
+    # every bucket a multiple of n; cap always present
+    bs = default_buckets(96, 8)
+    assert all(b % 8 == 0 for b in bs) and bs[-1] == 96
+
+
+def test_scheduler_admission_fifo_and_retire():
+    s = Scheduler(2, (16, 32), 64)
+    r0 = s.submit(np.arange(8), 4, arrival_tick=0)
+    r1 = s.submit(np.arange(16), 4, arrival_tick=0)
+    r2 = s.submit(np.arange(8), 4, arrival_tick=1)
+    # tick 0: two free slots, FIFO among arrived requests; r2 not arrived yet
+    assigned = s.admit(0)
+    assert [(sl, r.rid) for sl, r in assigned] == [(0, r0.rid), (1, r1.rid)]
+    assert s.admit(0) == [] and s.pending == 1
+    # r2 arrives but no slot is free until one retires
+    assert s.admit(1) == []
+    done = s.retire(0, tick=3)
+    assert done.rid == r0.rid and done.finish_tick == 3
+    assigned = s.admit(4)
+    assert [(sl, r.rid) for sl, r in assigned] == [(0, r2.rid)]
+    assert s.active_slots() == [0, 1] and not s.pending
+    s.retire(1, tick=5)
+    with pytest.raises(ValueError):
+        s.retire(1, tick=5)  # already free
+
+
+def test_scheduler_bucketing_and_validation():
+    s = Scheduler(1, (16, 32), 48)
+    assert s.bucket_for(1) == 16
+    assert s.bucket_for(16) == 16
+    assert s.bucket_for(17) == 32
+    with pytest.raises(ValueError):
+        s.submit(np.arange(40), 16)  # 40 + 16 > 48
+    with pytest.raises(ValueError):
+        s.submit(np.arange(8), 0)
+    with pytest.raises(ValueError):
+        s.bucket_for(33)  # no bucket can hold it
+    exact = Scheduler(1, (16,), 64, exact=True)
+    assert exact.bucket_for(13) == 13  # SSM archs: no pad-correction
+    # exact mode cannot pad its way to sp divisibility (hybrid archs still
+    # shard attention prefill) -> reject at admission, not deep inside jit
+    exact_sp = Scheduler(1, (16,), 64, exact=True, multiple=4)
+    assert exact_sp.bucket_for(16) == 16
+    with pytest.raises(ValueError):
+        exact_sp.bucket_for(17)
+    # the SSD chunked scan: per-device length must be <= or a multiple of chunk
+    exact_chunk = Scheduler(1, (16,), 64, exact=True, chunk=8)
+    assert exact_chunk.bucket_for(6) == 6
+    assert exact_chunk.bucket_for(16) == 16
+    with pytest.raises(ValueError):
+        exact_chunk.bucket_for(12)
+
+
+# --------------------------------------------------------------------------
+# engine: slot pool, cache ownership, retrace bounds
+# --------------------------------------------------------------------------
+
+
+def _engine(**kw):
+    cfg = get_config("granite-8b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(1))
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("num_slots", 2)
+    return cfg, params, ServeEngine(cfg, params, **kw)
+
+
+def test_cache_allocated_once_across_generates(monkeypatch):
+    """The slot-pool cache is allocated in __init__ and reused: a second
+    generate() call must not allocate (or trace) anything new."""
+    calls = {"n": 0}
+    orig = tfm.init_cache
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(tfm, "init_cache", counting)
+    cfg, params, eng = _engine()
+    assert calls["n"] == 1  # the pool, eagerly, at construction
+    prompts = (np.arange(16, dtype=np.int32).reshape(2, 8) * 5) % cfg.vocab_size
+    out1 = eng.generate(prompts, max_new_tokens=4)
+    after_first = calls["n"]  # +1 per bucket TRACE (inside jit), not per call
+    out2 = eng.generate(prompts, max_new_tokens=4)
+    assert calls["n"] == after_first, "second generate re-allocated the cache"
+    np.testing.assert_array_equal(out1, out2)
+    assert eng.decode_trace_count == 1
+
+
+def test_retrace_bounded_by_buckets():
+    """Retraces are a function of the bucket set, not batch composition:
+    many prompt lengths and arrival patterns, two buckets, two traces."""
+    cfg, params, eng = _engine(num_slots=2, max_seq=64)
+    rng = np.random.default_rng(0)
+    lengths = [8, 16, 9, 30, 31, 12]  # -> buckets {16, 32} only
+    for i, ln in enumerate(lengths):
+        eng.submit(
+            rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32),
+            max_new_tokens=3,
+            arrival_tick=i // 3,
+        )
+    eng.run()
+    assert set(eng.prefill_trace_counts) == {16, 32}
+    assert all(v == 1 for v in eng.prefill_trace_counts.values())
+    assert eng.decode_trace_count == 1
+    # a fresh composition of the same buckets: zero new traces
+    for ln in (10, 20, 15):
+        eng.submit(rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32), 3)
+    eng.run()
+    assert all(v == 1 for v in eng.prefill_trace_counts.values())
+    assert eng.decode_trace_count == 1
+
+
+def test_continuous_matches_sequential():
+    """A mixed-length arrival trace (slots at different depths per tick,
+    padded prefill buckets) must reproduce sequential single-request
+    generation token-for-token."""
+    cfg, params, eng = _engine(num_slots=2, max_seq=64)
+    rng = np.random.default_rng(7)
+    trace = [(8, 0), (16, 0), (12, 2), (8, 3)]
+    prompts = [rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32) for ln, _ in trace]
+    rids = [
+        eng.submit(p, max_new_tokens=5, arrival_tick=t)
+        for p, (_, t) in zip(prompts, trace)
+    ]
+    finished = eng.run()
+    seq_eng = ServeEngine(cfg, params, max_seq=64, num_slots=1)
+    for rid, p in zip(rids, prompts):
+        ref = seq_eng.generate(p[None, :], max_new_tokens=5)
+        assert finished[rid].generated == ref[0].tolist(), rid
+
+
+def test_continuous_matches_sequential_hybrid():
+    """SSM/hybrid archs serve through the exact-prefill path (no padding:
+    the recurrent state has no pad-correction) and must still reproduce
+    sequential generation."""
+    cfg = get_config("hymba-1.5b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(4))
+    eng = ServeEngine(cfg, params, max_seq=64, num_slots=2)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32) for ln in (8, 16)]
+    rids = [eng.submit(p, max_new_tokens=4, arrival_tick=t) for p, t in zip(prompts, (0, 1))]
+    with pytest.raises(ValueError):  # 12 > chunk=8 and not a multiple of it
+        eng.submit(rng.integers(0, cfg.vocab_size, (12,), dtype=np.int32), 4)
+    finished = eng.run()
+    seq_eng = ServeEngine(cfg, params, max_seq=64, num_slots=1)
+    for rid, p in zip(rids, prompts):
+        ref = seq_eng.generate(p[None, :], max_new_tokens=4)
+        assert finished[rid].generated == ref[0].tolist(), rid
+
+
+def test_eos_retirement_frees_slot():
+    """A slot retiring on EOS is recycled for the queue; the finished
+    request keeps the tokens up to (and including) the EOS."""
+    cfg, params, _ = _engine()
+    base = ServeEngine(cfg, params, max_seq=64, num_slots=1)
+    prompt = (np.arange(8, dtype=np.int32) * 3) % cfg.vocab_size
+    ref = base.generate(prompt[None, :], max_new_tokens=6)[0].tolist()
+    eos = ref[2]  # force retirement at (no later than) the third token
+    stop = ref.index(eos) + 1
+    eng = ServeEngine(cfg, params, max_seq=64, num_slots=1, eos_id=eos)
+    r0 = eng.submit(prompt, max_new_tokens=6)
+    r1 = eng.submit(prompt[:4], max_new_tokens=2)
+    finished = eng.run()
+    assert finished[r0].generated == ref[:stop]  # stopped at EOS, inclusive
+    assert 1 <= len(finished[r1].generated) <= 2  # queued request got the slot
+    assert finished[r1].admit_tick >= finished[r0].finish_tick
+
+
+# --------------------------------------------------------------------------
+# vectorized-position decode: mixed depths == each request alone, bitwise
+# --------------------------------------------------------------------------
+
+
+def _prefill_one(cfg, params, prompt):
+    S = len(prompt)
+    cache = tfm.init_cache(cfg, 1, 32, dtype=jnp.float32)
+    batch = {
+        "tokens": jnp.asarray(prompt)[None, :],
+        "positions": jnp.arange(S, dtype=jnp.int32),
+    }
+    logits, cache = tfm.prefill(params, cfg, CTX, batch, cache)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+
+def test_mixed_depth_decode_bitwise():
+    """decode_step over slots at different depths (pos: [B]) must produce
+    BITWISE-identical logits to decoding each request in its own cache."""
+    cfg = get_config("granite-8b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(1)
+    pa = rng.integers(0, cfg.vocab_size, (8,), dtype=np.int32)
+    pb = rng.integers(0, cfg.vocab_size, (12,), dtype=np.int32)
+    ta, cache_a = _prefill_one(cfg, params, pa)
+    tb, cache_b = _prefill_one(cfg, params, pb)
+
+    def merge(a, b):
+        return jnp.concatenate([a, b], axis=1 if a.ndim > 1 else 0)
+
+    cache = jax.tree.map(merge, cache_a, cache_b)
+    np.testing.assert_array_equal(np.asarray(cache["pos"]), [8, 12])
+    toks = jnp.concatenate([ta, tb], axis=0)
+    step = jax.jit(lambda p, c, t: tfm.decode_step(p, c, t, cfg, CTX))
+    for _ in range(3):
+        toks, cache, logits = step(params, cache, toks)
+        ta, cache_a, la = step(params, cache_a, ta)
+        tb, cache_b, lb = step(params, cache_b, tb)
+        np.testing.assert_array_equal(np.asarray(logits[0]), np.asarray(la[0]))
+        np.testing.assert_array_equal(np.asarray(logits[1]), np.asarray(lb[0]))
+        np.testing.assert_array_equal(np.asarray(toks), np.asarray(jnp.concatenate([ta, tb], 0)))
+
+
+def test_padded_prefill_matches_exact():
+    """Bucketed (right-padded) prefill: logits at the true last token and the
+    subsequent decode are unaffected by pad tokens behind it."""
+    cfg = get_config("granite-8b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, (11,), dtype=np.int32)
+    t_exact, cache_exact = _prefill_one(cfg, params, prompt)
+
+    bucket = 16
+    toks = np.zeros((1, bucket), np.int32)
+    toks[0, : len(prompt)] = prompt
+    cache = tfm.init_cache(cfg, 1, 32, dtype=jnp.float32)
+    batch = {
+        "tokens": jnp.asarray(toks),
+        "positions": jnp.arange(bucket, dtype=jnp.int32),
+        "length": jnp.asarray([len(prompt)], jnp.int32),
+    }
+    logits, cache = tfm.prefill(params, cfg, CTX, batch, cache)
+    t_pad = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(t_pad), np.asarray(t_exact))
+    assert int(cache["pos"][0]) == len(prompt)
+    step = jax.jit(lambda p, c, t: tfm.decode_step(p, c, t, cfg, CTX))
+    for _ in range(4):  # decode overwrites each pad entry before reading it
+        t_pad, cache, lp = step(params, cache, t_pad)
+        t_exact, cache_exact, le = step(params, cache_exact, t_exact)
+        np.testing.assert_array_equal(np.asarray(lp), np.asarray(le))
