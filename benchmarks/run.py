@@ -374,6 +374,28 @@ for a in (1, 2, 4):
     return rows
 
 
+# ---- mask pruning: comm volume with/without a document mask ------------------------
+
+
+def bench_mesh_attention():
+    """Segment-masked vs unmasked comm volume on a (2,4) fake-device mesh:
+    simulated (event simulator over pruned schedules) AND measured (ppermute
+    bytes in the compiled HLO), per commit."""
+    from benchmarks.mesh_attention_bench import run_bench
+
+    payload = run_bench()
+    _save("mesh_attention_bench", payload)
+    sim_red = payload.get("sim_comm_reduction", 0.0)
+    meas_red = payload.get("measured_comm_reduction")
+    meas = f"{meas_red:.1%}" if meas_red is not None else "n/a"
+    _emit(
+        "mesh_attention_bench",
+        payload.get("measured", {}).get("pruned_wall_us", 0.0),
+        f"mask_comm_reduction sim={sim_red:.1%} measured={meas}",
+    )
+    return payload
+
+
 # ---- continuous-batching serve throughput/latency ---------------------------------
 
 
@@ -427,6 +449,7 @@ BENCHES = {
     "fig6_autotune": bench_fig6_autotune,
     "arch_tiles": bench_arch_tiles,
     "measured_mesh_attention": bench_measured_mesh_attention,
+    "mesh_attention_bench": bench_mesh_attention,
     "serve_bench": bench_serve,
     "roofline_table": bench_roofline_table,
 }

@@ -57,30 +57,25 @@ def run_bench(
 
     rng = np.random.default_rng(seed)
     lengths = [int(rng.choice([16, 32, 64])) for _ in range(requests)]
+    prompts = [rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32) for ln in lengths]
 
-    # warm the jit caches OUTSIDE the timed region: jit compiles on the
-    # first concrete call, so actually serve one throwaway request per
-    # distinct bucket (2 tokens each: compiles that bucket's prefill AND
-    # the shared decode step)
-    warm_lens = {}
-    for ln in lengths:
-        warm_lens.setdefault(eng.scheduler.bucket_for(ln), ln)
-    for ln in warm_lens.values():
-        eng.submit(
-            rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32),
-            max_new_tokens=min(2, max_seq - ln),
-        )
+    def submit_trace():
+        """Paired arrivals keep admission interleaved with decode (mixed-depth
+        slots) and exercise the packed (bucket, k) prefill paths."""
+        base = eng._tick
+        return [
+            eng.submit(p, max_new_tokens=new_tokens, arrival_tick=base + i // 2)
+            for i, p in enumerate(prompts)
+        ]
+
+    # warm the jit caches OUTSIDE the timed region by replaying the exact
+    # trace once: compiles every (bucket, pack-size) prefill the timed run
+    # will hit, plus the shared decode step
+    submit_trace()
     eng.run()
 
-    # one request per tick arrival pattern keeps admission interleaved with
-    # decode so the bench exercises mixed-depth slots, not a static batch
     base_tick = eng._tick
-    rids = []
-    for i, ln in enumerate(lengths):
-        prompt = rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32)
-        rids.append(
-            eng.submit(prompt, max_new_tokens=new_tokens, arrival_tick=base_tick + i // 2)
-        )
+    rids = submit_trace()
 
     t0 = time.perf_counter()
     while eng.has_work:
@@ -108,7 +103,7 @@ def run_bench(
         "tokens_per_s": total_tokens / max(total_wall, 1e-9),
         "latency_s": {"p50": _pct(lat, 50), "p95": _pct(lat, 95)},
         "first_token_s": {"p50": _pct(ttft, 50), "p95": _pct(ttft, 95)},
-        "prefill_traces": dict(eng.prefill_trace_counts),
+        "prefill_traces": {str(k): v for k, v in eng.prefill_trace_counts.items()},
         "decode_traces": eng.decode_trace_count,
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),

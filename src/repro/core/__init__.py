@@ -2,6 +2,8 @@
 
 Layers:
   tiling        — assignment-matrix tiling, groups, Table-1 chunk maps, striping
+  masking       — first-class MaskSpec: kernel band/segment operands, schedule
+                  block visibility (FULL/PARTIAL/EMPTY), mask-aware cost terms
   am            — communication-volume analytics (paper Table 2)
   schedule      — greedy intra-tile schedules (Algorithms 2/3)
   simulator     — lock-step overlap simulator (Figure-6 runtime estimation)
@@ -16,6 +18,7 @@ Layers:
 
 from repro.core.am import CommModel, mesh_volume, ring_volume, table2, ulysses_volume
 from repro.core.autotune import TilePlan, plan_for, tune
+from repro.core.masking import EMPTY, FULL, PARTIAL, MaskSpec
 from repro.core.schedule import (
     Profile,
     Schedule,

@@ -15,6 +15,7 @@ from typing import List, Optional, Tuple
 
 from repro.core import schedule as S
 from repro.core.am import CommModel
+from repro.core.masking import MaskSpec
 from repro.core.simulator import CostModel, HardwareModel, SimResult, make_cost_model, simulate
 from repro.core.tiling import factorizations
 
@@ -48,18 +49,38 @@ def _plan(
     causal: bool,
     with_backward: bool,
     allow_concurrent_rings: bool,
+    mask: Optional[MaskSpec] = None,
+    layout: str = "striped",
 ) -> TilePlan:
     b = comm.n // a
-    fwd_cost = make_cost_model(comm, hw, causal=causal, backward=False)
+    mask = mask if mask is not None else MaskSpec.from_flags(causal)
+    # mask-empty slot blocks are pruned from BOTH schedules (their dQ/dKV is
+    # zero), which shortens the simulated comm and compute alike.  An
+    # analytic seq that does not divide n has no well-defined chunking, so
+    # such plans stay unpruned (conservative).
+    skip: frozenset = frozenset()
+    if comm.seq % comm.n == 0:
+        skip = mask.empty_blocks(a, b, layout=layout, n=comm.n, seq=comm.seq)
+    fwd_cost = make_cost_model(comm, hw, backward=False, mask=mask)
+    bwd_cost = make_cost_model(comm, hw, backward=True, mask=mask)
+    if skip:
+        # visible_fraction averages over ALL a*b blocks, but the pruned
+        # schedule only runs the survivors — rescale so the per-block time
+        # reflects the visible work concentrated in the surviving blocks
+        concentrate = (a * b) / (a * b - len(skip))
+        fwd_cost = dataclasses.replace(fwd_cost, t_block=fwd_cost.t_block * concentrate)
+        bwd_cost = dataclasses.replace(bwd_cost, t_block=bwd_cost.t_block * concentrate)
     fwd_profile = fwd_cost.profile()
-    fwd = S.greedy_forward_schedule(a, b, fwd_profile, allow_concurrent_rings=allow_concurrent_rings)
+    fwd = S.greedy_forward_schedule(
+        a, b, fwd_profile, allow_concurrent_rings=allow_concurrent_rings, skip_blocks=skip
+    )
     S.validate_schedule(fwd, strict_paper=not allow_concurrent_rings)
     fwd_sim = simulate(fwd, fwd_cost, comm)
     bwd = bwd_sim = None
     if with_backward:
-        bwd_cost = make_cost_model(comm, hw, causal=causal, backward=True)
         bwd = S.greedy_backward_schedule(
-            a, b, bwd_cost.profile(), allow_concurrent_rings=allow_concurrent_rings
+            a, b, bwd_cost.profile(), allow_concurrent_rings=allow_concurrent_rings,
+            skip_blocks=skip,
         )
         S.validate_schedule(bwd, strict_paper=not allow_concurrent_rings)
         bwd_sim = simulate(bwd, bwd_cost, comm)
@@ -74,8 +95,15 @@ def tune(
     with_backward: bool = True,
     allow_concurrent_rings: bool = False,
     candidates: Optional[List[int]] = None,
+    mask: Optional[MaskSpec] = None,
+    layout: str = "striped",
 ) -> TilePlan:
-    """Figure-6 flow: profile -> greedy schedule -> simulate -> argmin."""
+    """Figure-6 flow: profile -> greedy schedule -> simulate -> argmin.
+
+    ``mask`` supersedes the legacy ``causal`` flag; mask structure changes
+    both the per-block cost (visible fraction) and the schedule itself
+    (pruned blocks/comm), so it can shift the optimal tile shape.
+    """
     if candidates is None:
         candidates = [a for a, _ in factorizations(comm.n)]
     plans = [
@@ -86,6 +114,8 @@ def tune(
             causal=causal,
             with_backward=with_backward,
             allow_concurrent_rings=allow_concurrent_rings,
+            mask=mask,
+            layout=layout,
         )
         for a in candidates
     ]
@@ -100,6 +130,8 @@ def plan_for(
     causal: bool = False,
     with_backward: bool = True,
     allow_concurrent_rings: bool = False,
+    mask: Optional[MaskSpec] = None,
+    layout: str = "striped",
 ) -> TilePlan:
     """Plan for a fixed tile height (a=1 reproduces Ring-Attention)."""
     return _plan(
@@ -109,4 +141,6 @@ def plan_for(
         causal=causal,
         with_backward=with_backward,
         allow_concurrent_rings=allow_concurrent_rings,
+        mask=mask,
+        layout=layout,
     )

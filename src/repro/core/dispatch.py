@@ -39,9 +39,10 @@ from repro.core import autotune
 from repro.core import schedule as S
 from repro.core.am import CommModel
 from repro.core.decode_attention import sharded_cache_decode, sharded_cache_update
+from repro.core.masking import MaskSpec
 from repro.core.mesh_attention import MeshAttentionConfig, mesh_attention, mesh_attention_wire
 from repro.core.simulator import HardwareModel
-from repro.core.tiling import best_square_a
+from repro.core.tiling import best_square_a, stripe_permutation
 from repro.core.ulysses import ulysses_attention
 from repro.kernels import ops
 from repro.kernels.ref import BAND_INF
@@ -92,35 +93,48 @@ class AttentionPlanConfig:
     block_kv: int = 128
     bwd_wire: str = "qdod"
     allow_concurrent_rings: bool = False
+    mask: Optional[MaskSpec] = None  # first-class mask; supersedes causal/window
     # --- Figure-6 autotuning (simulator-planned tile + schedules) ---
     autotune: bool = False
     with_backward: bool = True
     hw_profile: str = "default"
     plan_cache_dir: Optional[str] = None  # None -> $REPRO_PLAN_CACHE_DIR or ~/.cache
 
+    def __post_init__(self):
+        if self.mask is not None and (self.causal or self.window is not None):
+            raise ValueError("pass either mask= or the legacy causal/window flags, not both")
+
     def resolved_backend(self) -> str:
         return resolve_backend_name(self)
+
+    def mask_spec(self) -> MaskSpec:
+        if self.mask is not None:
+            return self.mask
+        return MaskSpec.from_flags(self.causal, self.window)
 
 
 def plan_from_ctx(
     ctx,
     *,
-    causal: bool,
+    causal: bool = False,
     window: Optional[int] = None,
     layout: str = "striped",
     scale: Optional[float] = None,
     backend: Optional[str] = None,
+    mask: Optional[MaskSpec] = None,
 ) -> AttentionPlanConfig:
     """Derive the attention plan a ``ParallelCtx`` implies (the knobs the
-    model layers used to wire into ``MeshAttentionConfig`` by hand)."""
+    model layers used to wire into ``MeshAttentionConfig`` by hand).
+    ``mask`` supersedes the legacy causal/window pair."""
     impl = backend or ctx.attn_impl
     return AttentionPlanConfig(
         backend=impl,
         axis_name=ctx.sp_axis,
         n=ctx.sp_size,
         a=1 if impl == "ring" else ctx.mesh_a,
-        causal=causal,
-        window=window,
+        causal=causal if mask is None else False,
+        window=window if mask is None else None,
+        mask=mask,
         layout=layout,
         scale=scale,
         block_q=ctx.block_q,
@@ -147,7 +161,7 @@ class Backend:
     """
 
     name: str
-    apply: Optional[Callable] = None  # (q, k, v, cfg) -> o, local chunks
+    apply: Optional[Callable] = None  # (q, k, v, cfg, seg=None) -> o, local chunks
     step: Optional[Callable] = None  # decode step, see decode_attention_step
     description: str = ""
 
@@ -217,9 +231,12 @@ def clear_plan_cache(cfg: Optional[AttentionPlanConfig] = None) -> None:
 
 def _plan_key(cfg: AttentionPlanConfig, comm: CommModel, hw: HardwareModel) -> Tuple[str, dict]:
     """Cache key over everything the simulated plan depends on: the call's
-    shape/dtype geometry, device count, tile request, and hardware profile."""
+    shape/dtype geometry, device count, tile request, mask, layout, and
+    hardware profile.  The mask signature keeps masked and unmasked plans for
+    the same (shape, dtype, n, hw) from ever colliding — mask structure
+    changes both block cost and the pruned schedule."""
     desc = {
-        "v": 1,
+        "v": 2,
         "n": comm.n,
         "a": cfg.a,
         "seq": comm.seq,
@@ -227,7 +244,8 @@ def _plan_key(cfg: AttentionPlanConfig, comm: CommModel, hw: HardwareModel) -> T
         "kv_hidden": comm.kvh,
         "bytes_per_elem": comm.bytes_per_elem,
         "batch": comm.batch,
-        "causal": cfg.causal,
+        "mask": cfg.mask_spec().signature(),
+        "layout": cfg.layout,
         "with_backward": cfg.with_backward,
         "allow_concurrent_rings": cfg.allow_concurrent_rings,
         "hw_profile": cfg.hw_profile,
@@ -271,7 +289,8 @@ def plan_schedules(
             pass  # corrupt entry: fall through and re-plan
 
     kw = dict(
-        causal=cfg.causal,
+        mask=cfg.mask_spec(),
+        layout=cfg.layout,
         with_backward=cfg.with_backward,
         allow_concurrent_rings=cfg.allow_concurrent_rings,
     )
@@ -327,8 +346,9 @@ def _mesh_cfg(
         axis_name=cfg.axis_name,
         n=cfg.n,
         a=a,
-        causal=cfg.causal,
-        window=cfg.window,
+        causal=cfg.causal if cfg.mask is None else False,
+        window=cfg.window if cfg.mask is None else None,
+        mask=cfg.mask,
         layout=cfg.layout,
         scale=cfg.scale,
         fwd_schedule=fwd,
@@ -340,7 +360,7 @@ def _mesh_cfg(
     )
 
 
-def _mesh_apply(q, k, v, cfg: AttentionPlanConfig):
+def _mesh_apply(q, k, v, cfg: AttentionPlanConfig, seg=None):
     if cfg.autotune and cfg.n > 1:
         # inside shard_map q is the LOCAL chunk, so the CommModel geometry
         # would be wrong by a factor of n; distributed_attention resolves
@@ -350,28 +370,39 @@ def _mesh_apply(q, k, v, cfg: AttentionPlanConfig):
             "(use distributed_attention, or bake schedules via plan_schedules)"
         )
     a = cfg.a if cfg.a is not None else best_square_a(cfg.n)
-    return mesh_attention(q, k, v, _mesh_cfg(cfg, a=a))
+    return mesh_attention(q, k, v, _mesh_cfg(cfg, a=a), seg=seg)
 
 
-def _ring_apply(q, k, v, cfg: AttentionPlanConfig):
+def _ring_apply(q, k, v, cfg: AttentionPlanConfig, seg=None):
     """Ring-Attention as the (a=1, b=n) special case — one-block-per-step
     ring schedule, identical kernels and ring machinery (paper §2.2)."""
     fwd = S.ring_forward_schedule(cfg.n) if cfg.n > 1 else None
-    return mesh_attention(q, k, v, _mesh_cfg(cfg, a=1, fwd=fwd))
+    return mesh_attention(q, k, v, _mesh_cfg(cfg, a=1, fwd=fwd), seg=seg)
 
 
-def _ulysses_apply(q, k, v, cfg: AttentionPlanConfig):
+def _ulysses_apply(q, k, v, cfg: AttentionPlanConfig, seg=None):
     if cfg.layout != "contiguous":
         raise ValueError("Ulysses requires the contiguous layout")
+    spec = cfg.mask_spec()
+    if spec.kind == "block_sparse":
+        raise ValueError("Ulysses does not support block-sparse masks")
+    if spec.needs_segments and seg is None:
+        raise ValueError(f"mask kind {spec.kind!r} needs a segment-id operand")
     return ulysses_attention(
         q, k, v, cfg.axis_name, cfg.n,
-        causal=cfg.causal, window=cfg.window, scale=cfg.scale,
+        causal=spec.is_causal, window=spec.window, scale=cfg.scale, seg=seg,
     )
 
 
-def _local_flash_apply(q, k, v, cfg: AttentionPlanConfig):
+def _local_flash_apply(q, k, v, cfg: AttentionPlanConfig, seg=None):
+    spec = cfg.mask_spec()
+    if spec.kind == "block_sparse":
+        raise ValueError("block-sparse masks route through the mesh backend")
+    if spec.needs_segments and seg is None:
+        raise ValueError(f"mask kind {spec.kind!r} needs a segment-id operand")
     return ops.flash_attention(
-        q, k, v, causal=cfg.causal, window=cfg.window, scale=cfg.scale
+        q, k, v, causal=spec.is_causal, window=spec.window, scale=cfg.scale,
+        seg_q=seg, seg_kv=seg,
     )
 
 
@@ -387,7 +418,7 @@ def _decode_step_local(q, k_new, v_new, k_cache, v_cache, pos, cfg: AttentionPla
     return o, k_cache, v_cache
 
 
-def _decode_apply(q, k, v, cfg: AttentionPlanConfig):
+def _decode_apply(q, k, v, cfg: AttentionPlanConfig, seg=None):
     raise ValueError(
         "the 'decode' backend is step-wise (sequence-sharded KV cache); "
         "call repro.core.dispatch.decode_attention_step instead of "
@@ -422,9 +453,10 @@ register_backend(Backend(
 # --------------------------------------------------------------------------
 
 
-def attention_in_shard_map(q, k, v, cfg: AttentionPlanConfig):
-    """Registry-dispatched local op for callers already inside shard_map."""
-    return get_backend(resolve_backend_name(cfg)).apply(q, k, v, cfg)
+def attention_in_shard_map(q, k, v, cfg: AttentionPlanConfig, seg=None):
+    """Registry-dispatched local op for callers already inside shard_map.
+    ``seg`` is the LOCAL [S/n] int32 segment-id chunk (document masks)."""
+    return get_backend(resolve_backend_name(cfg)).apply(q, k, v, cfg, seg=seg)
 
 
 def _require_ctx(ctx, cfg: AttentionPlanConfig):
@@ -435,7 +467,7 @@ def _require_ctx(ctx, cfg: AttentionPlanConfig):
         )
 
 
-def distributed_attention(q, k, v, *, cfg: AttentionPlanConfig, ctx=None):
+def distributed_attention(q, k, v, *, cfg: AttentionPlanConfig, ctx=None, segments=None):
     """THE attention seam: every workload (train, prefill, benchmarks, tests)
     calls this with a declarative plan.
 
@@ -444,10 +476,24 @@ def distributed_attention(q, k, v, *, cfg: AttentionPlanConfig, ctx=None):
     data pipeline / serve engine handle the permutation).  ``ctx`` supplies
     the mesh + batch sharding for the ``shard_map`` wrapper; it is optional
     when the plan resolves to the local backend.
+
+    ``segments``: int32 [S] segment-id array for document/segment masks, in
+    the SAME order as q/k/v (the caller stripes it with the tokens).  For a
+    static ``MaskSpec.document`` mask it is synthesized (and striped) here
+    when omitted.
     """
+    mask_spec = cfg.mask_spec()
+    if segments is None and mask_spec.kind == "document":
+        seg_np = mask_spec.segment_array(int(q.shape[1]))
+        if cfg.layout == "striped" and cfg.n > 1:
+            seg_np = seg_np[stripe_permutation(int(q.shape[1]), cfg.n)]
+        segments = jnp.asarray(seg_np)
+    if segments is not None:
+        segments = jnp.asarray(segments, jnp.int32)
+
     name = resolve_backend_name(cfg)
     if name == "local-flash" or cfg.n <= 1:
-        return _local_flash_apply(q, k, v, cfg)
+        return _local_flash_apply(q, k, v, cfg, seg=segments)
 
     backend = get_backend(name)
     if backend.apply is None:
@@ -459,17 +505,26 @@ def distributed_attention(q, k, v, *, cfg: AttentionPlanConfig, ctx=None):
         # hashable MeshAttentionConfig before shard_map tracing begins
         a, fwd, bwd = plan_schedules(cfg, _comm_model_for(cfg, q, k))
         macfg = _mesh_cfg(cfg, a=a, fwd=fwd, bwd=bwd)
-        local = lambda q, k, v: mesh_attention(q, k, v, macfg)
+        local = lambda q, k, v, seg=None: mesh_attention(q, k, v, macfg, seg=seg)
     else:
-        local = lambda q, k, v: backend.apply(q, k, v, cfg)
+        local = lambda q, k, v, seg=None: backend.apply(q, k, v, cfg, seg=seg)
 
     spec = P(ctx.eff_batch_spec(q.shape[0]), cfg.axis_name, None, None)
+    if segments is None:
+        f = shard_map(
+            local,
+            mesh=ctx.shard_map_mesh(), in_specs=(spec, spec, spec), out_specs=spec,
+            check_vma=False,
+        )
+        return f(q, k, v)
     f = shard_map(
-        local,
-        mesh=ctx.shard_map_mesh(), in_specs=(spec, spec, spec), out_specs=spec,
+        lambda q, k, v, seg: local(q, k, v, seg=seg),
+        mesh=ctx.shard_map_mesh(),
+        in_specs=(spec, spec, spec, P(cfg.axis_name)),
+        out_specs=spec,
         check_vma=False,
     )
-    return f(q, k, v)
+    return f(q, k, v, segments)
 
 
 def decode_attention_step(
@@ -546,7 +601,9 @@ def decode_attention_step(
     return f(q, k_new, v_new, k_cache, v_cache, pos)
 
 
-def latent_wire_attention(q, wire, wire_params, kv_transform, *, cfg: AttentionPlanConfig, ctx):
+def latent_wire_attention(
+    q, wire, wire_params, kv_transform, *, cfg: AttentionPlanConfig, ctx, segments=None
+):
     """Mesh-Attention with a compressed KV wire (beyond-paper §Perf): the
     opaque ``wire`` chunk circulates on the KV ring and ``kv_transform(chunk,
     wire_params) -> (k, v)`` expands it per-head at first use (e.g. MLA's
@@ -555,13 +612,28 @@ def latent_wire_attention(q, wire, wire_params, kv_transform, *, cfg: AttentionP
     a = cfg.a if cfg.a is not None else best_square_a(cfg.n)
     macfg = _mesh_cfg(cfg, a=a)
 
-    def inner(q, wire, wp):
-        return mesh_attention_wire(q, wire, macfg, lambda chunk: kv_transform(chunk, wp))
-
     spec = P(ctx.eff_batch_spec(q.shape[0]), cfg.axis_name, None, None)
+    if segments is None:
+        def inner(q, wire, wp):
+            return mesh_attention_wire(q, wire, macfg, lambda chunk: kv_transform(chunk, wp))
+
+        f = shard_map(
+            inner,
+            mesh=ctx.shard_map_mesh(), in_specs=(spec, spec, P()), out_specs=spec,
+            check_vma=False,
+        )
+        return f(q, wire, wire_params)
+
+    def inner_seg(q, wire, wp, seg):
+        return mesh_attention_wire(
+            q, wire, macfg, lambda chunk: kv_transform(chunk, wp), seg=seg
+        )
+
     f = shard_map(
-        inner,
-        mesh=ctx.shard_map_mesh(), in_specs=(spec, spec, P()), out_specs=spec,
+        inner_seg,
+        mesh=ctx.shard_map_mesh(),
+        in_specs=(spec, spec, P(), P(cfg.axis_name)),
+        out_specs=spec,
         check_vma=False,
     )
-    return f(q, wire, wire_params)
+    return f(q, wire, wire_params, jnp.asarray(segments, jnp.int32))

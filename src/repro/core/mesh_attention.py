@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import schedule as S
+from repro.core.masking import MaskSpec
 from repro.core.tiling import TileLayout
 from repro.kernels import ops
 from repro.kernels.ref import BAND_INF, NEG_INF
@@ -45,7 +46,12 @@ __all__ = ["MeshAttentionConfig", "mesh_attention", "mesh_attention_with_lse"]
 
 @dataclasses.dataclass(frozen=True)
 class MeshAttentionConfig:
-    """Static configuration (hashable: it is a nondiff custom_vjp argument)."""
+    """Static configuration (hashable: it is a nondiff custom_vjp argument).
+
+    The mask is a first-class :class:`MaskSpec`; the legacy ``causal`` /
+    ``window`` booleans remain as a back-compat construction shim and are
+    normalized through :meth:`mask_spec`.
+    """
 
     axis_name: str
     n: int  # devices on the sequence-parallel axis
@@ -60,10 +66,13 @@ class MeshAttentionConfig:
     block_q: int = 128
     block_kv: int = 128
     allow_concurrent_rings: bool = False
+    mask: Optional[MaskSpec] = None  # takes precedence over causal/window
 
     def __post_init__(self):
         if self.n % self.a:
             raise ValueError(f"a={self.a} must divide n={self.n}")
+        if self.mask is not None and (self.causal or self.window is not None):
+            raise ValueError("pass either mask= or the legacy causal/window flags, not both")
         if self.window is not None and not self.causal:
             raise ValueError("sliding window requires causal=True")
         if self.bwd_wire not in ("odoq", "qdod"):
@@ -75,15 +84,36 @@ class MeshAttentionConfig:
     def b(self) -> int:
         return self.n // self.a
 
-    def schedules(self) -> Tuple[S.Schedule, S.Schedule]:
+    def mask_spec(self) -> MaskSpec:
+        if self.mask is not None:
+            return self.mask
+        return MaskSpec.from_flags(self.causal, self.window)
+
+    def schedules(self, seq: Optional[int] = None) -> Tuple[S.Schedule, S.Schedule]:
+        """(fwd, bwd) schedules, mask-pruned when the mask proves slot blocks
+        empty on every device.  ``seq`` is the GLOBAL sequence length (needed
+        to classify window/document blocks; None skips pruning)."""
+        skip: frozenset = frozenset()
+        if seq is not None:
+            skip = self.mask_spec().empty_blocks(
+                self.a, self.b, layout=self.layout, n=self.n, seq=seq
+            )
         fwd = self.fwd_schedule or S.greedy_forward_schedule(
-            self.a, self.b, allow_concurrent_rings=self.allow_concurrent_rings
+            self.a, self.b, allow_concurrent_rings=self.allow_concurrent_rings,
+            skip_blocks=skip,
         )
         bwd = self.bwd_schedule or S.greedy_backward_schedule(
-            self.a, self.b, allow_concurrent_rings=self.allow_concurrent_rings
+            self.a, self.b, allow_concurrent_rings=self.allow_concurrent_rings,
+            skip_blocks=skip,
         )
         if (fwd.a, fwd.b) != (self.a, self.b) or (bwd.a, bwd.b) != (self.a, self.b):
             raise ValueError("schedule shape mismatch with (a, b)")
+        for sched in (fwd, bwd):
+            # a provided schedule may skip fewer blocks (e.g. an unpruned
+            # baseline) but never blocks the mask cannot prove empty
+            extra = set(sched.skip) - set(skip) if seq is not None else None
+            if extra:
+                raise ValueError(f"schedule skips non-empty blocks: {sorted(extra)}")
         S.validate_schedule(fwd)
         S.validate_schedule(bwd)
         return fwd, bwd
@@ -99,19 +129,32 @@ def _band_for_block(cfg: MeshAttentionConfig, i, u: int, v: int, m_q: int, m_kv:
 
     striped layout: token t of global chunk c has position c + n*t  (stride n)
     contiguous layout: position c*m + t                              (stride 1)
+
+    The band carries the positional part of the mask (causal / window /
+    block-sparse bitmap); segment-id masking composes inside the kernel via
+    the seg operands the rings circulate alongside Q and KV.
     """
-    if not cfg.causal:
+    spec = cfg.mask_spec()
+    if spec.kind == "full":
         band = jnp.asarray([0, 0, -BAND_INF, BAND_INF], jnp.int32)
         return band, 1, 1
     qc = cfg.a * (i // cfg.a) + (i + u) % cfg.a  # global Q chunk (Table 1)
     kc = (i + cfg.a * v) % cfg.n  # global KV chunk (Table 1)
-    hi = (cfg.window - 1) if cfg.window else BAND_INF
+    if spec.kind == "block_sparse":
+        # chunk-level bitmap: a visible block is unmasked, an invisible one
+        # (kept lock-step because some OTHER device needs it) gets an
+        # impossible band (lo > hi) so its partial is exactly empty
+        vis = jnp.asarray(spec.bitmap, bool)[qc, kc]
+        full = jnp.asarray([0, 0, -BAND_INF, BAND_INF], jnp.int32)
+        none = jnp.asarray([0, 0, 1, 0], jnp.int32)
+        return jnp.where(vis, full, none), 1, 1
+    lo, hi = spec.band()  # causal kinds: 0 <= q_pos - kv_pos (<= window-1)
     if cfg.layout == "striped":
         q_off, kv_off, sq, skv = qc, kc, cfg.n, cfg.n
     else:
         q_off, kv_off, sq, skv = qc * m_q, kc * m_kv, 1, 1
     band = jnp.stack(
-        [q_off.astype(jnp.int32), kv_off.astype(jnp.int32), jnp.int32(0), jnp.int32(hi)]
+        [q_off.astype(jnp.int32), kv_off.astype(jnp.int32), jnp.int32(lo), jnp.int32(hi)]
     )
     return band, sq, skv
 
@@ -146,34 +189,46 @@ def _merge(acc: Optional[tuple], o, lse):
 # --------------------------------------------------------------------------
 
 
-def _fwd_program(q, k, v, cfg: MeshAttentionConfig, kv_transform=None):
+def _fwd_program(q, k, v, cfg: MeshAttentionConfig, kv_transform=None, seg=None):
     """kv_transform (beyond-paper, §Perf 'latent wire'): when given, ``k`` is
     an opaque wire buffer (e.g. MLA's compressed latent) circulated on the KV
     ring; it is expanded to per-head (k, v) ONCE per received chunk, at first
-    use.  Wire bytes drop from 2·Hkv·dk to the latent width."""
+    use.  Wire bytes drop from 2·Hkv·dk to the latent width.
+
+    ``seg`` (int32 [S/n], the local chunk of the segment-id array) rides the
+    rings alongside Q and KV for document/segment masks; mask-pruned blocks
+    are simply absent from the (possibly shorter) schedule, with the send
+    counters re-based so the surviving ring reduce stays aligned."""
     n, a, b = cfg.n, cfg.a, cfg.b
     lay = TileLayout(n, a)
     i = lax.axis_index(cfg.axis_name)
     scale = cfg.scale if cfg.scale is not None else q.shape[-1] ** -0.5
-    sched, _ = cfg.schedules()
+    sched, _ = cfg.schedules(n * q.shape[1])
 
     q_perm = lay.q_shift_perm()
     kv_perm = lay.kv_shift_perm()
 
-    qs: Dict[int, jnp.ndarray] = {0: q}
-    kvs: Dict[int, jnp.ndarray] = {0: k if kv_transform is not None else jnp.stack([k, v])}
+    # each slot buffer is (payload, seg-or-None): jax.tree.map ppermutes both
+    qs: Dict[int, tuple] = {0: (q, seg)}
+    kvs: Dict[int, tuple] = {
+        0: (k if kv_transform is not None else jnp.stack([k, v]), seg)
+    }
     kv_used: Dict[int, tuple] = {}
 
     def kv_at(slot: int):
         if slot not in kv_used:
+            buf, s_kv = kvs[slot]
             if kv_transform is not None:
-                kv_used[slot] = kv_transform(kvs[slot])
+                kk, vv = kv_transform(buf)
             else:
-                kv_used[slot] = (kvs[slot][0], kvs[slot][1])
+                kk, vv = buf[0], buf[1]
+            kv_used[slot] = (kk, vv, s_kv)
         return kv_used[slot]
 
     o_acc: Dict[int, Optional[tuple]] = {u: None for u in range(a)}
-    nq = nkv = nsend = 0
+    nq = nkv = 0
+    # leading sends over fully-pruned rows are absent; re-base the counter
+    nsend = (a - 1) - sum(1 for c in sched.comm_ops() if c == S.SEND_O)
 
     for step in sched.steps:
         # issue this step's communication first so XLA's latency-hiding
@@ -181,9 +236,11 @@ def _fwd_program(q, k, v, cfg: MeshAttentionConfig, kv_transform=None):
         recv_updates = []
         for comm in step.comms:
             if comm == S.RECV_Q:
-                recv_updates.append(("q", lax.ppermute(qs[nq], cfg.axis_name, q_perm)))
+                nxt = jax.tree.map(lambda x: lax.ppermute(x, cfg.axis_name, q_perm), qs[nq])
+                recv_updates.append(("q", nxt))
             elif comm == S.RECV_KV:
-                recv_updates.append(("kv", lax.ppermute(kvs[nkv], cfg.axis_name, kv_perm)))
+                nxt = jax.tree.map(lambda x: lax.ppermute(x, cfg.axis_name, kv_perm), kvs[nkv])
+                recv_updates.append(("kv", nxt))
             elif comm == S.SEND_O:
                 src = nsend + 1  # completed row being forwarded
                 dst = (nsend + 2) % a  # row whose partial arrives (Table 1)
@@ -196,11 +253,13 @@ def _fwd_program(q, k, v, cfg: MeshAttentionConfig, kv_transform=None):
                 raise ValueError(comm)
         for (u, vv) in step.compute:
             band, sq, skv = _band_for_block(cfg, i, u, vv, q.shape[1], k.shape[1])
-            kk, vv_t = kv_at(vv)
+            q_u, s_q = qs[u]
+            kk, vv_t, s_kv = kv_at(vv)
             o_b, l_b = ops.block_attention(
-                qs[u], kk, vv_t, band,
+                q_u, kk, vv_t, band,
                 scale=scale, stride_q=sq, stride_kv=skv,
                 block_q=cfg.block_q, block_kv=cfg.block_kv,
+                seg_q=s_q, seg_kv=s_kv,
             )
             o_acc[u] = _merge(o_acc[u], o_b, l_b)
         for kind, buf in recv_updates:
@@ -211,6 +270,9 @@ def _fwd_program(q, k, v, cfg: MeshAttentionConfig, kv_transform=None):
                 nkv += 1
                 kvs[nkv] = buf
 
+    if o_acc[0] is None:  # every local-row block mask-pruned
+        B, m, H = q.shape[0], q.shape[1], q.shape[2]
+        return jnp.zeros_like(q), jnp.full((B, H, m), NEG_INF, jnp.float32)
     o_f, lse_f = o_acc[0]
     return o_f.astype(q.dtype), lse_f
 
@@ -220,12 +282,12 @@ def _fwd_program(q, k, v, cfg: MeshAttentionConfig, kv_transform=None):
 # --------------------------------------------------------------------------
 
 
-def _bwd_program(cfg: MeshAttentionConfig, q, k, v, o, lse, do):
+def _bwd_program(cfg: MeshAttentionConfig, q, k, v, o, lse, do, seg=None):
     n, a, b = cfg.n, cfg.a, cfg.b
     lay = TileLayout(n, a)
     i = lax.axis_index(cfg.axis_name)
     scale = cfg.scale if cfg.scale is not None else q.shape[-1] ** -0.5
-    _, sched = cfg.schedules()
+    _, sched = cfg.schedules(n * q.shape[1])
 
     q_perm = lay.q_shift_perm()
     kv_perm = lay.kv_shift_perm()
@@ -237,12 +299,17 @@ def _bwd_program(cfg: MeshAttentionConfig, q, k, v, o, lse, do):
     bundle0 = {"q": q, "do": do, "lse": lse, "delta": delta}
     if cfg.bwd_wire == "odoq":
         bundle0["o"] = o
+    if seg is not None:
+        bundle0["seg"] = seg
 
     qb: Dict[int, dict] = {0: bundle0}
-    kvs: Dict[int, jnp.ndarray] = {0: jnp.stack([k, v])}
+    kvs: Dict[int, tuple] = {0: (jnp.stack([k, v]), seg)}
     dq_acc: Dict[int, Optional[jnp.ndarray]] = {u: None for u in range(a)}
     dkv_acc: Dict[int, Optional[jnp.ndarray]] = {u: None for u in range(b)}
-    nq = nkv = ndq = ndkv = 0
+    nq = nkv = 0
+    # leading sends over fully-pruned rows/cols are absent; re-base counters
+    ndq = (a - 1) - sum(1 for c in sched.comm_ops() if c == S.SEND_DQ)
+    ndkv = (b - 1) - sum(1 for c in sched.comm_ops() if c == S.SEND_DKV)
 
     def _add(cur, new):
         new = new.astype(jnp.float32)
@@ -255,7 +322,8 @@ def _bwd_program(cfg: MeshAttentionConfig, q, k, v, o, lse, do):
                 nxt = jax.tree.map(lambda x: lax.ppermute(x, cfg.axis_name, q_perm), qb[nq])
                 recv_updates.append(("q", nxt))
             elif comm == S.RECV_KV:
-                recv_updates.append(("kv", lax.ppermute(kvs[nkv], cfg.axis_name, kv_perm)))
+                nxt = jax.tree.map(lambda x: lax.ppermute(x, cfg.axis_name, kv_perm), kvs[nkv])
+                recv_updates.append(("kv", nxt))
             elif comm == S.SEND_DQ:
                 src, dst = ndq + 1, (ndq + 2) % a
                 got = lax.ppermute(dq_acc[src], cfg.axis_name, q_perm)
@@ -271,10 +339,12 @@ def _bwd_program(cfg: MeshAttentionConfig, q, k, v, o, lse, do):
         for (u, vv) in step.compute:
             band, sq, skv = _band_for_block(cfg, i, u, vv, q.shape[1], k.shape[1])
             bu = qb[u]
+            kv_buf, s_kv = kvs[vv]
             dq_b, dk_b, dv_b = ops.block_attention_bwd(
-                bu["q"], kvs[vv][0], kvs[vv][1], bu.get("o"), bu["lse"], bu["do"], band,
+                bu["q"], kv_buf[0], kv_buf[1], bu.get("o"), bu["lse"], bu["do"], band,
                 scale=scale, stride_q=sq, stride_kv=skv,
                 block_q=cfg.block_q, block_kv=cfg.block_kv, delta=bu["delta"],
+                seg_q=bu.get("seg"), seg_kv=s_kv,
             )
             dq_acc[u] = _add(dq_acc[u], dq_b)
             dkv_acc[vv] = _add(dkv_acc[vv], jnp.stack([dk_b, dv_b]))
@@ -286,8 +356,10 @@ def _bwd_program(cfg: MeshAttentionConfig, q, k, v, o, lse, do):
                 nkv += 1
                 kvs[nkv] = buf
 
-    dq = dq_acc[0].astype(q.dtype)
+    dq = jnp.zeros_like(q) if dq_acc[0] is None else dq_acc[0].astype(q.dtype)
     dkv = dkv_acc[0]
+    if dkv is None:
+        return dq, jnp.zeros_like(k), jnp.zeros_like(v)
     return dq, dkv[0].astype(k.dtype), dkv[1].astype(v.dtype)
 
 
@@ -315,25 +387,68 @@ def _mesh_attention_bwd(cfg, res, do):
 _mesh_attention.defvjp(_mesh_attention_fwd, _mesh_attention_bwd)
 
 
-def mesh_attention(q, k, v, cfg: MeshAttentionConfig):
+# variant with a segment-id operand (packed documents): the int32 chunk is a
+# traced argument whose cotangent is None
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _mesh_attention_seg(q, k, v, seg, cfg: MeshAttentionConfig):
+    o, _ = _fwd_program(q, k, v, cfg, seg=seg)
+    return o
+
+
+def _mesh_attention_seg_fwd(q, k, v, seg, cfg):
+    o, lse = _fwd_program(q, k, v, cfg, seg=seg)
+    return o, (q, k, v, seg, o, lse)
+
+
+def _mesh_attention_seg_bwd(cfg, res, do):
+    q, k, v, seg, o, lse = res
+    dq, dk, dv = _bwd_program(cfg, q, k, v, o, lse, do, seg=seg)
+    return dq, dk, dv, None
+
+
+_mesh_attention_seg.defvjp(_mesh_attention_seg_fwd, _mesh_attention_seg_bwd)
+
+
+def _local_band(cfg: MeshAttentionConfig):
+    """Static band for the n == 1 degenerate path."""
+    spec = cfg.mask_spec()
+    if spec.kind == "block_sparse":
+        if len(spec.bitmap) != cfg.n:
+            raise ValueError(
+                f"block_sparse bitmap is {len(spec.bitmap)}x{len(spec.bitmap)}, "
+                f"but the sequence is split n={cfg.n} ways"
+            )
+        return (0, 0, -BAND_INF, BAND_INF) if spec.bitmap[0][0] else (0, 0, 1, 0)
+    lo, hi = spec.band()
+    return (0, 0, lo, hi)
+
+
+def mesh_attention(q, k, v, cfg: MeshAttentionConfig, seg=None):
     """Distributed attention over the local chunks (call inside shard_map).
 
     q: [B, S/n, H, D]; k, v: [B, S/n, Hkv, D] -> o: [B, S/n, H, D].
-    Causal inputs must be striped (token t on chunk t mod n).
+    Causal inputs must be striped (token t on chunk t mod n).  ``seg`` is the
+    local [S/n] int32 segment-id chunk for document/segment masks.
     """
+    spec = cfg.mask_spec()
+    if spec.needs_segments and seg is None:
+        raise ValueError(f"mask kind {spec.kind!r} needs a segment-id operand")
     if cfg.n == 1:
         return ops.flash_attention(
-            q, k, v, causal=cfg.causal, window=cfg.window, scale=cfg.scale
+            q, k, v, band=_local_band(cfg), scale=cfg.scale,
+            seg_q=seg, seg_kv=seg,
         )
+    if seg is not None:
+        return _mesh_attention_seg(q, k, v, jnp.asarray(seg, jnp.int32), cfg)
     return _mesh_attention(q, k, v, cfg)
 
 
-def mesh_attention_with_lse(q, k, v, cfg: MeshAttentionConfig):
+def mesh_attention_with_lse(q, k, v, cfg: MeshAttentionConfig, seg=None):
     """Forward-only variant exposing the log-sum-exp (tests, serving)."""
-    return _fwd_program(q, k, v, cfg)
+    return _fwd_program(q, k, v, cfg, seg=seg)
 
 
-def mesh_attention_wire(q, wire, cfg: MeshAttentionConfig, kv_transform):
+def mesh_attention_wire(q, wire, cfg: MeshAttentionConfig, kv_transform, seg=None):
     """Mesh-Attention with a compressed KV wire (beyond-paper, §Perf).
 
     ``wire``: the per-device chunk of whatever representation should
@@ -342,5 +457,5 @@ def mesh_attention_wire(q, wire, cfg: MeshAttentionConfig, kv_transform):
     Differentiable by plain autodiff (no custom Alg-3 rule on this path);
     intended for forward-only prefill/serving.
     """
-    o, _ = _fwd_program(q, wire, None, cfg, kv_transform=kv_transform)
+    o, _ = _fwd_program(q, wire, None, cfg, kv_transform=kv_transform, seg=seg)
     return o

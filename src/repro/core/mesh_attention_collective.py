@@ -52,6 +52,8 @@ def mesh_attention_collective(
     scale: Optional[float] = None,
     block_q: int = 128,
     block_kv: int = 128,
+    mask=None,  # Optional[MaskSpec]; supersedes causal/window
+    seg: Optional[jnp.ndarray] = None,  # [m] int32 local segment-id chunk
 ) -> jnp.ndarray:
     a = lax.psum(1, q_axis)
     b = lax.psum(1, kv_axis)
@@ -61,11 +63,21 @@ def mesh_attention_collective(
     m = q.shape[1]
     if scale is None:
         scale = q.shape[-1] ** -0.5
+    if mask is not None:
+        causal = mask.is_causal
+        window = mask.window
+        if mask.needs_segments and seg is None:
+            raise ValueError(f"mask kind {mask.kind!r} needs a segment-id operand")
 
     # Algorithm 1 lines 1-2: group all-gathers
     qs = lax.all_gather(q, q_axis)  # [a, B, m, H, D]
     ks = lax.all_gather(k, kv_axis)  # [b, B, m, Hkv, D]
     vs = lax.all_gather(v, kv_axis)
+    seg_qs = seg_ks = None
+    if seg is not None:
+        seg = jnp.asarray(seg, jnp.int32)
+        seg_qs = lax.all_gather(seg, q_axis)  # [a, m]
+        seg_ks = lax.all_gather(seg, kv_axis)  # [b, m]
 
     hi = (window - 1) if (causal and window) else BAND_INF
 
@@ -96,6 +108,8 @@ def mesh_attention_collective(
                 qs[u], ks[w_], vs[w_], band,
                 scale=scale, stride_q=sq, stride_kv=skv,
                 block_q=block_q, block_kv=block_kv,
+                seg_q=None if seg_qs is None else seg_qs[u],
+                seg_kv=None if seg_ks is None else seg_ks[w_],
             )
             o_b = o_b.astype(jnp.float32)
             l_b = l_b.astype(jnp.float32)

@@ -20,6 +20,17 @@ Semantics of a step (lock-step across all devices, paper §3.2):
   * a ``recv_*`` issued in step s delivers its chunk at the END of step s:
     compute scheduled in step s may only use chunks received in steps < s;
   * a ``send_*`` issued in step s requires its payload complete in steps < s.
+
+Mask-aware pruning: the generators accept ``skip_blocks`` — slot blocks that
+a ``MaskSpec`` proved fully masked on EVERY device (``masking.empty_blocks``).
+Skipped blocks are never computed, and communication that only feeds skipped
+blocks is dropped under the ring constraints:
+  * receives are a forwarding pipeline (chunk u arrives after u hops), so only
+    the TRAILING recvs past the highest used slot can be dropped;
+  * sends are an accumulation chain (send #t carries contributions of rows
+    1..t), so only the LEADING sends whose whole prefix of rows is skipped
+    can be dropped.
+The schedule records its skip set so the executor and validator agree.
 """
 
 from __future__ import annotations
@@ -32,6 +43,7 @@ __all__ = [
     "Profile",
     "Step",
     "Schedule",
+    "comm_requirements",
     "greedy_forward_schedule",
     "greedy_backward_schedule",
     "naive_forward_schedule",
@@ -112,6 +124,7 @@ class Schedule:
     b: int
     direction: str  # "fwd" | "bwd"
     steps: Tuple[Step, ...]
+    skip: Tuple[Block, ...] = ()  # mask-pruned blocks (empty on every device)
 
     @property
     def n(self) -> int:
@@ -125,6 +138,49 @@ class Schedule:
 
     def blocks(self) -> List[Block]:
         return [blk for s in self.steps for blk in s.compute]
+
+
+def _norm_skip(a: int, b: int, skip_blocks) -> Tuple[Block, ...]:
+    skip = tuple(sorted((int(u), int(v)) for u, v in (skip_blocks or ())))
+    for (u, v) in skip:
+        if not (0 <= u < a and 0 <= v < b):
+            raise ValueError(f"skip block {(u, v)} out of range for ({a}, {b})")
+    if (0, 0) in skip:
+        raise ValueError("block (0, 0) is the local Q-KV block and is never empty")
+    return skip
+
+
+def comm_requirements(a: int, b: int, direction: str, skip: Sequence[Block]) -> Dict[str, int]:
+    """Expected comm-op counts for a (possibly pruned) schedule.
+
+    Receives: the ring forwards chunks hop by hop, so the number of recvs is
+    the highest used slot index.  Sends: send #t carries the accumulated
+    contributions of rows (columns) 1..t, so only a leading run of fully
+    skipped rows (columns) removes sends.
+    """
+    skip = set(skip)
+    used = [(u, v) for u in range(a) for v in range(b) if (u, v) not in skip]
+    max_u = max((u for u, _ in used), default=0)
+    max_v = max((v for _, v in used), default=0)
+
+    def lead_empty(total: int, full) -> int:
+        t = 0
+        while t + 1 < total and full(t + 1):
+            t += 1
+        return t
+
+    row_empty = lambda u: all((u, v) in skip for v in range(b))
+    col_empty = lambda v: all((u, v) in skip for u in range(a))
+    t0_rows = lead_empty(a, row_empty)
+    t0_cols = lead_empty(b, col_empty)
+    if direction == "fwd":
+        return {RECV_Q: max_u, RECV_KV: max_v, SEND_O: max(0, a - 1 - t0_rows)}
+    return {
+        RECV_ODOQ: max_u,
+        RECV_KV: max_v,
+        SEND_DQ: max(0, a - 1 - t0_rows),
+        SEND_DKV: max(0, b - 1 - t0_cols),
+    }
 
 
 # --------------------------------------------------------------------------
@@ -141,14 +197,23 @@ def _fwd_priority_order(a: int, b: int) -> List[Block]:
 
 
 class _TileState:
-    """Mutable tile progress shared by the schedule generators."""
+    """Mutable tile progress shared by the schedule generators.
 
-    def __init__(self, a: int, b: int, order: Sequence[Block]):
+    ``skip`` blocks are pre-marked done: never emitted as compute, but they
+    count toward row/column completion (their contribution is exactly empty).
+    """
+
+    def __init__(self, a: int, b: int, order: Sequence[Block], skip: Sequence[Block] = ()):
         self.a, self.b = a, b
         self.have_q = 1  # local slot 0 is present from the start
         self.have_kv = 1
-        self.done: set = set()
+        self.skip = set(skip)
+        self.done: set = set(self.skip)
         self.order = list(order)
+        used = [blk for blk in ((u, v) for u in range(a) for v in range(b)) if blk not in self.skip]
+        # slots actually read by some block: recvs beyond them are pruned
+        self.need_q = max((u for u, _ in used), default=0) + 1
+        self.need_kv = max((v for _, v in used), default=0) + 1
 
     def ready(self, blk: Block) -> bool:
         u, v = blk
@@ -183,6 +248,7 @@ def greedy_forward_schedule(
     profile: Optional[Profile] = None,
     *,
     allow_concurrent_rings: bool = False,
+    skip_blocks: Optional[Iterable[Block]] = None,
 ) -> Schedule:
     """Paper Algorithm 2.
 
@@ -195,23 +261,28 @@ def greedy_forward_schedule(
     ``allow_concurrent_rings`` is the beyond-paper TPU relaxation: the Q ring
     and KV ring live on different ICI dimensions, so one recv_q and one
     recv_kv may be issued in the same step (restriction (2) is per-ring).
+
+    ``skip_blocks`` prunes mask-empty blocks and the comm that only feeds
+    them (trailing recvs, leading sends over fully skipped rows).
     """
     profile = profile or Profile()
-    st = _TileState(a, b, _fwd_priority_order(a, b))
+    skip = _norm_skip(a, b, skip_blocks)
+    st = _TileState(a, b, _fwd_priority_order(a, b), skip)
+    req = comm_requirements(a, b, "fwd", skip)
     steps: List[Step] = []
 
     # ---- phase 1: Recv Q / Recv KV by profit -------------------------------
-    while st.have_q < a or st.have_kv < b:
+    while st.have_q < st.need_q or st.have_kv < st.need_kv:
         comms: List[str] = []
         budget = 0
         # profit of the next recv on each ring: blocks unlocked / cost
-        profit_q = (st.have_kv / profile.cost(RECV_Q)) if st.have_q < a else -1.0
-        profit_kv = (st.have_q / profile.cost(RECV_KV)) if st.have_kv < b else -1.0
+        profit_q = (st.have_kv / profile.cost(RECV_Q)) if st.have_q < st.need_q else -1.0
+        profit_kv = (st.have_q / profile.cost(RECV_KV)) if st.have_kv < st.need_kv else -1.0
         if allow_concurrent_rings:
-            if st.have_q < a:
+            if st.have_q < st.need_q:
                 comms.append(RECV_Q)
                 budget = max(budget, profile.blocks_to_hide(RECV_Q))
-            if st.have_kv < b:
+            if st.have_kv < st.need_kv:
                 comms.append(RECV_KV)
                 budget = max(budget, profile.blocks_to_hide(RECV_KV))
         elif profit_q > profit_kv:
@@ -225,8 +296,9 @@ def greedy_forward_schedule(
         if RECV_KV in comms:
             st.have_kv += 1
 
-    # ---- phase 2: Send O rows 1..a-1 in ring order -------------------------
-    for row in range(1, a):
+    # ---- phase 2: Send O rows in ring order (leading empty rows pruned) -----
+    first_row = a - req[SEND_O]  # rows 1..first_row-1 are fully skipped
+    for row in range(first_row, a):
         while not st.row_done(row):  # Send O invalid -> compute-only steps
             steps.append(Step((), st.pop_compute(1)))
         steps.append(Step((SEND_O,), st.pop_compute(profile.blocks_to_hide(SEND_O))))
@@ -235,7 +307,7 @@ def greedy_forward_schedule(
     while not st.all_done():
         steps.append(Step((), st.pop_compute(1)))
 
-    return Schedule(a, b, "fwd", tuple(steps))
+    return Schedule(a, b, "fwd", tuple(steps), skip)
 
 
 def naive_forward_schedule(a: int, b: int) -> Schedule:
@@ -339,26 +411,32 @@ def greedy_backward_schedule(
     profile: Optional[Profile] = None,
     *,
     allow_concurrent_rings: bool = False,
+    skip_blocks: Optional[Iterable[Block]] = None,
 ) -> Schedule:
     """Paper Algorithm 3: Recv OdOQ along the Q ring, Recv KV along the KV
     ring (profit-driven), then alternate Send dQ (after each remote row
-    completes) and Send dKV (after each remote column completes)."""
+    completes) and Send dKV (after each remote column completes).
+
+    ``skip_blocks`` prunes exactly like the forward generator (the dQ/dKV of
+    an everywhere-empty block is zero, so the same blocks drop out)."""
     profile = profile or Profile()
-    st = _TileState(a, b, [(u, v) for u in _bwd_row_order(a) for v in _bwd_col_order(b)])
+    skip = _norm_skip(a, b, skip_blocks)
+    st = _TileState(a, b, [(u, v) for u in _bwd_row_order(a) for v in _bwd_col_order(b)], skip)
+    req = comm_requirements(a, b, "bwd", skip)
     chooser = _BwdChooser(st, profile)
     steps: List[Step] = []
 
     # ---- phase 1: receives ---------------------------------------------------
-    while st.have_q < a or st.have_kv < b:
+    while st.have_q < st.need_q or st.have_kv < st.need_kv:
         comms: List[str] = []
         budget = 0
-        profit_q = (st.have_kv / profile.cost(RECV_ODOQ)) if st.have_q < a else -1.0
-        profit_kv = (st.have_q / profile.cost(RECV_KV)) if st.have_kv < b else -1.0
+        profit_q = (st.have_kv / profile.cost(RECV_ODOQ)) if st.have_q < st.need_q else -1.0
+        profit_kv = (st.have_q / profile.cost(RECV_KV)) if st.have_kv < st.need_kv else -1.0
         if allow_concurrent_rings:
-            if st.have_q < a:
+            if st.have_q < st.need_q:
                 comms.append(RECV_ODOQ)
                 budget = max(budget, profile.blocks_to_hide(RECV_ODOQ))
-            if st.have_kv < b:
+            if st.have_kv < st.need_kv:
                 comms.append(RECV_KV)
                 budget = max(budget, profile.blocks_to_hide(RECV_KV))
         elif profit_q > profit_kv:
@@ -372,11 +450,13 @@ def greedy_backward_schedule(
         if RECV_KV in comms:
             st.have_kv += 1
 
-    # ---- phase 2: sends -------------------------------------------------------
+    # ---- phase 2: sends (leading fully-skipped rows/cols pruned) -------------
+    first_row = a - req[SEND_DQ]  # first row whose dQ must be sent
+    first_col = b - req[SEND_DKV]
     sent_dq, sent_dkv = 0, 0
-    while sent_dq < a - 1 or sent_dkv < b - 1:
-        dq_valid = sent_dq < a - 1 and st.row_done(sent_dq + 1)
-        dkv_valid = sent_dkv < b - 1 and st.col_done(sent_dkv + 1)
+    while sent_dq < req[SEND_DQ] or sent_dkv < req[SEND_DKV]:
+        dq_valid = sent_dq < req[SEND_DQ] and st.row_done(first_row + sent_dq)
+        dkv_valid = sent_dkv < req[SEND_DKV] and st.col_done(first_col + sent_dkv)
         if not (dq_valid or dkv_valid):
             steps.append(Step((), chooser.pop(1)))
             continue
@@ -395,7 +475,7 @@ def greedy_backward_schedule(
     while not st.all_done():
         steps.append(Step((), chooser.pop(1)))
 
-    return Schedule(a, b, "bwd", tuple(steps))
+    return Schedule(a, b, "bwd", tuple(steps), skip)
 
 
 # --------------------------------------------------------------------------
@@ -412,6 +492,7 @@ def schedule_to_json(s: Schedule) -> dict:
             {"comms": list(st.comms), "compute": [list(blk) for blk in st.compute]}
             for st in s.steps
         ],
+        "skip": [list(blk) for blk in s.skip],
     }
 
 
@@ -420,7 +501,8 @@ def schedule_from_json(d: dict) -> Schedule:
         Step(tuple(st["comms"]), tuple((int(u), int(v)) for u, v in st["compute"]))
         for st in d["steps"]
     )
-    return Schedule(int(d["a"]), int(d["b"]), d["direction"], steps)
+    skip = tuple((int(u), int(v)) for u, v in d.get("skip", ()))
+    return Schedule(int(d["a"]), int(d["b"]), d["direction"], steps, skip)
 
 
 # --------------------------------------------------------------------------
@@ -429,14 +511,20 @@ def schedule_from_json(d: dict) -> Schedule:
 
 
 def validate_schedule(s: Schedule, *, strict_paper: bool = False) -> None:
-    """Check every invariant the paper's restrictions imply.  Raises
-    ``ValueError`` on the first violation."""
+    """Check every invariant the paper's restrictions imply (including the
+    pruning rules when ``s.skip`` is non-empty).  Raises ``ValueError`` on
+    the first violation."""
     a, b = s.a, s.b
     fwd = s.direction == "fwd"
     recv_q_kind = RECV_Q if fwd else RECV_ODOQ
+    skip = set(_norm_skip(a, b, s.skip))
+    expect = comm_requirements(a, b, s.direction, skip)
+    # sends over leading fully-skipped rows/cols are pruned; later ones shift
+    first_row = a - expect.get(SEND_O if fwd else SEND_DQ, 0)
+    first_col = b - expect.get(SEND_DKV, 0)
 
     have_q, have_kv = 1, 1
-    done: set = set()
+    done: set = set(skip)  # skipped blocks complete rows/cols with zero work
     counts: Dict[str, int] = {}
     sent_o = sent_dq = sent_dkv = 0
 
@@ -451,7 +539,7 @@ def validate_schedule(s: Schedule, *, strict_paper: bool = False) -> None:
         for c in step.comms:
             counts[c] = counts.get(c, 0) + 1
             if c == SEND_O or c == SEND_DQ:
-                row = (sent_o if c == SEND_O else sent_dq) + 1
+                row = first_row + (sent_o if c == SEND_O else sent_dq)
                 if not all((row, v) in done for v in range(b)):
                     raise ValueError(f"step {idx}: {c} #{row} before row {row} complete")
                 if c == SEND_O:
@@ -459,7 +547,7 @@ def validate_schedule(s: Schedule, *, strict_paper: bool = False) -> None:
                 else:
                     sent_dq += 1
             elif c == SEND_DKV:
-                col = sent_dkv + 1
+                col = first_col + sent_dkv
                 if not all((u, col) in done for u in range(a)):
                     raise ValueError(f"step {idx}: send_dkv #{col} before col {col} complete")
                 sent_dkv += 1
@@ -467,6 +555,8 @@ def validate_schedule(s: Schedule, *, strict_paper: bool = False) -> None:
         for (u, v) in step.compute:
             if not (0 <= u < a and 0 <= v < b):
                 raise ValueError(f"step {idx}: block {(u, v)} out of range")
+            if (u, v) in skip:
+                raise ValueError(f"step {idx}: block {(u, v)} is mask-pruned but scheduled")
             if (u, v) in done:
                 raise ValueError(f"step {idx}: block {(u, v)} computed twice")
             if u >= have_q or v >= have_kv:
@@ -483,11 +573,6 @@ def validate_schedule(s: Schedule, *, strict_paper: bool = False) -> None:
 
     if len(done) != a * b:
         raise ValueError(f"{a*b - len(done)} blocks never computed")
-    expect = (
-        {recv_q_kind: a - 1, RECV_KV: b - 1, SEND_O: a - 1}
-        if fwd
-        else {recv_q_kind: a - 1, RECV_KV: b - 1, SEND_DQ: a - 1, SEND_DKV: b - 1}
-    )
     for kind, cnt in expect.items():
         if counts.get(kind, 0) != cnt:
             raise ValueError(f"{kind}: expected {cnt} ops, got {counts.get(kind, 0)}")

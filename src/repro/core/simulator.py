@@ -78,19 +78,24 @@ def make_cost_model(
     *,
     causal: bool = False,
     backward: bool = False,
+    mask=None,  # Optional[MaskSpec]: supersedes the causal flag
 ) -> CostModel:
     """α-β cost model for one (N, d, n) attention call.
 
     One compute block = flash attention between a Q chunk (m tokens) and a KV
     chunk (m tokens), m = batch·N/n: 4·m²·d FLOPs forward (QKᵀ and PV), 2.5×
-    that backward (the five flash-backward matmuls), halved by a causal mask
-    (striping balances the halving across all blocks — paper §3.7).
+    that backward (the five flash-backward matmuls), scaled by the mask's
+    visible fraction (0.5 for plain causal; striping balances the saving
+    across all blocks — paper §3.7; the Pallas kernels skip fully-masked
+    sub-blocks with ``pl.when``, recovering it block-wise).
     """
     m = comm.batch * comm.seq / comm.n
     flops = 4.0 * m * m * comm.hidden
     if backward:
         flops *= 2.5
-    if causal:
+    if mask is not None:
+        flops *= mask.visible_fraction(comm.seq)
+    elif causal:
         flops *= 0.5
     t_block = flops / (hw.peak_flops * hw.attn_efficiency)
     t = lambda kind: hw.latency + comm.chunk_bytes(kind) / hw.link_bw

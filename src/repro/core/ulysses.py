@@ -33,10 +33,13 @@ def ulysses_attention(
     causal: bool = False,
     window: Optional[int] = None,
     scale: Optional[float] = None,
+    seg: Optional[jnp.ndarray] = None,  # [S/n] int32 local segment-id chunk
 ) -> jnp.ndarray:
     H, Hkv = q.shape[2], k.shape[2]
     if n == 1:
-        return ops.flash_attention(q, k, v, causal=causal, window=window, scale=scale)
+        return ops.flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale, seg_q=seg, seg_kv=seg
+        )
     if Hkv % n:
         raise ValueError(
             f"DS-Ulysses parallelism is capped by the KV head count: "
@@ -47,6 +50,14 @@ def ulysses_attention(
     qh = lax.all_to_all(q, axis_name, split_axis=2, concat_axis=1, tiled=True)
     kh = lax.all_to_all(k, axis_name, split_axis=2, concat_axis=1, tiled=True)
     vh = lax.all_to_all(v, axis_name, split_axis=2, concat_axis=1, tiled=True)
-    oh = ops.flash_attention(qh, kh, vh, causal=causal, window=window, scale=scale)
+    seg_full = None
+    if seg is not None:
+        # after the transpose every device holds the FULL sequence; gather
+        # the (tiny, int32) segment ids to match
+        seg_full = lax.all_gather(seg, axis_name, tiled=True)
+    oh = ops.flash_attention(
+        qh, kh, vh, causal=causal, window=window, scale=scale,
+        seg_q=seg_full, seg_kv=seg_full,
+    )
     # head-sharded -> seq-sharded
     return lax.all_to_all(oh, axis_name, split_axis=1, concat_axis=2, tiled=True)

@@ -21,24 +21,41 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.masking import positions_from_doc_lens, segment_ids_from_doc_lens
 from repro.core.tiling import stripe_permutation
 from repro.parallel.context import ParallelCtx
 
-__all__ = ["make_batch", "batch_spec_shapes"]
+__all__ = ["make_batch", "batch_spec_shapes", "doc_lengths"]
 
 
-def batch_spec_shapes(cfg: ModelConfig, seq: int, batch: int) -> Dict[str, tuple]:
+def batch_spec_shapes(
+    cfg: ModelConfig, seq: int, batch: int, docs: Optional[int] = None
+) -> Dict[str, tuple]:
     """Shapes/dtypes of one training batch (used by input_specs in dryrun)."""
     shapes = {
         "tokens": ((batch, seq), np.int32),
         "labels": ((batch, seq), np.int32),
         "positions": ((seq,), np.int32),
     }
+    if docs and docs > 1:
+        shapes["segments"] = ((seq,), np.int32)
+        shapes["mask"] = ((batch, seq), np.float32)
     if cfg.frontend == "audio_stub":
         shapes["frames"] = ((batch, cfg.encoder_seq, cfg.frontend_dim), np.float32)
     if cfg.frontend == "vision_stub":
         shapes["patches"] = ((batch, cfg.num_patches, cfg.frontend_dim), np.float32)
     return shapes
+
+
+def doc_lengths(seq: int, docs: int, *, seed: int = 0, step: int = 0) -> np.ndarray:
+    """Deterministic pseudo-random partition of ``seq`` into ``docs`` document
+    lengths (each >= 2) — a pure function of (seed, step) like the batch."""
+    if docs < 1 or docs * 2 > seq:
+        raise ValueError(f"cannot pack {docs} documents (>=2 tokens each) into seq={seq}")
+    rng = np.random.default_rng([seed, step, 0xD0C5])
+    cuts = np.sort(rng.choice(np.arange(1, seq // 2), size=docs - 1, replace=False)) * 2
+    bounds = np.concatenate([[0], cuts, [seq]])
+    return np.diff(bounds).astype(np.int64)
 
 
 def make_batch(
@@ -50,21 +67,46 @@ def make_batch(
     step: int = 0,
     ctx: Optional[ParallelCtx] = None,
     dtype=jnp.float32,
+    docs: Optional[int] = None,
 ) -> Dict[str, jnp.ndarray]:
+    """``docs=N`` packs N synthetic documents into every row: ``segments``
+    carries per-token document ids (the attention mask becomes causal-within-
+    document), ``positions`` restart at each document start (per-document
+    RoPE), and the loss ``mask`` zeroes the label that would cross a document
+    boundary.  Boundaries are shared across rows (the schedule is per-call)."""
     ctx = ctx or ParallelCtx()
     key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
     kt, kf, kp = jax.random.split(key, 3)
     toks = jax.random.randint(kt, (batch, seq + 1), 0, cfg.vocab_size, jnp.int32)
     tokens, labels = toks[:, :-1], toks[:, 1:]
+
+    segments = loss_mask = None
+    if docs and docs > 1:
+        lens = doc_lengths(seq, docs, seed=seed, step=step)
+        segments = segment_ids_from_doc_lens(lens, seq)
+        base_positions = positions_from_doc_lens(lens)
+        # the label of a document's last token is the next document's first
+        boundary = np.zeros(seq, np.float32)
+        boundary[np.cumsum(lens)[:-1] - 1] = 1.0
+        loss_mask = np.broadcast_to(1.0 - boundary, (batch, seq)).copy()
+    else:
+        base_positions = np.arange(seq, dtype=np.int32)
+
     n = ctx.sp_size
     if n > 1 and cfg.causal_layout == "striped":
-        perm = jnp.asarray(stripe_permutation(seq, n))
+        perm = np.asarray(stripe_permutation(seq, n))
         tokens = tokens[:, perm]
         labels = labels[:, perm]
-        positions = perm.astype(jnp.int32)
+        positions = jnp.asarray(base_positions[perm])
+        if segments is not None:
+            segments = segments[perm]
+            loss_mask = loss_mask[:, perm]
     else:
-        positions = jnp.arange(seq, dtype=jnp.int32)
+        positions = jnp.asarray(base_positions)
     out = {"tokens": tokens, "labels": labels, "positions": positions}
+    if segments is not None:
+        out["segments"] = jnp.asarray(segments)
+        out["mask"] = jnp.asarray(loss_mask)
     if cfg.frontend == "audio_stub":
         out["frames"] = jax.random.normal(kf, (batch, cfg.encoder_seq, cfg.frontend_dim), dtype)
     if cfg.frontend == "vision_stub":

@@ -67,6 +67,17 @@ def _band_mask_block(band_ref, iq, ik, bq, bk, stride_q, stride_kv):
     return (diff >= band_ref[2]) & (diff <= band_ref[3])
 
 
+def _mask_block(band_ref, segq_ref, segk_ref, iq, ik, bq, bk, stride_q, stride_kv):
+    """Band mask, composed with the segment-id (packed-document) mask when
+    the seg refs are present: (i, j) visible iff in-band AND same segment."""
+    mask = _band_mask_block(band_ref, iq, ik, bq, bk, stride_q, stride_kv)
+    if segq_ref is not None:
+        segq = segq_ref[0, :]  # [bq]
+        segk = segk_ref[0, :]  # [bk]
+        mask &= segq[:, None] == segk[None, :]
+    return mask
+
+
 # --------------------------------------------------------------------------
 # forward
 # --------------------------------------------------------------------------
@@ -77,17 +88,18 @@ def _fwd_kernel(
     q_ref,  # [1, 1, bq, D] VMEM
     k_ref,  # [1, 1, bk, D]
     v_ref,  # [1, 1, bk, D]
-    o_ref,  # [1, 1, bq, D]
-    lse_ref,  # [1, 1, bq]
-    acc_ref,  # scratch [bq, D] f32
-    m_ref,  # scratch [bq, 1] f32
-    l_ref,  # scratch [bq, 1] f32
-    *,
+    *rest,  # [segq_ref [1, bq], segk_ref [1, bk],] o_ref, lse_ref, scratch...
     scale: float,
     stride_q: int,
     stride_kv: int,
     nk: int,
+    has_seg: bool = False,
 ):
+    if has_seg:
+        segq_ref, segk_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        segq_ref = segk_ref = None
+        o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
     iq, ik = pl.program_id(2), pl.program_id(3)
     bq, d = q_ref.shape[2], q_ref.shape[3]
     bk = k_ref.shape[2]
@@ -105,7 +117,7 @@ def _fwd_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale
-        mask = _band_mask_block(band_ref, iq, ik, bq, bk, stride_q, stride_kv)
+        mask = _mask_block(band_ref, segq_ref, segk_ref, iq, ik, bq, bk, stride_q, stride_kv)
         m_prev = m_ref[...]
         m_cur = jnp.max(jnp.where(mask, s, NEG_INF), axis=1, keepdims=True)
         m_new = jnp.maximum(m_prev, m_cur)
@@ -127,6 +139,17 @@ def _fwd_kernel(
         lse_ref[0, 0] = lse[:, 0].astype(lse_ref.dtype)
 
 
+def _seg_operands(seg_q, seg_kv, block_q, block_kv):
+    """Segment ids as [1, S] int32 pallas operands + their BlockSpecs."""
+    sq = jnp.asarray(seg_q, jnp.int32)[None, :]
+    sk = jnp.asarray(seg_kv, jnp.int32)[None, :]
+    specs = [
+        pl.BlockSpec((1, block_q), lambda b, h, iq, ik: (0, iq)),
+        pl.BlockSpec((1, block_kv), lambda b, h, iq, ik: (0, ik)),
+    ]
+    return [sq, sk], specs
+
+
 def flash_attention_fwd(
     q: jnp.ndarray,  # [B, Sq, H, D]
     k: jnp.ndarray,  # [B, Skv, Hkv, D]
@@ -139,6 +162,8 @@ def flash_attention_fwd(
     block_q: int = DEFAULT_BLOCK_Q,
     block_kv: int = DEFAULT_BLOCK_KV,
     interpret: bool = True,
+    seg_q: Optional[jnp.ndarray] = None,  # [Sq] int32 segment ids
+    seg_kv: Optional[jnp.ndarray] = None,  # [Skv]
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (o [B,Sq,H,D], lse [B,H,Sq])."""
     B, Sq, H, D = q.shape
@@ -151,28 +176,36 @@ def flash_attention_fwd(
         raise ValueError(f"H={H} not divisible by Hkv={Hkv}")
     group = H // Hkv
     nq, nk = Sq // block_q, Skv // block_kv
+    has_seg = seg_q is not None
 
     qt = q.transpose(0, 2, 1, 3)  # [B, H, Sq, D]
     kt = k.transpose(0, 2, 1, 3)  # [B, Hkv, Skv, D]
     vt = v.transpose(0, 2, 1, 3)
 
     kernel = functools.partial(
-        _fwd_kernel, scale=scale, stride_q=stride_q, stride_kv=stride_kv, nk=nk
+        _fwd_kernel, scale=scale, stride_q=stride_q, stride_kv=stride_kv, nk=nk,
+        has_seg=has_seg,
     )
     grid = (B, H, nq, nk)
     out_shape = [
         _struct((B, H, Sq, D), q.dtype, q, k, v, band),
         _struct((B, H, Sq), jnp.float32, q, k, v, band),
     ]
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, block_kv, D), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        pl.BlockSpec((1, 1, block_kv, D), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+    ]
+    operands = [band.astype(jnp.int32), qt, kt, vt]
+    if has_seg:
+        seg_ops, seg_specs = _seg_operands(seg_q, seg_kv, block_q, block_kv)
+        operands += seg_ops
+        in_specs += seg_specs
     o, lse = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, iq, ik: (b, h // group, ik, 0)),
-            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, iq, ik: (b, h // group, ik, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
             pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
@@ -190,7 +223,7 @@ def flash_attention_fwd(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
         ),
         name="mesh_flash_fwd",
-    )(band.astype(jnp.int32), qt, kt, vt)
+    )(*operands)
     return o.transpose(0, 2, 1, 3), lse
 
 
@@ -207,14 +240,18 @@ def _dq_kernel(
     do_ref,  # [1,1,bq,D]
     lse_ref,  # [1,1,bq]
     delta_ref,  # [1,1,bq]
-    dq_ref,  # [1,1,bq,D] out
-    acc_ref,  # scratch [bq, D] f32
-    *,
+    *rest,  # [segq_ref, segk_ref,] dq_ref, acc_ref
     scale: float,
     stride_q: int,
     stride_kv: int,
     nk: int,
+    has_seg: bool = False,
 ):
+    if has_seg:
+        segq_ref, segk_ref, dq_ref, acc_ref = rest
+    else:
+        segq_ref = segk_ref = None
+        dq_ref, acc_ref = rest
     iq, ik = pl.program_id(2), pl.program_id(3)
     bq, d = q_ref.shape[2], q_ref.shape[3]
     bk = k_ref.shape[2]
@@ -234,7 +271,7 @@ def _dq_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale
-        mask = _band_mask_block(band_ref, iq, ik, bq, bk, stride_q, stride_kv)
+        mask = _mask_block(band_ref, segq_ref, segk_ref, iq, ik, bq, bk, stride_q, stride_kv)
         p = jnp.where(mask, jnp.exp(s - lse), 0.0)
         dp = jax.lax.dot_general(
             do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
@@ -260,17 +297,19 @@ def _dkv_kernel(
     do_ref,  # [1,1,bq,D]
     lse_ref,  # [1,1,bq]
     delta_ref,  # [1,1,bq]
-    dk_ref,  # [1,1,bk,D] out
-    dv_ref,  # [1,1,bk,D] out
-    dk_acc,  # scratch [bk, D] f32
-    dv_acc,  # scratch [bk, D] f32
-    *,
+    *rest,  # [segq_ref, segk_ref,] dk_ref, dv_ref, dk_acc, dv_acc
     scale: float,
     stride_q: int,
     stride_kv: int,
     inner: int,  # = group * nq
     nq: int,
+    has_seg: bool = False,
 ):
+    if has_seg:
+        segq_ref, segk_ref, dk_ref, dv_ref, dk_acc, dv_acc = rest
+    else:
+        segq_ref = segk_ref = None
+        dk_ref, dv_ref, dk_acc, dv_acc = rest
     ik, it = pl.program_id(2), pl.program_id(3)
     iq = it % nq
     bq, d = q_ref.shape[2], q_ref.shape[3]
@@ -292,7 +331,7 @@ def _dkv_kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale
-        mask = _band_mask_block(band_ref, iq, ik, bq, bk, stride_q, stride_kv)
+        mask = _mask_block(band_ref, segq_ref, segk_ref, iq, ik, bq, bk, stride_q, stride_kv)
         p = jnp.where(mask, jnp.exp(s - lse), 0.0)  # [bq, bk]
         dv_acc[...] += jax.lax.dot_general(
             p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
@@ -327,6 +366,8 @@ def flash_attention_bwd(
     block_kv: int = DEFAULT_BLOCK_KV,
     interpret: bool = True,
     delta: Optional[jnp.ndarray] = None,  # [B, Sq, H]
+    seg_q: Optional[jnp.ndarray] = None,  # [Sq] int32 segment ids
+    seg_kv: Optional[jnp.ndarray] = None,  # [Skv]
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """FlashAttention backward from saved (o, lse): (dq, dk, dv)."""
     B, Sq, H, D = q.shape
@@ -336,6 +377,7 @@ def flash_attention_bwd(
     group = H // Hkv
     nq, nk = Sq // block_q, Skv // block_kv
     band = band.astype(jnp.int32)
+    has_seg = seg_q is not None
 
     if delta is None:
         delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
@@ -349,20 +391,27 @@ def flash_attention_bwd(
     interp_params = dict(interpret=interpret)
 
     dq_kernel = functools.partial(
-        _dq_kernel, scale=scale, stride_q=stride_q, stride_kv=stride_kv, nk=nk
+        _dq_kernel, scale=scale, stride_q=stride_q, stride_kv=stride_kv, nk=nk,
+        has_seg=has_seg,
     )
+    dq_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, block_kv, D), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        pl.BlockSpec((1, 1, block_kv, D), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+        pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+    ]
+    dq_operands = [band, qt, kt, vt, dot, lse, delta]
+    if has_seg:
+        seg_ops, seg_specs = _seg_operands(seg_q, seg_kv, block_q, block_kv)
+        dq_operands += seg_ops
+        dq_specs += seg_specs
     dqt = pl.pallas_call(
         dq_kernel,
         grid=(B, H, nq, nk),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, iq, ik: (b, h // group, ik, 0)),
-            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, iq, ik: (b, h // group, ik, 0)),
-            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
-            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
-        ],
+        in_specs=dq_specs,
         out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
         scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
         out_shape=_struct((B, H, Sq, D), q.dtype, q, k, v, do, band),
@@ -373,36 +422,46 @@ def flash_attention_bwd(
         ),
         name="mesh_flash_dq",
         **interp_params,
-    )(band, qt, kt, vt, dot, lse, delta)
+    )(*dq_operands)
 
     inner = group * nq
     dkv_kernel = functools.partial(
-        _dkv_kernel, scale=scale, stride_q=stride_q, stride_kv=stride_kv, inner=inner, nq=nq
+        _dkv_kernel, scale=scale, stride_q=stride_q, stride_kv=stride_kv, inner=inner, nq=nq,
+        has_seg=has_seg,
     )
+    dkv_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec(
+            (1, 1, block_q, D),
+            lambda b, hkv, ik, it, g=group, nq_=nq: (b, hkv * g + it // nq_, it % nq_, 0),
+        ),
+        pl.BlockSpec((1, 1, block_kv, D), lambda b, hkv, ik, it: (b, hkv, ik, 0)),
+        pl.BlockSpec((1, 1, block_kv, D), lambda b, hkv, ik, it: (b, hkv, ik, 0)),
+        pl.BlockSpec(
+            (1, 1, block_q, D),
+            lambda b, hkv, ik, it, g=group, nq_=nq: (b, hkv * g + it // nq_, it % nq_, 0),
+        ),
+        pl.BlockSpec(
+            (1, 1, block_q),
+            lambda b, hkv, ik, it, g=group, nq_=nq: (b, hkv * g + it // nq_, it % nq_),
+        ),
+        pl.BlockSpec(
+            (1, 1, block_q),
+            lambda b, hkv, ik, it, g=group, nq_=nq: (b, hkv * g + it // nq_, it % nq_),
+        ),
+    ]
+    dkv_operands = [band, qt, kt, vt, dot, lse, delta]
+    if has_seg:
+        dkv_operands += [jnp.asarray(seg_q, jnp.int32)[None, :],
+                         jnp.asarray(seg_kv, jnp.int32)[None, :]]
+        dkv_specs += [
+            pl.BlockSpec((1, block_q), lambda b, hkv, ik, it, nq_=nq: (0, it % nq_)),
+            pl.BlockSpec((1, block_kv), lambda b, hkv, ik, it: (0, ik)),
+        ]
     dkt, dvt = pl.pallas_call(
         dkv_kernel,
         grid=(B, Hkv, nk, inner),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec(
-                (1, 1, block_q, D),
-                lambda b, hkv, ik, it, g=group, nq_=nq: (b, hkv * g + it // nq_, it % nq_, 0),
-            ),
-            pl.BlockSpec((1, 1, block_kv, D), lambda b, hkv, ik, it: (b, hkv, ik, 0)),
-            pl.BlockSpec((1, 1, block_kv, D), lambda b, hkv, ik, it: (b, hkv, ik, 0)),
-            pl.BlockSpec(
-                (1, 1, block_q, D),
-                lambda b, hkv, ik, it, g=group, nq_=nq: (b, hkv * g + it // nq_, it % nq_, 0),
-            ),
-            pl.BlockSpec(
-                (1, 1, block_q),
-                lambda b, hkv, ik, it, g=group, nq_=nq: (b, hkv * g + it // nq_, it % nq_),
-            ),
-            pl.BlockSpec(
-                (1, 1, block_q),
-                lambda b, hkv, ik, it, g=group, nq_=nq: (b, hkv * g + it // nq_, it % nq_),
-            ),
-        ],
+        in_specs=dkv_specs,
         out_specs=[
             pl.BlockSpec((1, 1, block_kv, D), lambda b, hkv, ik, it: (b, hkv, ik, 0)),
             pl.BlockSpec((1, 1, block_kv, D), lambda b, hkv, ik, it: (b, hkv, ik, 0)),
@@ -422,7 +481,7 @@ def flash_attention_bwd(
         ),
         name="mesh_flash_dkv",
         **interp_params,
-    )(band, qt, kt, vt, dot, lse, delta)
+    )(*dkv_operands)
 
     return (
         dqt.transpose(0, 2, 1, 3),

@@ -67,6 +67,8 @@ def block_attention(
     stride_kv: int = 1,
     block_q: int = fa.DEFAULT_BLOCK_Q,
     block_kv: int = fa.DEFAULT_BLOCK_KV,
+    seg_q: Optional[jnp.ndarray] = None,  # [Sq] int32 segment ids (documents)
+    seg_kv: Optional[jnp.ndarray] = None,  # [Skv]
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One AM-block attention: (o, lse); no autodiff rule (see module doc)."""
     if scale is None:
@@ -78,9 +80,11 @@ def block_attention(
             q, k, v, band,
             scale=scale, stride_q=stride_q, stride_kv=stride_kv,
             block_q=block_q, block_kv=block_kv, interpret=interpret,
+            seg_q=seg_q, seg_kv=seg_kv,
         )
     return ref.attention_ref(
-        q, k, v, scale=scale, band=tuple(band), stride_q=stride_q, stride_kv=stride_kv
+        q, k, v, scale=scale, band=tuple(band), stride_q=stride_q, stride_kv=stride_kv,
+        seg_q=seg_q, seg_kv=seg_kv,
     )
 
 
@@ -93,6 +97,8 @@ def block_attention_bwd(
     block_q: int = fa.DEFAULT_BLOCK_Q,
     block_kv: int = fa.DEFAULT_BLOCK_KV,
     delta: Optional[jnp.ndarray] = None,
+    seg_q: Optional[jnp.ndarray] = None,
+    seg_kv: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One AM-block backward from saved (o, lse): (dq, dk, dv).
 
@@ -107,11 +113,12 @@ def block_attention_bwd(
             q, k, v, o, lse, do, band,
             scale=scale, stride_q=stride_q, stride_kv=stride_kv,
             block_q=block_q, block_kv=block_kv, interpret=interpret, delta=delta,
+            seg_q=seg_q, seg_kv=seg_kv,
         )
     return ref.attention_bwd_ref(
         q, k, v, o, lse, do,
         scale=scale, band=tuple(band), stride_q=stride_q, stride_kv=stride_kv,
-        delta=delta,
+        delta=delta, seg_q=seg_q, seg_kv=seg_kv,
     )
 
 
@@ -147,6 +154,38 @@ def _flash_bwd(band, scale, stride_q, stride_kv, res, do):
 _flash.defvjp(_flash_fwd, _flash_bwd)
 
 
+# segment-masked variant: the int32 seg operands are data (packed documents),
+# so they ride as traced args with a None cotangent
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _flash_seg(q, k, v, seg_q, seg_kv, band, scale, stride_q, stride_kv):
+    o, _ = block_attention(
+        q, k, v, band, scale=scale, stride_q=stride_q, stride_kv=stride_kv,
+        seg_q=seg_q, seg_kv=seg_kv,
+    )
+    return o
+
+
+def _flash_seg_fwd(q, k, v, seg_q, seg_kv, band, scale, stride_q, stride_kv):
+    o, lse = block_attention(
+        q, k, v, band, scale=scale, stride_q=stride_q, stride_kv=stride_kv,
+        seg_q=seg_q, seg_kv=seg_kv,
+    )
+    return o, (q, k, v, seg_q, seg_kv, o, lse)
+
+
+def _flash_seg_bwd(band, scale, stride_q, stride_kv, res, do):
+    q, k, v, seg_q, seg_kv, o, lse = res
+    dq, dk, dv = block_attention_bwd(
+        q, k, v, o, lse, do, band,
+        scale=scale, stride_q=stride_q, stride_kv=stride_kv,
+        seg_q=seg_q, seg_kv=seg_kv,
+    )
+    return dq, dk, dv, None, None
+
+
+_flash_seg.defvjp(_flash_seg_fwd, _flash_seg_bwd)
+
+
 def flash_attention(
     q: jnp.ndarray,
     k: jnp.ndarray,
@@ -158,8 +197,11 @@ def flash_attention(
     scale: Optional[float] = None,
     stride_q: int = 1,
     stride_kv: int = 1,
+    seg_q: Optional[jnp.ndarray] = None,  # [Sq] int32 segment ids
+    seg_kv: Optional[jnp.ndarray] = None,  # [Skv]
 ) -> jnp.ndarray:
-    """Differentiable attention; mask is static (causal/window/custom band)."""
+    """Differentiable attention; the band is static (causal/window/custom),
+    optionally composed with runtime segment ids (packed documents)."""
     if band is None:
         if causal:
             hi = (window - 1) if window else ref.BAND_INF
@@ -170,7 +212,15 @@ def flash_attention(
             band = full_band()
     if scale is None:
         scale = q.shape[-1] ** -0.5
-    return _flash(q, k, v, tuple(int(x) for x in band), float(scale), stride_q, stride_kv)
+    band = tuple(int(x) for x in band)
+    if seg_q is not None:
+        if seg_kv is None:
+            seg_kv = seg_q
+        return _flash_seg(
+            q, k, v, jnp.asarray(seg_q, jnp.int32), jnp.asarray(seg_kv, jnp.int32),
+            band, float(scale), stride_q, stride_kv,
+        )
+    return _flash(q, k, v, band, float(scale), stride_q, stride_kv)
 
 
 combine_partials = ref.combine_partials

@@ -59,6 +59,11 @@ def repeat_kv(x: jnp.ndarray, h: int) -> jnp.ndarray:
     return jnp.repeat(x, h // hkv, axis=2)
 
 
+def _seg_mask(seg_q: jnp.ndarray, seg_kv: jnp.ndarray) -> jnp.ndarray:
+    """[Sq, Skv] visibility from per-token segment ids (packed documents)."""
+    return seg_q[:, None] == seg_kv[None, :]
+
+
 def attention_ref(
     q: jnp.ndarray,
     k: jnp.ndarray,
@@ -68,8 +73,14 @@ def attention_ref(
     band: Optional[Band] = None,
     stride_q: int = 1,
     stride_kv: int = 1,
+    seg_q: Optional[jnp.ndarray] = None,  # [Sq] int32 segment ids
+    seg_kv: Optional[jnp.ndarray] = None,  # [Skv]
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (o [B,Sq,H,D], lse [B,H,Sq]); fp32 softmax arithmetic."""
+    """Returns (o [B,Sq,H,D], lse [B,H,Sq]); fp32 softmax arithmetic.
+
+    ``seg_q``/``seg_kv`` compose a segment-id (packed-document) mask with the
+    band: (i, j) visible iff the band admits it AND seg_q[i] == seg_kv[j].
+    """
     B, Sq, H, D = q.shape
     _, Sk, Hkv, _ = k.shape
     if scale is None:
@@ -79,13 +90,18 @@ def attention_ref(
     s = jnp.einsum(
         "bqhd,bkhd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)
     ) * scale
+    mask = None
     if band is not None:
         mask = band_mask(Sq, Sk, band, stride_q=stride_q, stride_kv=stride_kv)
+    if seg_q is not None:
+        sm = _seg_mask(seg_q, seg_kv)
+        mask = sm if mask is None else (mask & sm)
+    if mask is not None:
         s = jnp.where(mask[None, None], s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     m = jnp.maximum(m, NEG_INF)  # fully-masked rows
     p = jnp.exp(s - m)
-    if band is not None:
+    if mask is not None:
         p = jnp.where(mask[None, None], p, 0.0)
     l = jnp.sum(p, axis=-1, keepdims=True)
     l_safe = jnp.where(l > 0, l, 1.0)
@@ -128,6 +144,8 @@ def attention_bwd_ref(
     stride_q: int = 1,
     stride_kv: int = 1,
     delta: Optional[jnp.ndarray] = None,  # [B, Sq, H]; derived from o if None
+    seg_q: Optional[jnp.ndarray] = None,  # [Sq] int32 segment ids
+    seg_kv: Optional[jnp.ndarray] = None,  # [Skv]
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """FlashAttention-style backward from saved (o, lse): returns dq, dk, dv.
 
@@ -146,8 +164,13 @@ def attention_bwd_ref(
     dof = do.astype(jnp.float32)
     s = jnp.einsum("bqhd,bkhd->bhqk", qf, kr) * scale
     p = jnp.exp(s - lse[..., None])  # true softmax weights via final lse
+    mask = None
     if band is not None:
         mask = band_mask(Sq, Sk, band, stride_q=stride_q, stride_kv=stride_kv)
+    if seg_q is not None:
+        sm = _seg_mask(seg_q, seg_kv)
+        mask = sm if mask is None else (mask & sm)
+    if mask is not None:
         p = jnp.where(mask[None, None], p, 0.0)
     if delta is None:
         delta = jnp.sum(dof * o.astype(jnp.float32), axis=-1)  # [B,Sq,H]

@@ -91,7 +91,7 @@ def main():
         summary = {
             "requests": len(trace),
             "ticks": ticks,
-            "prefill_traces": dict(eng.prefill_trace_counts),
+            "prefill_traces": {str(k): v for k, v in eng.prefill_trace_counts.items()},
             "decode_traces": eng.decode_trace_count,
         }
         print(json.dumps(summary))

@@ -26,6 +26,8 @@ def main():
     ap.add_argument("--fake-devices", type=int, default=0)
     ap.add_argument("--tile-a", type=int, default=None)
     ap.add_argument("--attn", default="mesh", choices=["mesh", "ring", "ulysses"])
+    ap.add_argument("--docs", type=int, default=None,
+                    help="pack N documents per row (segment-masked attention)")
     args = ap.parse_args()
 
     if args.fake_devices:
@@ -69,6 +71,7 @@ def main():
         steps=args.steps, seq=args.seq, batch=args.batch,
         ckpt_dir=args.ckpt_dir,
         compression=CompressionConfig(kind="int8") if args.compress else None,
+        docs=args.docs,
     )
     out = fit(cfg, ctx, tcfg, AdamWConfig(total_steps=args.steps),
               hooks={"on_step": lambda s, m: (s % 10 == 0) and print(

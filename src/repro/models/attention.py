@@ -43,7 +43,17 @@ def distributed_attention(
     causal: bool,
     window: Optional[int] = None,
     layout: str = "striped",
+    segments: Optional[jnp.ndarray] = None,  # [S] int32, same order as tokens
 ) -> jnp.ndarray:
+    """``segments`` switches the mask to causal-within-document (packed
+    multi-document rows); it must be permuted exactly like the tokens."""
+    if segments is not None:
+        from repro.core.masking import MaskSpec
+
+        cfg = dispatch.plan_from_ctx(
+            ctx, mask=MaskSpec.segment(window=window), layout=layout
+        )
+        return dispatch.distributed_attention(q, k, v, cfg=cfg, ctx=ctx, segments=segments)
     cfg = dispatch.plan_from_ctx(ctx, causal=causal, window=window, layout=layout)
     return dispatch.distributed_attention(q, k, v, cfg=cfg, ctx=ctx)
 
@@ -188,16 +198,27 @@ def _project_qkv(x, p, cfg: ModelConfig, positions):
     return q, k, v
 
 
-def _latent_wire_attention(q, lat, wkv_b, cfg: ModelConfig, ctx: ParallelCtx, *, causal):
+def _latent_wire_attention(
+    q, lat, wkv_b, cfg: ModelConfig, ctx: ParallelCtx, *, causal, segments=None
+):
     """MLA x Mesh-Attention with the compressed latent on the KV ring
     (beyond-paper; forward-only — see EXPERIMENTS.md §Perf): wire bytes per
     KV hop drop from 2·H·qk to kvr+rope (MiniCPM3: 15360 -> 288 per token)."""
-    plan = dispatch.plan_from_ctx(
-        ctx, causal=causal, layout=cfg.causal_layout, backend="mesh",
-        scale=(cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim) ** -0.5,
-    )
+    scale = (cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim) ** -0.5
+    if segments is not None:
+        from repro.core.masking import MaskSpec
+
+        plan = dispatch.plan_from_ctx(
+            ctx, mask=MaskSpec.segment(window=cfg.window), layout=cfg.causal_layout,
+            backend="mesh", scale=scale,
+        )
+    else:
+        plan = dispatch.plan_from_ctx(
+            ctx, causal=causal, layout=cfg.causal_layout, backend="mesh", scale=scale,
+        )
     return dispatch.latent_wire_attention(
-        q, lat, wkv_b, lambda chunk, wb: _mla_expand(chunk, wb, cfg), cfg=plan, ctx=ctx
+        q, lat, wkv_b, lambda chunk, wb: _mla_expand(chunk, wb, cfg), cfg=plan, ctx=ctx,
+        segments=segments,
     )
 
 
@@ -209,17 +230,21 @@ def attention_block(
     positions: jnp.ndarray,
     *,
     causal: bool = True,
+    segments: Optional[jnp.ndarray] = None,  # [S] int32 packed-document ids
 ) -> jnp.ndarray:
     """Pre-norm self-attention with residual."""
     B, S, D = x.shape
     h = rms_norm(x, p["ln"]) if cfg.norm == "rmsnorm" else _ln(x, p)
     if cfg.mla is not None and ctx.mla_latent_wire and ctx.sp_size > 1:
         q, lat = _mla_q_latent(h, p, cfg, positions)
-        o = _latent_wire_attention(q, lat, p["wkv_b"], cfg, ctx, causal=causal)
+        o = _latent_wire_attention(
+            q, lat, p["wkv_b"], cfg, ctx, causal=causal, segments=segments
+        )
     else:
         q, k, v = _project_qkv(h, p, cfg, positions)
         o = distributed_attention(
-            q, k, v, ctx, causal=causal, window=cfg.window, layout=cfg.causal_layout
+            q, k, v, ctx, causal=causal, window=cfg.window, layout=cfg.causal_layout,
+            segments=segments,
         )
     if cfg.mla is not None:
         o = o[..., : cfg.mla.v_head_dim]

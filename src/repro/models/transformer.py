@@ -41,6 +41,7 @@ __all__ = [
     "loss_fn",
     "init_cache",
     "prefill",
+    "prefill_packed",
     "decode_step",
     "param_count",
 ]
@@ -111,17 +112,18 @@ def _final_norm(x, p, cfg):
     return rms_norm(x, p["final_ln"])
 
 
-def _decoder_block(x, lp, cfg: ModelConfig, ctx: ParallelCtx, positions, enc=None):
+def _decoder_block(x, lp, cfg: ModelConfig, ctx: ParallelCtx, positions, enc=None,
+                   segments=None):
     """One decoder layer. Returns (x, aux_loss)."""
     aux = jnp.float32(0.0)
     if cfg.family == "ssm":
         return ssm_mod.ssm_block(x, lp["ssm"], cfg, ctx), aux
     if cfg.hybrid:
-        a = attn.attention_block(x, lp["attn"], cfg, ctx, positions) - x
+        a = attn.attention_block(x, lp["attn"], cfg, ctx, positions, segments=segments) - x
         s = ssm_mod.ssm_block(x, lp["ssm"], cfg, ctx) - x
         x = x + 0.5 * (a + s)
     else:
-        x = attn.attention_block(x, lp["attn"], cfg, ctx, positions)
+        x = attn.attention_block(x, lp["attn"], cfg, ctx, positions, segments=segments)
     if enc is not None:
         x = attn.cross_attention_block(x, enc, lp["xattn"], cfg, ctx)
     if cfg.moe is not None:
@@ -202,9 +204,16 @@ def _merge_patches(x, params, positions, patches, num_patches):
 
 def forward(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """-> (logits [B,S,V], aux_loss). batch: tokens [B,S], positions [S],
-    optional frames [B,S_enc,F] (audio) / patches [B,P,F] (vlm)."""
+    optional segments [S] (packed multi-document rows: causal within each
+    document), frames [B,S_enc,F] (audio) / patches [B,P,F] (vlm)."""
     tokens = batch["tokens"]
     positions = batch["positions"]
+    segments = batch.get("segments")
+    if segments is not None and cfg.ssm is not None:
+        raise ValueError(
+            "packed multi-document batches are attention-only: the SSD "
+            "recurrent state has no per-document reset"
+        )
     x = jnp.take(params["embed"], tokens, axis=0)
     if cfg.frontend == "vision_stub":
         x = _merge_patches(x, params, positions, batch["patches"], cfg.num_patches)
@@ -214,7 +223,9 @@ def forward(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict) -> Tuple[jn
     if cfg.encoder_layers:
         enc = _encode_audio(params, cfg, ctx, batch["frames"])
 
-    body = functools.partial(_decoder_block, cfg=cfg, ctx=ctx, positions=positions, enc=enc)
+    body = functools.partial(
+        _decoder_block, cfg=cfg, ctx=ctx, positions=positions, enc=enc, segments=segments
+    )
     x, aux = _scan_layers(x, params["layers"], lambda h, lp: body(h, lp), ctx)
     x = _final_norm(x, params, cfg)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
@@ -405,6 +416,26 @@ def _cache_scatter_indices(cfg: ModelConfig, S: int, cap: int, n: int):
     return jnp.asarray(g)
 
 
+def _project_kv_for_cache(h, lp, cfg: ModelConfig, positions):
+    """The K/V (or MLA latent) a prefill writes into the cache for ``h``
+    [B, S, D] at ``positions`` [S]."""
+    B, S = h.shape[0], h.shape[1]
+    if cfg.mla is not None:
+        m = cfg.mla
+        kv_a = h @ lp["wkv_a"]
+        c_kv = rms_norm(kv_a[..., : m.kv_lora_rank], lp["kv_ln"])
+        k_rope = rope(kv_a[..., None, m.kv_lora_rank :], positions, cfg.rope_theta)
+        lat = jnp.concatenate([c_kv[:, :, None, :], k_rope], axis=-1)
+        return lat, lat
+    k = h @ lp["wk"]
+    v = h @ lp["wv"]
+    if cfg.qkv_bias:
+        k, v = k + lp["bk"], v + lp["bv"]
+    k = rope(k.reshape(B, S, cfg.num_kv_heads, cfg.hd), positions, cfg.rope_theta)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.hd)
+    return k, v
+
+
 def prefill(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
     """Forward over the prompt, writing the striped KV cache per layer.
 
@@ -438,21 +469,7 @@ def prefill(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
     layer_cache = {k: cache[k] for k in keys}
 
     def _kv_for_cache(h, lp):
-        if cfg.mla is not None:
-            m = cfg.mla
-            kv_a = h @ lp["wkv_a"]
-            c_kv = rms_norm(kv_a[..., : m.kv_lora_rank], lp["kv_ln"])
-            k_rope = rope(kv_a[..., None, m.kv_lora_rank :], positions, cfg.rope_theta)
-            lat = jnp.concatenate([c_kv[:, :, None, :], k_rope], axis=-1)
-            return lat, lat
-        k = h @ lp["wk"]
-        v = h @ lp["wv"]
-        if cfg.qkv_bias:
-            k, v = k + lp["bk"], v + lp["bv"]
-        B = h.shape[0]
-        k = rope(k.reshape(B, S, cfg.num_kv_heads, cfg.hd), positions, cfg.rope_theta)
-        v = v.reshape(B, S, cfg.num_kv_heads, cfg.hd)
-        return k, v
+        return _project_kv_for_cache(h, lp, cfg, positions)
 
     def body(x, inp):
         lp, cl = inp
@@ -516,4 +533,83 @@ def prefill(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
     new_cache = dict(cache)
     new_cache.update(new_layer_cache)
     new_cache["pos"] = new_pos
+    return logits, new_cache
+
+
+def prefill_packed(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
+    """Packed multi-document prefill: several prompts share ONE batch row.
+
+    The row carries a document (segment-id) attention mask — causal within
+    each prompt, nothing across prompts — and each document's K/V is
+    scattered into ITS OWN slot row of the pool cache, so one forward pass
+    prefills several serving slots.
+
+    ``batch`` (all in the row's striped order where applicable):
+      tokens    [1, P]  the packed, right-padded row
+      positions [P]     per-document positions (restart at each doc start)
+      segments  [P]     document id per token; pads carry id >= k
+      doc_lens  [k]     true prompt lengths (runtime)
+      slots     [k]     pool slot per document (runtime)
+
+    ``cache`` is the POOL cache ([L, num_slots, cap, ...]).  Returns
+    (first-token logits [k, V], new cache).  Attention-only decoder archs:
+    the SSD recurrent state has no per-document reset, encoder/frontend
+    archs have per-row side inputs that do not pack.
+    """
+    if cfg.ssm is not None or cfg.encoder_layers or cfg.frontend:
+        raise ValueError("packed prefill supports attention-only decoder archs")
+    tokens, positions = batch["tokens"], batch["positions"]
+    segments = batch["segments"]
+    doc_lens = batch["doc_lens"].astype(jnp.int32)
+    slots = batch["slots"].astype(jnp.int32)
+    k_docs = slots.shape[0]
+    nslots, cap = cache["k"].shape[1], cache["k"].shape[2]
+    n = ctx.sp_size
+
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = ctx.constrain(x, "seq", None)
+
+    # cache coordinates per token: document d's position p lands in slot row
+    # slots[d] at the striped cache index (p % n)*(cap/n) + p//n; pads get an
+    # out-of-range row and are dropped by the scatter
+    pad = segments >= k_docs
+    row_idx = jnp.where(pad, nslots, slots[jnp.clip(segments, 0, k_docs - 1)])
+    if n > 1:
+        g_idx = (positions % n) * (cap // n) + positions // n
+    else:
+        g_idx = positions
+
+    def body(x, inp):
+        lp, cl = inp
+        new_cl = dict(cl)
+        h = rms_norm(x, lp["attn"]["ln"]) if cfg.norm == "rmsnorm" else layer_norm(
+            x, lp["attn"]["ln"], lp["attn"]["ln_b"]
+        )
+        kk, vv = _project_kv_for_cache(h, lp["attn"], cfg, positions)
+        new_cl["k"] = cl["k"].at[row_idx, g_idx].set(
+            kk[0].astype(cl["k"].dtype), mode="drop"
+        )
+        new_cl["v"] = cl["v"].at[row_idx, g_idx].set(
+            vv[0].astype(cl["v"].dtype), mode="drop"
+        )
+        x, _ = _decoder_block(x, lp, cfg, ctx, positions, segments=segments)
+        return x, new_cl
+
+    if ctx.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    layer_cache = {key: cache[key] for key in ("k", "v")}
+    x, new_layer_cache = _stack_scan(body, x, (params["layers"], layer_cache), ctx)
+    x = _final_norm(x, params, cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    # document d's last real token sits where segments == d AND positions ==
+    # doc_lens[d]-1 (striping scrambles index != position)
+    match = (segments[None, :] == jnp.arange(k_docs)[:, None]) & (
+        positions[None, :] == (doc_lens - 1)[:, None]
+    )
+    last_idx = jnp.argmax(match, axis=1)  # [k]
+    x_last = x[0, last_idx]  # [k, D]
+    logits = x_last @ head.astype(x.dtype)
+    new_cache = dict(cache)
+    new_cache.update(new_layer_cache)
+    new_cache["pos"] = cache["pos"].at[slots].set(doc_lens)
     return logits, new_cache

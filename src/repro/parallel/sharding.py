@@ -166,6 +166,8 @@ def batch_specs(cfg, ctx: ParallelCtx, *, kind: str = "train", batch: Optional[i
         "tokens": P(bs, seq),
         "labels": P(bs, seq),
         "positions": P(seq),
+        "segments": P(seq),  # packed-document ids ride with the tokens
+        "mask": P(bs, seq),
     }
     if cfg.frontend == "audio_stub":
         # encoder frame count need not divide the model axis; keep seq local

@@ -56,6 +56,8 @@ class ServeEngine:
         num_slots: int = 4,
         prefill_buckets: Optional[Sequence[int]] = None,
         eos_id: Optional[int] = None,
+        pack_prefill: bool = True,
+        pack_max: int = 4,
     ):
         self.cfg = cfg
         self.ctx = ctx or ParallelCtx()
@@ -75,6 +77,16 @@ class ServeEngine:
         self.scheduler = Scheduler(
             num_slots, buckets, max_seq, exact=exact, multiple=n,
             chunk=cfg.ssm.chunk if exact else None,
+        )
+        # packed prefill: several same-tick admissions share one row under a
+        # document mask (attention-only decoder archs; SSD state and per-row
+        # frontend/encoder side inputs do not pack)
+        self.pack_max = max(1, pack_max)
+        self._can_pack = (
+            pack_prefill
+            and cfg.ssm is None
+            and not cfg.encoder_layers
+            and cfg.frontend is None
         )
         # the declarative attention plan this engine serves under (the
         # prefill path resolves its backend/tile through this via dispatch)
@@ -174,6 +186,68 @@ class ServeEngine:
         self._prefill_fns[bucket] = jitted
         return jitted
 
+    def _get_prefill_packed(self, bucket: int, k: int):
+        """Jitted packed prefill for ``k`` documents sharing one ``bucket``
+        row — scatters each document's K/V into its own slot.  Trace count
+        keys are (bucket, k): retraces stay bounded by buckets x pack sizes,
+        independent of the actual prompt-length mix."""
+        key = (bucket, k)
+        if key in self._prefill_fns:
+            return self._prefill_fns[key]
+        cfg, ctx = self.cfg, self.ctx
+        n = ctx.sp_size
+        if self.attn_plan.autotune and n > 1:
+            # pre-resolve the segment-masked plan for this bucket geometry
+            # through the on-disk cache (mask signature is part of the key)
+            from repro.core.masking import MaskSpec
+
+            act_dtype = jax.tree.leaves(self.params)[0].dtype
+            plan = dispatch.plan_from_ctx(
+                ctx, mask=MaskSpec.segment(window=cfg.window), layout=cfg.causal_layout
+            )
+            dispatch.plan_schedules(
+                plan,
+                CommModel(
+                    seq=bucket,
+                    hidden=cfg.num_heads * cfg.hd,
+                    n=n,
+                    kv_hidden=cfg.num_kv_heads * cfg.hd,
+                    bytes_per_elem=jnp.dtype(act_dtype).itemsize,
+                    batch=1,
+                ),
+            )
+        if n > 1 and cfg.causal_layout == "striped":
+            from repro.core.tiling import stripe_permutation
+
+            perm = np.asarray(stripe_permutation(bucket, n))
+        else:
+            perm = np.arange(bucket)
+        perm_j = jnp.asarray(perm)
+        self.prefill_trace_counts.setdefault(key, 0)
+
+        def fn(params, cache, tokens, doc_lens, slots):
+            self.prefill_trace_counts[key] += 1  # trace-time only
+            j = jnp.arange(bucket, dtype=jnp.int32)
+            cum = jnp.cumsum(doc_lens)
+            starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), cum[:-1]])
+            seg = jnp.sum(j[:, None] >= starts[None, :], axis=1).astype(jnp.int32) - 1
+            pad = j >= cum[-1]
+            seg = jnp.where(pad, jnp.int32(k), seg)  # pads match nothing real
+            positions = j - starts[jnp.clip(seg, 0, k - 1)]
+            batch = {
+                "tokens": tokens[:, perm],  # §3.7 stripe, as in the data pipeline
+                "positions": positions[perm_j],
+                "segments": seg[perm_j],
+                "doc_lens": doc_lens,
+                "slots": slots,
+            }
+            logits, cache = tfm.prefill_packed(params, cfg, ctx, batch, cache)
+            return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [k]
+
+        jitted = jax.jit(fn)
+        self._prefill_fns[key] = jitted
+        return jitted
+
     # -- streaming API ------------------------------------------------------
 
     def submit(
@@ -198,29 +272,65 @@ class ServeEngine:
             return True
         return len(req.generated) >= req.max_new_tokens
 
+    def _prefill_single(self, slot: int, req: Request) -> int:
+        """Legacy one-row-per-request prefill (exact/frontend archs)."""
+        bucket = self.scheduler.bucket_for(len(req.prompt))
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, : len(req.prompt)] = req.prompt
+        fn = self._get_prefill(bucket)
+        self._cache, first = fn(
+            self.params,
+            self._cache,
+            jnp.asarray(toks),
+            jnp.asarray(len(req.prompt), jnp.int32),
+            jnp.asarray(slot, jnp.int32),
+        )
+        return int(np.asarray(first)[0, 0])
+
+    def _prefill_group(self, group) -> List[int]:
+        """Packed prefill: the group's prompts concatenate into one bucket
+        row under a document mask; each document's K/V lands in its own
+        slot.  Returns the first generated token per request."""
+        lens = [len(req.prompt) for _, req in group]
+        bucket = self.scheduler.bucket_for(sum(lens))
+        k = len(group)
+        toks = np.zeros((1, bucket), np.int32)
+        off = 0
+        for (_, req), ln in zip(group, lens):
+            toks[0, off : off + ln] = req.prompt
+            off += ln
+        fn = self._get_prefill_packed(bucket, k)
+        self._cache, firsts = fn(
+            self.params,
+            self._cache,
+            jnp.asarray(toks),
+            jnp.asarray(lens, jnp.int32),
+            jnp.asarray([slot for slot, _ in group], jnp.int32),
+        )
+        return [int(t) for t in np.asarray(firsts)]
+
     def step(self) -> List[Request]:
-        """One engine tick: admit+prefill into free slots, then one jitted
-        decode over ALL slots.  Returns requests finished this tick."""
+        """One engine tick: admit+prefill into free slots (same-tick
+        admissions PACK into shared rows under a document mask), then one
+        jitted decode over ALL slots.  Returns requests finished this tick."""
         finished: List[Request] = []
-        # 1. admission: bucketed prefill straight into assigned slot rows
-        for slot, req in self.scheduler.admit(self._tick):
-            bucket = self.scheduler.bucket_for(len(req.prompt))
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, : len(req.prompt)] = req.prompt
-            fn = self._get_prefill(bucket)
-            self._cache, first = fn(
-                self.params,
-                self._cache,
-                jnp.asarray(toks),
-                jnp.asarray(len(req.prompt), jnp.int32),
-                jnp.asarray(slot, jnp.int32),
-            )
-            tok = int(np.asarray(first)[0, 0])
-            req.generated.append(tok)
-            req.first_token_tick = self._tick
-            self._cur[slot, 0] = tok
-            if self._req_done(req, tok):
-                finished.append(self._finish(slot))
+        # 1. admission: bucketed (packed) prefill straight into slot rows
+        assigned = self.scheduler.admit(self._tick)
+        if self._can_pack:
+            groups = self.scheduler.pack_groups(assigned, pack_max=self.pack_max)
+        else:
+            groups = [[x] for x in assigned]
+        for group in groups:
+            if self._can_pack:
+                firsts = self._prefill_group(group)
+            else:
+                firsts = [self._prefill_single(slot, req) for slot, req in group]
+            for tok, (slot, req) in zip(firsts, group):
+                req.generated.append(tok)
+                req.first_token_tick = self._tick
+                self._cur[slot, 0] = tok
+                if self._req_done(req, tok):
+                    finished.append(self._finish(slot))
         # 2. one decode step over every slot (mixed depths via pos: [B])
         active = self.scheduler.active_slots()
         if active:

@@ -126,6 +126,33 @@ class Scheduler:
             if b >= length:
                 return b
         raise ValueError(f"prompt length {length} exceeds largest bucket {self.buckets[-1]}")
+    def pack_groups(
+        self, assigned: List[Tuple[int, "Request"]], *, pack_max: int = 4
+    ) -> List[List[Tuple[int, "Request"]]]:
+        """Group same-tick admissions into packed prefill rows.
+
+        Greedy in admission order: a group closes when it reaches ``pack_max``
+        documents or its summed prompt length would overflow the largest
+        bucket.  Exact mode (SSM/hybrid) never packs — the recurrent state
+        has no per-document reset.
+        """
+        if self.exact or pack_max <= 1:
+            return [[x] for x in assigned]
+        cap = self.buckets[-1]
+        groups: List[List[Tuple[int, Request]]] = []
+        cur: List[Tuple[int, Request]] = []
+        cur_len = 0
+        for slot, req in assigned:
+            length = len(req.prompt)
+            if cur and (len(cur) >= pack_max or cur_len + length > cap):
+                groups.append(cur)
+                cur, cur_len = [], 0
+            cur.append((slot, req))
+            cur_len += length
+        if cur:
+            groups.append(cur)
+        return groups
+
     # -- per-tick operations ------------------------------------------------
 
     def admit(self, tick: int) -> List[Tuple[int, Request]]:

@@ -56,6 +56,7 @@ class TrainConfig:
     log_every: int = 10
     param_dtype: object = jnp.float32
     compression: Optional[CompressionConfig] = None
+    docs: Optional[int] = None  # pack N documents per row (segment-mask attention)
 
 
 def make_train_step(cfg: ModelConfig, ctx: ParallelCtx, opt_cfg: AdamWConfig,
@@ -109,7 +110,7 @@ def make_train_step(cfg: ModelConfig, ctx: ParallelCtx, opt_cfg: AdamWConfig,
             # through GSPMD from the arrays' own shardings
             rep = jax.tree.map(lambda _: P(), params)
             orep = OptState(P(), rep, rep)
-            bspec = {k: (P() if k == "positions" else P("pod")) for k in batch}
+            bspec = {k: (P() if k in ("positions", "segments") else P("pod")) for k in batch}
             f = shard_map(
                 partial(inner),
                 mesh=ctx.mesh,
@@ -200,7 +201,9 @@ def fit(
         if preempt.flag:
             save_now(step)
             return {"interrupted": True, "step": step, "history": history}
-        batch = make_batch(cfg, tcfg.seq, tcfg.batch, seed=tcfg.seed, step=step, ctx=ctx)
+        batch = make_batch(
+            cfg, tcfg.seq, tcfg.batch, seed=tcfg.seed, step=step, ctx=ctx, docs=tcfg.docs
+        )
         batch = _shard_batch(batch, cfg, ctx)
         t0 = time.perf_counter()
         params, opt_state, err, metrics = step_fn(params, opt_state, err, batch)

@@ -74,3 +74,10 @@ def test_dispatch_seam():
     """repro.core.dispatch routes every backend (incl. the autotuned mesh
     plan with its on-disk cache) to oracle-identical results."""
     _run_checks("dispatch")
+
+
+def test_mask_pruning_and_packed_prefill():
+    """First-class masks: a document-masked (2,4)-mesh workload prunes
+    schedule blocks + comm with BITWISE-identical outputs and grads; packed
+    multi-prompt serve prefill == sequential per-request generation."""
+    _run_checks("mask_prune", "packed_prefill")

@@ -113,11 +113,12 @@ def test_cache_allocated_once_across_generates(monkeypatch):
 
 
 def test_retrace_bounded_by_buckets():
-    """Retraces are a function of the bucket set, not batch composition:
-    many prompt lengths and arrival patterns, two buckets, two traces."""
+    """Retraces are a function of (bucket, pack-size) pairs, not the actual
+    prompt-length mix: packed prefill keys are (bucket, k) and a fresh
+    composition hitting the same keys must not trace anything new."""
     cfg, params, eng = _engine(num_slots=2, max_seq=64)
     rng = np.random.default_rng(0)
-    lengths = [8, 16, 9, 30, 31, 12]  # -> buckets {16, 32} only
+    lengths = [8, 16, 9, 30, 31, 12]
     for i, ln in enumerate(lengths):
         eng.submit(
             rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32),
@@ -125,15 +126,42 @@ def test_retrace_bounded_by_buckets():
             arrival_tick=i // 3,
         )
     eng.run()
-    assert set(eng.prefill_trace_counts) == {16, 32}
+    buckets = set(eng.scheduler.buckets)
+    assert all(b in buckets and 1 <= k <= eng.pack_max
+               for b, k in eng.prefill_trace_counts)
     assert all(v == 1 for v in eng.prefill_trace_counts.values())
     assert eng.decode_trace_count == 1
-    # a fresh composition of the same buckets: zero new traces
-    for ln in (10, 20, 15):
+    keys_before = set(eng.prefill_trace_counts)
+    # a fresh composition mapping to already-traced (bucket, k) keys: the
+    # first batch's tick-0 pair packed into (32, 2), so 10+20 does too
+    for ln in (10, 20):
         eng.submit(rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32), 3)
     eng.run()
+    assert set(eng.prefill_trace_counts) == keys_before
     assert all(v == 1 for v in eng.prefill_trace_counts.values())
     assert eng.decode_trace_count == 1
+
+
+def test_packed_prefill_matches_sequential():
+    """Same-tick admissions pack into ONE prefill row under a document mask;
+    every request's tokens must equal sequential single-request generation,
+    and the un-packed engine must agree token-for-token too."""
+    cfg, params, eng = _engine(num_slots=3, max_seq=128)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32) for ln in (16, 8, 8)]
+    rids = [eng.submit(p, max_new_tokens=4, arrival_tick=0) for p in prompts]
+    finished = eng.run()
+    # the three same-tick prompts shared one packed (bucket=32, k=3) prefill
+    assert eng.prefill_trace_counts == {(32, 3): 1}, eng.prefill_trace_counts
+    seq_eng = ServeEngine(cfg, params, max_seq=128, num_slots=1)
+    nopack = ServeEngine(cfg, params, max_seq=128, num_slots=3, pack_prefill=False)
+    rids_np = [nopack.submit(p, max_new_tokens=4, arrival_tick=0) for p in prompts]
+    fin_np = nopack.run()
+    assert all(isinstance(key, int) for key in nopack.prefill_trace_counts)
+    for rid, rid_np, p in zip(rids, rids_np, prompts):
+        ref = seq_eng.generate(p[None, :], max_new_tokens=4)[0].tolist()
+        assert finished[rid].generated == ref, (finished[rid].generated, ref)
+        assert fin_np[rid_np].generated == ref
 
 
 def test_continuous_matches_sequential():
