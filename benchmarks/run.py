@@ -407,10 +407,12 @@ def bench_serve():
     payload = run_bench("granite-8b", slots=4, requests=8, new_tokens=6)
     _save("serve_bench", payload)
     lat = payload["latency_s"]
+    ratio = payload["paged_prefix"]["bytes_per_request_ratio"]
     _emit(
         "serve_bench", payload["wall_s"] / max(payload["ticks"], 1) * 1e6,
         f"tok_per_s={payload['tokens_per_s']:.1f} "
-        f"p50={lat['p50']:.3f}s p95={lat['p95']:.3f}s",
+        f"p50={lat['p50']:.3f}s p95={lat['p95']:.3f}s "
+        f"paged_bytes_per_req={ratio:.2f}x_dense",
     )
     return payload
 

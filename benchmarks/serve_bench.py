@@ -8,6 +8,16 @@ config, current backend — a smoke-level trajectory number on CPU CI, a real
 measurement on accelerators) and writes JSON next to the table-2 results in
 ``benchmarks/results/serve_bench.json`` so the perf trajectory accumulates
 per commit (same convention as ``table2_comm_volume.json``).
+
+Two comparison sections ride along in the payload:
+
+  * ``pack_planner`` — the same bursty trace under the greedy vs the
+    bin-packing ``Scheduler.pack_groups`` planner: padded prefill tokens and
+    TTFT percentiles, plus the deltas.
+  * ``paged_prefix`` — a shared-prefix trace (every request opens with the
+    same system prompt) on the dense vs the PAGED engine: attention-cache
+    bytes per request (dense: the fixed slot pool; paged: peak resident
+    pages) and TTFT, with the allocator's sharing counters.
 """
 
 from __future__ import annotations
@@ -33,6 +43,137 @@ def _pct(sorted_vals, p):
         return None
     i = min(len(sorted_vals) - 1, int(round(p / 100 * (len(sorted_vals) - 1))))
     return sorted_vals[i]
+
+
+def _replay(eng, prompts, arrivals, new_tokens, before_timed=None):
+    """Submit a trace twice (warmup compiles outside the timed region), time
+    the second pass, and return (requests, ticks, wall_s).  ``before_timed``
+    runs between the passes — snapshot engine/allocator counters there so
+    reported stats cover the timed trace only, not the warmup too."""
+    import time
+
+    def submit():
+        base = eng._tick
+        return [
+            eng.submit(p, max_new_tokens=new_tokens, arrival_tick=base + t)
+            for p, t in zip(prompts, arrivals)
+        ]
+
+    submit()
+    eng.run()
+    if before_timed is not None:
+        before_timed()
+    base_tick = eng._tick
+    rids = submit()
+    t0 = time.perf_counter()
+    while eng.has_work:
+        eng.step()
+    wall = time.perf_counter() - t0
+    return [eng._finished[r] for r in rids], eng._tick - base_tick, wall
+
+
+def _ttft(reqs, tick_s):
+    vals = sorted((r.first_token_tick - r.arrival_tick + 1) * tick_s for r in reqs)
+    return {"p50": _pct(vals, 50), "p95": _pct(vals, 95)}
+
+
+def bench_pack_planner(cfg, params, *, seed=0, new_tokens=4, max_seq=128):
+    """Bursty trace (same-tick admission waves of mixed short lengths) under
+    the greedy vs the bin-packing pack planner: TTFT + padded prefill cost."""
+    import numpy as np
+
+    from repro.serve.engine import ServeEngine
+
+    rng = np.random.default_rng(seed)
+    # bursts crafted around bucket boundaries: greedy admission-order packing
+    # crams across them, binpack snaps groups to boundaries
+    lengths = [9, 8, 16, 30, 17, 15, 9, 8]
+    arrivals = [0, 0, 0, 3, 3, 3, 6, 6]
+    prompts = [rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32) for ln in lengths]
+    out = {}
+    real_tokens = sum(lengths)
+    for plan in ("greedy", "binpack"):
+        eng = ServeEngine(
+            cfg, params, max_seq=max_seq, num_slots=4, pack_plan=plan
+        )
+        snap = {}
+
+        def before_timed():
+            snap.update(launches=eng.prefill_launches,
+                        tokens=eng.prefill_launch_tokens)
+
+        reqs, ticks, wall = _replay(
+            eng, prompts, arrivals, new_tokens, before_timed=before_timed
+        )
+        tick_s = wall / max(ticks, 1)
+        padded = eng.prefill_launch_tokens - snap["tokens"]
+        out[plan] = {
+            "ttft_s": _ttft(reqs, tick_s),
+            "ticks": ticks,
+            "prefill_launches": eng.prefill_launches - snap["launches"],
+            "padded_prefill_tokens": padded,
+            "prefill_utilization": real_tokens / max(padded, 1),
+        }
+    g, b = out["greedy"]["ttft_s"]["p50"], out["binpack"]["ttft_s"]["p50"]
+    out["ttft_p50_delta_s"] = (g or 0) - (b or 0)  # >0: binpack faster
+    out["padded_tokens_saved"] = (
+        out["greedy"]["padded_prefill_tokens"] - out["binpack"]["padded_prefill_tokens"]
+    )
+    return out
+
+
+def bench_paged_prefix(cfg, params, *, seed=0, requests=6, new_tokens=4, max_seq=128):
+    """Shared-prefix trace: every request opens with the same 32-token system
+    prompt.  Dense vs paged engine: cache bytes per request + TTFT."""
+    import numpy as np
+
+    from repro.serve.engine import ServeEngine
+
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, (32,), dtype=np.int32)
+    prompts = [
+        np.concatenate(
+            [prefix, rng.integers(0, cfg.vocab_size, (int(rng.choice([8, 16])),),
+                                  dtype=np.int32)]
+        )
+        for _ in range(requests)
+    ]
+    arrivals = [i // 2 for i in range(requests)]
+    out = {}
+    for mode in ("dense", "paged"):
+        kw = dict(paged=True, page_size=8) if mode == "paged" else {}
+        eng = ServeEngine(cfg, params, max_seq=max_seq, num_slots=4, **kw)
+        snap = {}
+
+        def before_timed():
+            if eng.allocator is not None:
+                snap.update(eng.allocator.stats())
+
+        reqs, ticks, wall = _replay(
+            eng, prompts, arrivals, new_tokens, before_timed=before_timed
+        )
+        tick_s = wall / max(ticks, 1)
+        stats = eng.kv_cache_stats()
+        resident = stats.get("peak_page_bytes", stats["cache_bytes"])
+        out[mode] = {
+            "ttft_s": _ttft(reqs, tick_s),
+            "ticks": ticks,
+            "cache_bytes": stats["cache_bytes"],
+            "resident_cache_bytes": resident,
+            "cache_bytes_per_request": resident / requests,
+            **(
+                # counters accumulate over warmup + timed: report the timed
+                # trace's deltas only
+                {k: stats[k] - snap[k] for k in
+                 ("shared_hits", "fresh_allocs", "cow_copies")}
+                if mode == "paged" else {}
+            ),
+        }
+    d, p = out["dense"], out["paged"]
+    out["bytes_per_request_ratio"] = (
+        p["cache_bytes_per_request"] / max(d["cache_bytes_per_request"], 1.0)
+    )
+    return out
 
 
 def run_bench(
@@ -108,6 +249,16 @@ def run_bench(
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
     }
+    # packing and the paged cache serve attention-only decoder archs: the
+    # comparison sections skip SSM/encoder/frontend configs instead of
+    # crashing the whole benchmark
+    if cfg.ssm is None and not cfg.encoder_layers and cfg.frontend is None:
+        payload["pack_planner"] = bench_pack_planner(
+            cfg, params, seed=seed, max_seq=max_seq
+        )
+        payload["paged_prefix"] = bench_paged_prefix(
+            cfg, params, seed=seed, max_seq=max_seq
+        )
     return payload
 
 
@@ -127,8 +278,14 @@ def main(argv=None) -> int:
     os.makedirs(os.path.dirname(args.json_out), exist_ok=True)
     with open(args.json_out, "w") as f:
         json.dump(payload, f, indent=1)
-    print(json.dumps({k: payload[k] for k in
-                      ("tokens_per_s", "latency_s", "first_token_s", "ticks")}))
+    summary = {k: payload[k] for k in
+               ("tokens_per_s", "latency_s", "first_token_s", "ticks")}
+    if "pack_planner" in payload:
+        summary["pack_ttft_p50_delta_s"] = payload["pack_planner"]["ttft_p50_delta_s"]
+        summary["paged_bytes_per_request_ratio"] = (
+            payload["paged_prefix"]["bytes_per_request_ratio"]
+        )
+    print(json.dumps(summary))
     return 0
 
 

@@ -20,6 +20,24 @@ case) or an int32 ``[B]`` vector of per-slot positions.  The vector form is
 what makes continuous batching cheap here: each slot's owner/band math is
 independent, so one step serves slots at arbitrary mixed depths with the same
 O(B·H·D) per-token combine.
+
+Two cache layouts share the band math:
+
+  * **dense** (``sharded_cache_*``) — each batch row owns a ``[cap/n]``
+    local slice; owner shard -> slot row.
+  * **paged** (``paged_cache_*``) — rows share one physical page pool
+    ``[num_pages, page_size, Hkv, D]`` per device, addressed through an int32
+    block table ``[B, max_pages]`` (``serve/kv_pool.py`` owns the allocator);
+    owner shard -> (page, offset).  The decode band gathers the row's pages
+    into the same local-position order the dense slice has, so the kernel
+    call — and therefore the numerics — are identical to the dense path.
+
+Under a sliding window, shards whose whole local slice provably falls outside
+every row's window skip the kernel call entirely (``lax.cond``): the skip
+branch returns the exact empty-band result (o = 0, lse = NEG_INF), so the
+psum combine is bitwise-unchanged.  The bound is shard-uniform — one window
+start per shard, rounded down over the batch (min over rows, floored to a
+stripe multiple) — so pruning never depends on a single row's depth.
 """
 
 from __future__ import annotations
@@ -33,7 +51,12 @@ from jax import lax
 from repro.kernels import ops
 from repro.kernels.ref import BAND_INF, NEG_INF
 
-__all__ = ["sharded_cache_decode", "sharded_cache_update"]
+__all__ = [
+    "sharded_cache_decode",
+    "sharded_cache_update",
+    "paged_cache_decode",
+    "paged_cache_update",
+]
 
 
 def _owner_slot(pos, i, n: int, m: int, layout: str):
@@ -77,6 +100,98 @@ def sharded_cache_update(
     return out[0], out[1]
 
 
+def _shard_geometry(i, n: int, m: int, layout: str):
+    """(kv_offset, stride) of local slot s -> global position for the band."""
+    if layout == "striped":
+        return i, n
+    return i * m, 1
+
+
+def _window_nonempty(pos, i, n: int, m: int, layout: str, window: int):
+    """Shard-uniform visibility: can ANY local slot of this shard fall inside
+    ANY row's window [pos - window + 1, pos]?  The window start is rounded
+    DOWN over the batch (min over rows, then floored to a multiple of n) so
+    the bound is uniform per shard — conservative: errs toward computing."""
+    pos = jnp.asarray(pos, jnp.int32)
+    hi_pos = jnp.max(pos)  # newest visible position over the batch
+    lo_pos = jnp.maximum(jnp.min(pos) - (window - 1), 0)
+    lo_pos = (lo_pos // n) * n  # shard-uniform round-down
+    if layout == "striped":
+        # shard i holds positions i, i+n, ...: visible iff some j >= 0 with
+        # i + n*j in [lo_pos, hi_pos] and j < m
+        lo_j = (lo_pos - i + n - 1) // n
+        hi_j = (hi_pos - i) // n
+        lo_j = jnp.maximum(lo_j, 0)
+        return (hi_j >= lo_j) & (lo_j < m) & (hi_pos >= i)
+    # contiguous: shard i holds [i*m, (i+1)*m)
+    return (i * m <= hi_pos) & ((i + 1) * m - 1 >= lo_pos)
+
+
+def _psum_combine(o, lse, axis_name: Optional[str], q_dtype):
+    """lse-weighted psum of per-shard partials (softmax over disjoint KV)."""
+    if axis_name is None:
+        return o.astype(q_dtype)
+    mx = lax.pmax(lse, axis_name)  # [B, H, 1]
+    mx = jnp.maximum(mx, NEG_INF)
+    w = jnp.exp(lse - mx)  # zero for empty shards
+    num = lax.psum(o.astype(jnp.float32) * w.swapaxes(1, 2)[..., None], axis_name)
+    den = lax.psum(w, axis_name)
+    den_safe = jnp.where(den > 0, den, 1.0)
+    out = num / den_safe.swapaxes(1, 2)[..., None]
+    return out.astype(q_dtype)
+
+
+def _banded_partial(q, k_loc, v_loc, pos, kv_off, stride_kv, hi, scale):
+    """Per-shard partial flash-decode; scalar pos batches the kernel call,
+    vector pos maps it over rows (the band's q offset differs per row)."""
+    if pos.ndim == 0:
+        band = jnp.stack(
+            [pos, jnp.asarray(kv_off, jnp.int32), jnp.int32(0), jnp.int32(hi)]
+        )
+        return ops.block_attention(
+            q, k_loc, v_loc, band, scale=scale, stride_q=1, stride_kv=stride_kv
+        )
+
+    def one(qb, kb, vb, pb):
+        band = jnp.stack(
+            [pb, jnp.asarray(kv_off, jnp.int32), jnp.int32(0), jnp.int32(hi)]
+        )
+        ob, lb = ops.block_attention(
+            qb[None], kb[None], vb[None], band,
+            scale=scale, stride_q=1, stride_kv=stride_kv,
+        )
+        return ob[0], lb[0]
+
+    return jax.vmap(one)(q, k_loc, v_loc, pos)
+
+
+def _maybe_pruned_partial(
+    q, k_loc, v_loc, pos, i, n, m, layout, window, scale, prune,
+):
+    """The shard's partial, with the kernel call skipped (``lax.cond``) when a
+    sliding window provably hides every local slot.  The skip branch returns
+    the EXACT empty-band kernel result (o = 0, lse = NEG_INF), so downstream
+    combines are bitwise-identical to the unpruned program."""
+    kv_off, stride_kv = _shard_geometry(i, n, m, layout)
+    hi = (window - 1) if window else BAND_INF
+
+    def run(_):
+        return _banded_partial(q, k_loc, v_loc, pos, kv_off, stride_kv, hi, scale)
+
+    if not (prune and window):
+        return run(None)
+
+    B, H = q.shape[0], q.shape[2]
+
+    def skip(_):
+        return (
+            jnp.zeros(q.shape, q.dtype),
+            jnp.full((B, H, 1), NEG_INF, jnp.float32),
+        )
+
+    return lax.cond(_window_nonempty(pos, i, n, m, layout, window), run, skip, None)
+
+
 def sharded_cache_decode(
     q: jnp.ndarray,  # [B, 1, H, D] new token's query, replicated over the axis
     k_cache: jnp.ndarray,  # [B, m, Hkv, D] local slice
@@ -88,52 +203,102 @@ def sharded_cache_decode(
     layout: str = "striped",
     window: Optional[int] = None,
     scale: Optional[float] = None,
+    prune: bool = True,
 ) -> jnp.ndarray:
     """One decode step: partial attention per shard + lse-weighted psum."""
     i = lax.axis_index(axis_name)
     m = k_cache.shape[1]
     pos = jnp.asarray(pos, jnp.int32)
-    hi = (window - 1) if window else BAND_INF
-    # global position of local slot s: striped: i + n*s; contiguous: i*m + s
-    if layout == "striped":
-        kv_off, stride_kv = i, n
-    else:
-        kv_off, stride_kv = i * m, 1
-    if pos.ndim == 0:
-        band = jnp.stack(
-            [
-                pos,
-                jnp.asarray(kv_off, jnp.int32),
-                jnp.int32(0),
-                jnp.int32(hi),
-            ]
-        )
-        o, lse = ops.block_attention(
-            q, k_cache, v_cache, band, scale=scale, stride_q=1, stride_kv=stride_kv
-        )
-    else:
-        # per-slot depths: the band's q offset differs per batch row, so map
-        # the kernel over the batch (the psum combine below stays batched)
-        def one(qb, kb, vb, pb):
-            band = jnp.stack(
-                [pb, jnp.asarray(kv_off, jnp.int32), jnp.int32(0), jnp.int32(hi)]
-            )
-            ob, lb = ops.block_attention(
-                qb[None], kb[None], vb[None], band,
-                scale=scale, stride_q=1, stride_kv=stride_kv,
-            )
-            return ob[0], lb[0]
+    o, lse = _maybe_pruned_partial(
+        q, k_cache, v_cache, pos, i, n, m, layout, window, scale, prune
+    )
+    return _psum_combine(o, lse, axis_name, q.dtype)
 
-        o, lse = jax.vmap(one)(q, k_cache, v_cache, pos)
-    # combine partials across shards: softmax-weighted by exp(lse - max)
-    mx = lax.pmax(lse, axis_name)  # [B, H, 1]
-    mx = jnp.maximum(mx, NEG_INF)
-    w = jnp.exp(lse - mx)  # zero for empty shards
-    num = lax.psum(o.astype(jnp.float32) * w.swapaxes(1, 2)[..., None], axis_name)
-    den = lax.psum(w, axis_name)
-    den_safe = jnp.where(den > 0, den, 1.0)
-    out = num / den_safe.swapaxes(1, 2)[..., None]
-    return out.astype(q.dtype)
+
+# --------------------------------------------------------------------------
+# paged cache: physical page pool + block table (serve/kv_pool.py allocator)
+# --------------------------------------------------------------------------
+
+
+def _page_coords(pos, i, n: int, page_size: int, max_pages: int, layout: str):
+    """Owner shard -> (logical page, offset) for global position ``pos``.
+    The paged analogue of ``_owner_slot``: the dense local slot j just splits
+    into (j // page_size, j % page_size)."""
+    m = max_pages * page_size  # virtual local capacity
+    is_owner, j = _owner_slot(pos, i, n, m, layout)
+    return is_owner & (pos < n * m), j // page_size, j % page_size
+
+
+def paged_cache_update(
+    k_pool: jnp.ndarray,  # [num_pages, page_size, Hkv, D] local page pool
+    v_pool: jnp.ndarray,
+    k_new: jnp.ndarray,  # [B, 1, Hkv, D] replicated across the axis
+    v_new: jnp.ndarray,
+    block_table: jnp.ndarray,  # [B, max_pages] int32; -1 = unallocated
+    pos,  # int32 scalar or [B] vector
+    axis_name: Optional[str],
+    n: int,
+    layout: str = "striped",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter-by-block-table append: owner shard -> (page, offset).  Rows
+    past virtual capacity or pointing at unallocated pages are dropped (the
+    allocator only hands live slots a writable tail page)."""
+    i = lax.axis_index(axis_name) if axis_name is not None else 0
+    num_pages, page_size = k_pool.shape[0], k_pool.shape[1]
+    max_pages = block_table.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (k_new.shape[0],))
+    write, lp, off = _page_coords(pos, i, n, page_size, max_pages, layout)
+    lp = jnp.clip(lp, 0, max_pages - 1)
+    b = jnp.arange(k_new.shape[0])
+    phys = block_table[b, lp]
+    write = write & (phys >= 0)
+    # out-of-range page index -> scatter drops the row entirely
+    page_idx = jnp.where(write, phys, num_pages)
+    out = []
+    for pool, new in ((k_pool, k_new), (v_pool, v_new)):
+        out.append(pool.at[page_idx, off].set(new[:, 0].astype(pool.dtype), mode="drop"))
+    return out[0], out[1]
+
+
+def paged_cache_gather(k_pool, v_pool, block_table):
+    """Materialize each row's dense local view from its pages: [B, m, Hkv, D]
+    with m = max_pages * page_size, in the SAME local-position order as the
+    dense cache slice (so the band math is shared verbatim).  Unallocated
+    pages clamp to page 0 — whatever is there is hidden behind the band."""
+    num_pages, page_size = k_pool.shape[0], k_pool.shape[1]
+    idx = jnp.clip(block_table, 0, num_pages - 1)  # [B, max_pages]
+    out = []
+    for pool in (k_pool, v_pool):
+        pages = pool[idx]  # [B, max_pages, page_size, Hkv, D]
+        out.append(pages.reshape((idx.shape[0], -1) + pool.shape[2:]))
+    return out[0], out[1]
+
+
+def paged_cache_decode(
+    q: jnp.ndarray,  # [B, 1, H, D] replicated over the axis
+    k_pool: jnp.ndarray,  # [num_pages, page_size, Hkv, D] local page pool
+    v_pool: jnp.ndarray,
+    block_table: jnp.ndarray,  # [B, max_pages] int32
+    pos,  # int32 scalar or [B] vector
+    axis_name: Optional[str],
+    n: int,
+    *,
+    layout: str = "striped",
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    prune: bool = True,
+) -> jnp.ndarray:
+    """Gather-by-block-table decode: page-gather each row's local view, then
+    the identical banded partial + psum combine the dense path uses."""
+    i = lax.axis_index(axis_name) if axis_name is not None else 0
+    page_size, max_pages = k_pool.shape[1], block_table.shape[1]
+    m = max_pages * page_size
+    pos = jnp.asarray(pos, jnp.int32)
+    k_loc, v_loc = paged_cache_gather(k_pool, v_pool, block_table)
+    o, lse = _maybe_pruned_partial(
+        q, k_loc, v_loc, pos, i, n, m, layout, window, scale, prune
+    )
+    return _psum_combine(o, lse, axis_name, q.dtype)
 
 
 # backwards-compatible aliases (striped is the default layout)

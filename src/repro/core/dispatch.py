@@ -38,7 +38,12 @@ from repro.compat import shard_map
 from repro.core import autotune
 from repro.core import schedule as S
 from repro.core.am import CommModel
-from repro.core.decode_attention import sharded_cache_decode, sharded_cache_update
+from repro.core.decode_attention import (
+    paged_cache_decode,
+    paged_cache_update,
+    sharded_cache_decode,
+    sharded_cache_update,
+)
 from repro.core.masking import MaskSpec
 from repro.core.mesh_attention import MeshAttentionConfig, mesh_attention, mesh_attention_wire
 from repro.core.simulator import HardwareModel
@@ -94,6 +99,7 @@ class AttentionPlanConfig:
     bwd_wire: str = "qdod"
     allow_concurrent_rings: bool = False
     mask: Optional[MaskSpec] = None  # first-class mask; supersedes causal/window
+    paged: bool = False  # decode reads/writes a page pool through a block table
     # --- Figure-6 autotuning (simulator-planned tile + schedules) ---
     autotune: bool = False
     with_backward: bool = True
@@ -246,6 +252,9 @@ def _plan_key(cfg: AttentionPlanConfig, comm: CommModel, hw: HardwareModel) -> T
         "batch": comm.batch,
         "mask": cfg.mask_spec().signature(),
         "layout": cfg.layout,
+        # paged and dense decode stacks must never share a plan entry: the
+        # paged gather changes the achievable tile/arithmetic intensity
+        "paged": cfg.paged,
         "with_backward": cfg.with_backward,
         "allow_concurrent_rings": cfg.allow_concurrent_rings,
         "hw_profile": cfg.hw_profile,
@@ -406,8 +415,20 @@ def _local_flash_apply(q, k, v, cfg: AttentionPlanConfig, seg=None):
     )
 
 
-def _decode_step_local(q, k_new, v_new, k_cache, v_cache, pos, cfg: AttentionPlanConfig):
-    """One decode tick over the local cache slice (inside shard_map)."""
+def _decode_step_local(q, k_new, v_new, k_cache, v_cache, pos, cfg: AttentionPlanConfig, bt=None):
+    """One decode tick over the local cache slice (inside shard_map).  With
+    ``cfg.paged`` the caches are the physical page pool and ``bt`` is the
+    block table (owner shard -> (page, offset) instead of -> slot row)."""
+    if cfg.paged:
+        k_cache, v_cache = paged_cache_update(
+            k_cache, v_cache, k_new, v_new, bt, pos, cfg.axis_name, cfg.n,
+            layout=cfg.layout,
+        )
+        o = paged_cache_decode(
+            q, k_cache, v_cache, bt, pos, cfg.axis_name, cfg.n,
+            layout=cfg.layout, window=cfg.window, scale=cfg.scale,
+        )
+        return o, k_cache, v_cache
     k_cache, v_cache = sharded_cache_update(
         k_cache, v_cache, k_new, v_new, pos, cfg.axis_name, cfg.n, layout=cfg.layout
     )
@@ -531,24 +552,37 @@ def decode_attention_step(
     q,  # [B, 1, H, D]
     k_new,  # [B, 1, Hkv, D]
     v_new,
-    k_cache,  # [B, cap(/n), Hkv, D]; sharded over the sequence axis
-    v_cache,
+    k_cache,  # [B, cap(/n), Hkv, D]; sharded over the sequence axis — or,
+    v_cache,  # paged: the pool [num_pages, n*page_size, Hkv, D]
     pos,  # int32 scalar, or [B] vector of per-slot positions
     ctx,
     *,
     window: Optional[int] = None,
     layout: str = "striped",
     scale: Optional[float] = None,
+    block_table=None,  # int32 [B, max_pages]: switches to the paged cache
 ):
     """One token of cache-based decode through the 'decode' backend.
 
     Returns (o, new_k_cache, new_v_cache).  n == 1 runs the dense local
     update + flash-decode; otherwise the sequence-sharded cache path.
     Vector ``pos`` serves mixed-depth slots in one step (continuous batching).
+
+    ``block_table`` selects the PAGED cache: k/v are the physical page pool
+    (middle axis sharded over the sequence axis exactly like the dense cap
+    axis) and each row's pages are resolved through the table.  The pool has
+    no batch axis, so the paged step runs batch-REPLICATED over any data
+    axes — every device applies the identical pool update (slots are few;
+    pages, not rows, carry the memory).
     """
     n = ctx.sp_size
     pos = jnp.asarray(pos, jnp.int32)
     hi = (window - 1) if window else BAND_INF
+    if block_table is not None:
+        return _decode_attention_step_paged(
+            q, k_new, v_new, k_cache, v_cache, pos, block_table, ctx,
+            window=window, layout=layout, scale=scale,
+        )
     if n == 1:
         if pos.ndim == 0:
             k_cache = jax.lax.dynamic_update_slice_in_dim(
@@ -599,6 +633,43 @@ def decode_attention_step(
         check_vma=False,
     )
     return f(q, k_new, v_new, k_cache, v_cache, pos)
+
+
+def _decode_attention_step_paged(
+    q, k_new, v_new, k_pool, v_pool, pos, block_table, ctx,
+    *, window, layout, scale,
+):
+    """Paged decode step: the pool's page axis is unsharded, its position
+    axis is sharded over the sequence axis; everything else is replicated
+    (see ``decode_attention_step``)."""
+    n = ctx.sp_size
+    bt = jnp.asarray(block_table, jnp.int32)
+    if n == 1:
+        k_pool, v_pool = paged_cache_update(
+            k_pool, v_pool, k_new, v_new, bt, pos, None, 1, layout=layout
+        )
+        o = paged_cache_decode(
+            q, k_pool, v_pool, bt, pos, None, 1,
+            layout=layout, window=window, scale=scale,
+        )
+        return o, k_pool, v_pool
+
+    cfg = AttentionPlanConfig(
+        backend="decode", axis_name=ctx.sp_axis, n=n,
+        window=window, layout=layout, scale=scale, paged=True,
+    )
+    step = get_backend("decode").step
+    rep = P(None, None, None, None)
+    pool_spec = P(None, ctx.sp_axis, None, None)
+    pos_spec = P(None) if pos.ndim else P()
+    f = shard_map(
+        lambda q, kn, vn, kp, vp, pos, bt: step(q, kn, vn, kp, vp, pos, cfg, bt=bt),
+        mesh=ctx.shard_map_mesh(),
+        in_specs=(rep, rep, rep, pool_spec, pool_spec, pos_spec, P(None, None)),
+        out_specs=(rep, pool_spec, pool_spec),
+        check_vma=False,
+    )
+    return f(q, k_new, v_new, k_pool, v_pool, pos, bt)
 
 
 def latent_wire_attention(

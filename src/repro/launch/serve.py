@@ -44,6 +44,12 @@ def main():
     ap.add_argument("--trace", default="16:0,32:1,64:2,16:4",
                     help="comma list of prompt_len[:arrival_tick]")
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache (block tables + prefix sharing)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="local positions per page (paged mode)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="physical pool size in pages (paged mode)")
     args = ap.parse_args()
 
     if args.fake_devices:
@@ -71,7 +77,9 @@ def main():
     else:
         ctx = ParallelCtx()
     params = tfm.init_params(cfg, jax.random.PRNGKey(0), ctx=ctx)
-    eng = ServeEngine(cfg, params, ctx=ctx, max_seq=args.max_seq, num_slots=args.slots)
+    eng = ServeEngine(cfg, params, ctx=ctx, max_seq=args.max_seq, num_slots=args.slots,
+                      paged=args.paged, page_size=args.page_size,
+                      num_pages=args.num_pages)
     rng = np.random.default_rng(0)
 
     if args.stream:
@@ -94,6 +102,8 @@ def main():
             "prefill_traces": {str(k): v for k, v in eng.prefill_trace_counts.items()},
             "decode_traces": eng.decode_trace_count,
         }
+        if args.paged:
+            summary["kv_cache"] = eng.kv_cache_stats()
         print(json.dumps(summary))
         return 0
 

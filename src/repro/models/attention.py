@@ -62,7 +62,7 @@ def decode_attention_step(
     q: jnp.ndarray,  # [B, 1, H, D]
     k_new: jnp.ndarray,  # [B, 1, Hkv, D]
     v_new: jnp.ndarray,
-    k_cache: jnp.ndarray,  # [B, cap(/n), Hkv, D]; sharded over sp_axis
+    k_cache: jnp.ndarray,  # [B, cap(/n), Hkv, D] (paged: the page pool)
     v_cache: jnp.ndarray,
     pos,  # int32 scalar or [B] per-slot position vector
     ctx: ParallelCtx,
@@ -70,11 +70,12 @@ def decode_attention_step(
     window: Optional[int] = None,
     layout: str = "striped",
     scale: Optional[float] = None,
+    block_table: Optional[jnp.ndarray] = None,  # [B, max_pages]: paged cache
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns (o, new_k_cache, new_v_cache)."""
     return dispatch.decode_attention_step(
         q, k_new, v_new, k_cache, v_cache, pos, ctx,
-        window=window, layout=layout, scale=scale,
+        window=window, layout=layout, scale=scale, block_table=block_table,
     )
 
 

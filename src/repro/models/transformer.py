@@ -254,16 +254,39 @@ def _attn_cache_dims(cfg: ModelConfig):
     return cfg.num_kv_heads, cfg.hd, cfg.hd
 
 
-def init_cache(cfg: ModelConfig, batch: int, cap: int, dtype=jnp.bfloat16, ctx=None):
+def init_cache(cfg: ModelConfig, batch: int, cap: int, dtype=jnp.bfloat16, ctx=None,
+               paged=None):
     """Decode cache with a PER-SLOT position vector ``pos: [B]`` — each batch
     row (serving slot) may sit at a different depth, which is what lets the
-    continuous-batching engine decode mixed-depth slots in one jitted step."""
+    continuous-batching engine decode mixed-depth slots in one jitted step.
+
+    ``paged`` (a ``repro.serve.kv_pool.PagedLayout``) switches the attention
+    K/V to a physical page pool ``[L, num_pages, n*page_size, Hkv, D]`` plus
+    an int32 block table ``"bt": [batch, max_pages]`` (-1 = unallocated):
+    memory scales with allocated pages, not ``batch x cap``, and identical
+    prompt prefixes can share refcounted pages.  SSM / cross-attention state
+    stays per-slot dense (it is O(1) or encoder-sized per slot)."""
     L = cfg.num_layers
     cache: Dict = {"pos": jnp.zeros((batch,), jnp.int32)}
     if cfg.family != "ssm":
         hkv, dk, dv = _attn_cache_dims(cfg)
-        cache["k"] = jnp.zeros((L, batch, cap, hkv, dk), dtype)
-        cache["v"] = jnp.zeros((L, batch, cap, hkv, dv), dtype)
+        if paged is not None:
+            n = ctx.sp_size if ctx is not None else 1
+            if paged.n != n:
+                raise ValueError(
+                    f"paged layout is sharded over n={paged.n} but the ctx has "
+                    f"sp_size={n}"
+                )
+            if paged.virtual_cap < cap:
+                raise ValueError(
+                    f"paged virtual capacity {paged.virtual_cap} < cap {cap}"
+                )
+            cache["k"] = jnp.zeros((L, paged.num_pages, paged.chunk, hkv, dk), dtype)
+            cache["v"] = jnp.zeros((L, paged.num_pages, paged.chunk, hkv, dv), dtype)
+            cache["bt"] = jnp.full((batch, paged.max_pages), -1, jnp.int32)
+        else:
+            cache["k"] = jnp.zeros((L, batch, cap, hkv, dk), dtype)
+            cache["v"] = jnp.zeros((L, batch, cap, hkv, dv), dtype)
     if cfg.ssm is not None:
         cache["ssm"] = ssm_mod.init_ssm_cache(cfg, L, batch, dtype)
     if cfg.encoder_layers:
@@ -322,8 +345,9 @@ def _decode_attn_out(o, h_in, lp, cfg: ModelConfig):
     return h_in + o.reshape(B, 1, -1) @ lp["wo"]
 
 
-def _decode_block(x, lp, cache_l, cfg: ModelConfig, ctx: ParallelCtx, pos):
-    """One layer's decode. cache_l: dict of this layer's cache slices."""
+def _decode_block(x, lp, cache_l, cfg: ModelConfig, ctx: ParallelCtx, pos, bt=None):
+    """One layer's decode. cache_l: dict of this layer's cache slices; ``bt``
+    is the (layer-shared) block table when the K/V cache is paged."""
     new_cache = dict(cache_l)
     if cfg.family == "ssm":
         y, new_cache["ssm"] = ssm_mod.ssm_decode_step(x, lp["ssm"], cache_l["ssm"], cfg)
@@ -337,7 +361,7 @@ def _decode_block(x, lp, cache_l, cfg: ModelConfig, ctx: ParallelCtx, pos):
     # prefill restripes K/V once; appends then stay load-balanced forever
     o, ck, cv = attn.decode_attention_step(
         q, k_new, v_new, cache_l["k"], cache_l["v"], pos, ctx,
-        window=cfg.window, layout="striped", scale=scale,
+        window=cfg.window, layout="striped", scale=scale, block_table=bt,
     )
     new_cache["k"], new_cache["v"] = ck, cv
     y = _decode_attn_out(o, x, lp["attn"], cfg)
@@ -374,14 +398,15 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: ParallelCtx):
     retired/free slots tick harmlessly (their cache writes are masked past
     capacity and their outputs are ignored by the engine)."""
     pos = cache["pos"]
+    bt = cache.get("bt")  # paged K/V: block table, shared by every layer
     x = jnp.take(params["embed"], tokens, axis=0)
     x = ctx.constrain(x, None, None)
 
-    layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+    layer_cache = {k: v for k, v in cache.items() if k not in ("pos", "bt")}
 
     def body(x, inp):
         lp, cl = inp
-        x, new_cl = _decode_block(x, lp, cl, cfg, ctx, pos)
+        x, new_cl = _decode_block(x, lp, cl, cfg, ctx, pos, bt=bt)
         return x, new_cl
 
     x, new_layer_cache = _stack_scan(body, x, (params["layers"], layer_cache), ctx)
@@ -391,6 +416,8 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: ParallelCtx):
     nxt = jnp.argmax(logits, axis=-1).astype(tokens.dtype)
     new_cache = dict(new_layer_cache)
     new_cache["pos"] = pos + 1
+    if bt is not None:
+        new_cache["bt"] = bt
     return nxt, new_cache, logits
 
 
@@ -414,6 +441,29 @@ def _cache_scatter_indices(cfg: ModelConfig, S: int, cap: int, n: int):
         p = j
     g = (p % n) * (cap // n) + p // n
     return jnp.asarray(g)
+
+
+def _paged_prefill_coords(positions, bt_rows, n: int, page_size: int, write_mask):
+    """Scatter coordinates for writing true positions ``positions`` [S]
+    through a block table into the pool ``[num_pages, n*page_size, ...]``
+    (striped cache convention: position p lives on shard p % n at local
+    index p // n, i.e. pool column (p % n) * page_size + (p // n) % page_size
+    of logical page (p // n) // page_size).  ``bt_rows`` is one request's
+    row [max_pages], or a per-token [S, max_pages] (packed prefill, each
+    token routed through its own document's slot).  Masked / unallocated
+    tokens get an out-of-range page index so ``mode="drop"`` discards them."""
+    max_pages = bt_rows.shape[-1]
+    p = jnp.asarray(positions, jnp.int32)
+    j = p // n
+    lp = j // page_size
+    col = (p % n) * page_size + j % page_size
+    lp_c = jnp.clip(lp, 0, max_pages - 1)
+    if bt_rows.ndim == 1:
+        page = bt_rows[lp_c]
+    else:
+        page = jnp.take_along_axis(bt_rows, lp_c[:, None], axis=1)[:, 0]
+    write = write_mask & (page >= 0) & (lp < max_pages)
+    return jnp.where(write, page, jnp.int32(2**30)), col
 
 
 def _project_kv_for_cache(h, lp, cfg: ModelConfig, positions):
@@ -450,6 +500,15 @@ def prefill(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
     length.  Causality makes the trailing pad tokens invisible to the real
     ones, and decode overwrites each pad's cache entry before first reading
     that position.
+
+    A PAGED ``cache`` (it carries ``"bt"``) is the whole slot pool: K/V
+    scatter through the block-table row of ``batch["slot"]`` (int32 scalar)
+    straight into the physical pages.  ``batch["shared_len"]`` (int32 scalar,
+    default 0) marks a prefix admitted as SHARED pages — those positions are
+    skipped (the owner's K/V is already there and other slots are reading
+    it); pads (``positions >= length``) never touch the pool, so no pages are
+    spent on bucket padding.  Requires batch=1 tokens and an attention-only
+    decoder arch (SSM state and cross-attention K/V stay per-slot dense).
     """
     tokens, positions = batch["tokens"], batch["positions"]
     x = jnp.take(params["embed"], tokens, axis=0)
@@ -463,8 +522,27 @@ def prefill(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
     S = tokens.shape[1]
     has_attn = cfg.family != "ssm"
     has_ssm = cfg.ssm is not None
-    cap = cache["k"].shape[2] if has_attn else None
-    g_idx = _cache_scatter_indices(cfg, S, cap, ctx.sp_size) if has_attn else None
+    paged = "bt" in cache
+    if paged:
+        if cfg.ssm is not None or cfg.encoder_layers:
+            raise ValueError("the paged cache serves attention-only decoder archs")
+        if tokens.shape[0] != 1:
+            raise ValueError("paged prefill writes one request (batch=1) per call")
+        n = max(ctx.sp_size, 1)
+        page_size = cache["k"].shape[2] // n
+        slot = jnp.asarray(batch["slot"], jnp.int32)
+        shared_len = jnp.asarray(batch.get("shared_len", 0), jnp.int32)
+        length_s = (
+            batch["length"].astype(jnp.int32)[0] if "length" in batch else jnp.int32(S)
+        )
+        write_mask = (positions < length_s) & (positions >= shared_len)
+        page_idx, col_idx = _paged_prefill_coords(
+            positions, cache["bt"][slot], n, page_size, write_mask
+        )
+        g_idx = None
+    else:
+        cap = cache["k"].shape[2] if has_attn else None
+        g_idx = _cache_scatter_indices(cfg, S, cap, ctx.sp_size) if has_attn else None
     keys = [k for k in ("k", "v", "ssm", "cross_k", "cross_v") if k in cache]
     layer_cache = {k: cache[k] for k in keys}
 
@@ -480,8 +558,16 @@ def prefill(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
                 x, lp["attn"]["ln"], lp["attn"]["ln_b"]
             )
             kk, vv = _kv_for_cache(h, lp["attn"])
-            new_cl["k"] = cl["k"].at[:, g_idx].set(kk.astype(cl["k"].dtype))
-            new_cl["v"] = cl["v"].at[:, g_idx].set(vv.astype(cl["v"].dtype))
+            if paged:
+                new_cl["k"] = cl["k"].at[page_idx, col_idx].set(
+                    kk[0].astype(cl["k"].dtype), mode="drop"
+                )
+                new_cl["v"] = cl["v"].at[page_idx, col_idx].set(
+                    vv[0].astype(cl["v"].dtype), mode="drop"
+                )
+            else:
+                new_cl["k"] = cl["k"].at[:, g_idx].set(kk.astype(cl["k"].dtype))
+                new_cl["v"] = cl["v"].at[:, g_idx].set(vv.astype(cl["v"].dtype))
         if cfg.encoder_layers:
             B = x.shape[0]
             new_cl["cross_k"] = (enc @ lp["xattn"]["wk"]).reshape(
@@ -532,7 +618,11 @@ def prefill(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
     logits = x_last @ head.astype(x.dtype)
     new_cache = dict(cache)
     new_cache.update(new_layer_cache)
-    new_cache["pos"] = new_pos
+    if paged:
+        # the pool cache's pos covers every slot; only this one was prefilled
+        new_cache["pos"] = cache["pos"].at[slot].set(length_s)
+    else:
+        new_cache["pos"] = new_pos
     return logits, new_cache
 
 
@@ -550,8 +640,13 @@ def prefill_packed(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cach
       segments  [P]     document id per token; pads carry id >= k
       doc_lens  [k]     true prompt lengths (runtime)
       slots     [k]     pool slot per document (runtime)
+      shared_lens [k]   optional: tokens admitted as SHARED pages per doc
+                        (paged cache only) — skipped by the scatter
 
-    ``cache`` is the POOL cache ([L, num_slots, cap, ...]).  Returns
+    ``cache`` is the POOL cache ([L, num_slots, cap, ...]), or the PAGED pool
+    ([L, num_pages, n*page_size, ...] + block table ``"bt"``) — each
+    document's K/V then scatters through its slot's block-table row, and
+    positions below ``shared_lens[d]`` are left to the pages' owner.  Returns
     (first-token logits [k, V], new cache).  Attention-only decoder archs:
     the SSD recurrent state has no per-document reset, encoder/frontend
     archs have per-row side inputs that do not pack.
@@ -563,21 +658,38 @@ def prefill_packed(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cach
     doc_lens = batch["doc_lens"].astype(jnp.int32)
     slots = batch["slots"].astype(jnp.int32)
     k_docs = slots.shape[0]
-    nslots, cap = cache["k"].shape[1], cache["k"].shape[2]
     n = ctx.sp_size
+    paged = "bt" in cache
 
     x = jnp.take(params["embed"], tokens, axis=0)
     x = ctx.constrain(x, "seq", None)
 
-    # cache coordinates per token: document d's position p lands in slot row
-    # slots[d] at the striped cache index (p % n)*(cap/n) + p//n; pads get an
-    # out-of-range row and are dropped by the scatter
     pad = segments >= k_docs
-    row_idx = jnp.where(pad, nslots, slots[jnp.clip(segments, 0, k_docs - 1)])
-    if n > 1:
-        g_idx = (positions % n) * (cap // n) + positions // n
+    seg_c = jnp.clip(segments, 0, k_docs - 1)
+    if paged:
+        # paged coordinates per token: document d's position p goes through
+        # slot slots[d]'s block-table row to (page, n*page_size column);
+        # pads and shared-prefix positions are dropped by the scatter
+        page_size = cache["k"].shape[2] // max(n, 1)
+        shared = batch.get("shared_lens")
+        shared = (
+            jnp.zeros((k_docs,), jnp.int32) if shared is None
+            else jnp.asarray(shared, jnp.int32)
+        )
+        write_mask = (~pad) & (positions >= shared[seg_c])
+        row_idx, g_idx = _paged_prefill_coords(
+            positions, cache["bt"][slots[seg_c]], max(n, 1), page_size, write_mask
+        )
     else:
-        g_idx = positions
+        nslots, cap = cache["k"].shape[1], cache["k"].shape[2]
+        # cache coordinates per token: document d's position p lands in slot
+        # row slots[d] at the striped cache index (p % n)*(cap/n) + p//n;
+        # pads get an out-of-range row and are dropped by the scatter
+        row_idx = jnp.where(pad, nslots, slots[seg_c])
+        if n > 1:
+            g_idx = (positions % n) * (cap // n) + positions // n
+        else:
+            g_idx = positions
 
     def body(x, inp):
         lp, cl = inp

@@ -32,6 +32,7 @@ from repro.core import dispatch
 from repro.core.am import CommModel
 from repro.models import transformer as tfm
 from repro.parallel.context import ParallelCtx
+from repro.serve.kv_pool import PageAllocator, PagedLayout
 from repro.serve.scheduler import Request, Scheduler, default_buckets
 
 __all__ = ["ServeEngine"]
@@ -58,6 +59,10 @@ class ServeEngine:
         eos_id: Optional[int] = None,
         pack_prefill: bool = True,
         pack_max: int = 4,
+        pack_plan: str = "binpack",
+        paged: bool = False,
+        page_size: Optional[int] = None,
+        num_pages: Optional[int] = None,
     ):
         self.cfg = cfg
         self.ctx = ctx or ParallelCtx()
@@ -66,9 +71,25 @@ class ServeEngine:
         self.cache_dtype = cache_dtype
         self.num_slots = num_slots
         self.eos_id = eos_id
+        self.pack_plan = pack_plan
         n = self.ctx.sp_size
         if max_seq % max(n, 1):
             raise ValueError(f"max_seq={max_seq} must be divisible by sp_size={n}")
+        # paged KV: slot rows virtualize over a refcounted physical page pool
+        # (serve/kv_pool.py) — memory follows allocated pages, and identical
+        # prompt prefixes share pages across requests
+        self.paged = paged
+        self.allocator: Optional[PageAllocator] = None
+        if paged:
+            if cfg.ssm is not None or cfg.encoder_layers:
+                raise ValueError(
+                    "the paged KV cache serves attention-only decoder archs "
+                    "(SSM state / encoder cross-K/V have no page structure)"
+                )
+            layout = PagedLayout.for_engine(
+                max_seq, max(n, 1), num_slots, page_size=page_size, num_pages=num_pages
+            )
+            self.allocator = PageAllocator(layout)
         # SSD's recurrent state has no pad-correction: prefill exactly
         exact = cfg.ssm is not None
         buckets = tuple(prefill_buckets) if prefill_buckets else default_buckets(max_seq, n)
@@ -76,7 +97,7 @@ class ServeEngine:
             raise ValueError(f"buckets {buckets} must be multiples of sp_size={n}")
         self.scheduler = Scheduler(
             num_slots, buckets, max_seq, exact=exact, multiple=n,
-            chunk=cfg.ssm.chunk if exact else None,
+            chunk=cfg.ssm.chunk if exact else None, allocator=self.allocator,
         )
         # packed prefill: several same-tick admissions share one row under a
         # document mask (attention-only decoder archs; SSD state and per-row
@@ -95,8 +116,13 @@ class ServeEngine:
         )
         # THE cache: allocated once here, threaded through prefill inserts
         # and decode steps for the engine's whole lifetime
-        self._cache = tfm.init_cache(cfg, num_slots, max_seq, dtype=cache_dtype, ctx=self.ctx)
+        self._cache = tfm.init_cache(
+            cfg, num_slots, max_seq, dtype=cache_dtype, ctx=self.ctx,
+            paged=self.allocator.layout if self.allocator else None,
+        )
         self._cur = np.zeros((num_slots, 1), np.int32)  # last token per slot
+        self._depth = np.zeros((num_slots,), np.int64)  # host view of pos
+        self._bt_version = -1  # device block table staleness marker
         self._tick = 0
         self._finished: Dict[int, Request] = {}
         # jit bookkeeping: trace counters tick at TRACE time only, so tests
@@ -104,13 +130,36 @@ class ServeEngine:
         self._prefill_fns: Dict[int, object] = {}
         self.prefill_trace_counts: Dict[int, int] = {}
         self.decode_trace_count = 0
+        # launch accounting (every call, not just traces): the pack planner's
+        # padded-prefill cost is launches x bucket tokens
+        self.prefill_launches = 0
+        self.prefill_launch_tokens = 0
         self._decode = jax.jit(self._decode_traced)
+        self._copy_pages = jax.jit(self._copy_pages_traced)
 
     # -- jitted paths -------------------------------------------------------
 
     def _decode_traced(self, params, cache, tokens):
         self.decode_trace_count += 1  # python side effect: trace-time only
         return tfm.decode_step(params, cache, tokens, self.cfg, self.ctx)
+
+    def _copy_pages_traced(self, cache, src, dst):
+        """Copy-on-write: physical page src[i] -> dst[i] in every layer's
+        pool.  Pad entries carry dst == num_pages, which the scatter drops;
+        fixed [num_slots] operand shapes keep this a single trace."""
+        out = dict(cache)
+        for key in ("k", "v"):
+            pool = cache[key]  # [L, num_pages, n*ps, Hkv, D]
+            out[key] = pool.at[:, dst].set(pool[:, src], mode="drop")
+        return out
+
+    def _sync_block_table(self):
+        """Upload the allocator's block table when it moved since last sync."""
+        if self.allocator is None or self.allocator.version == self._bt_version:
+            return
+        self._cache = dict(self._cache)
+        self._cache["bt"] = jnp.asarray(self.allocator.device_table(self.num_slots))
+        self._bt_version = self.allocator.version
 
     def _aux_inputs(self, batch_size: int) -> Dict:
         """Frontend stub inputs (audio frames / vision patches)."""
@@ -159,7 +208,7 @@ class ServeEngine:
         positions = jnp.asarray(perm, jnp.int32)
         self.prefill_trace_counts.setdefault(bucket, 0)
 
-        def fn(params, cache, tokens, length, slot):
+        def fn(params, cache, tokens, length, slot, shared_len):
             self.prefill_trace_counts[bucket] += 1  # trace-time only
             # striping is the serving analogue of the data pipeline's §3.7
             # permutation: token at index j carries true position perm[j]
@@ -170,6 +219,14 @@ class ServeEngine:
                 "length": jnp.reshape(length, (1,)),
                 **self._aux_inputs(1),
             }
+            if self.paged:
+                # the pool IS the cache: K/V scatter through slot's block-
+                # table row; positions below shared_len stay with their owner
+                batch["slot"] = slot
+                batch["shared_len"] = shared_len
+                logits, cache = tfm.prefill(params, cfg, ctx, batch, cache)
+                first = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [1,1]
+                return cache, first
             row = tfm.init_cache(cfg, 1, self.max_seq, dtype=self.cache_dtype, ctx=ctx)
             logits, row = tfm.prefill(params, cfg, ctx, batch, row)
             first = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [1,1]
@@ -225,7 +282,7 @@ class ServeEngine:
         perm_j = jnp.asarray(perm)
         self.prefill_trace_counts.setdefault(key, 0)
 
-        def fn(params, cache, tokens, doc_lens, slots):
+        def fn(params, cache, tokens, doc_lens, slots, shared_lens):
             self.prefill_trace_counts[key] += 1  # trace-time only
             j = jnp.arange(bucket, dtype=jnp.int32)
             cum = jnp.cumsum(doc_lens)
@@ -241,6 +298,8 @@ class ServeEngine:
                 "doc_lens": doc_lens,
                 "slots": slots,
             }
+            if self.paged:
+                batch["shared_lens"] = shared_lens
             logits, cache = tfm.prefill_packed(params, cfg, ctx, batch, cache)
             return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [k]
 
@@ -264,6 +323,10 @@ class ServeEngine:
 
     def _finish(self, slot: int) -> Request:
         req = self.scheduler.retire(slot, self._tick)
+        if self.allocator is not None:
+            # drop the slot's page references; pages shared with live slots
+            # survive until their last reader retires
+            self.allocator.free_slot(slot)
         self._finished[req.rid] = req
         return req
 
@@ -272,11 +335,22 @@ class ServeEngine:
             return True
         return len(req.generated) >= req.max_new_tokens
 
+    def _alloc_pages(self, slot: int, req: Request) -> int:
+        """Paged admission: claim (or prefix-share) the slot's pages and sync
+        the device block table BEFORE the prefill trace reads it.  Returns
+        the shared-prefix length the scatter must skip."""
+        alloc = self.allocator.alloc_slot(slot, req.prompt, req.max_new_tokens)
+        return alloc.shared_len
+
     def _prefill_single(self, slot: int, req: Request) -> int:
         """Legacy one-row-per-request prefill (exact/frontend archs)."""
         bucket = self.scheduler.bucket_for(len(req.prompt))
+        self.prefill_launches += 1
+        self.prefill_launch_tokens += bucket
         toks = np.zeros((1, bucket), np.int32)
         toks[0, : len(req.prompt)] = req.prompt
+        shared = self._alloc_pages(slot, req) if self.paged else 0
+        self._sync_block_table()
         fn = self._get_prefill(bucket)
         self._cache, first = fn(
             self.params,
@@ -284,7 +358,9 @@ class ServeEngine:
             jnp.asarray(toks),
             jnp.asarray(len(req.prompt), jnp.int32),
             jnp.asarray(slot, jnp.int32),
+            jnp.asarray(shared, jnp.int32),
         )
+        self._depth[slot] = len(req.prompt)
         return int(np.asarray(first)[0, 0])
 
     def _prefill_group(self, group) -> List[int]:
@@ -293,12 +369,18 @@ class ServeEngine:
         slot.  Returns the first generated token per request."""
         lens = [len(req.prompt) for _, req in group]
         bucket = self.scheduler.bucket_for(sum(lens))
+        self.prefill_launches += 1
+        self.prefill_launch_tokens += bucket
         k = len(group)
         toks = np.zeros((1, bucket), np.int32)
         off = 0
         for (_, req), ln in zip(group, lens):
             toks[0, off : off + ln] = req.prompt
             off += ln
+        shared = [
+            self._alloc_pages(slot, req) if self.paged else 0 for slot, req in group
+        ]
+        self._sync_block_table()
         fn = self._get_prefill_packed(bucket, k)
         self._cache, firsts = fn(
             self.params,
@@ -306,7 +388,10 @@ class ServeEngine:
             jnp.asarray(toks),
             jnp.asarray(lens, jnp.int32),
             jnp.asarray([slot for slot, _ in group], jnp.int32),
+            jnp.asarray(shared, jnp.int32),
         )
+        for (slot, req), ln in zip(group, lens):
+            self._depth[slot] = ln
         return [int(t) for t in np.asarray(firsts)]
 
     def step(self) -> List[Request]:
@@ -317,7 +402,9 @@ class ServeEngine:
         # 1. admission: bucketed (packed) prefill straight into slot rows
         assigned = self.scheduler.admit(self._tick)
         if self._can_pack:
-            groups = self.scheduler.pack_groups(assigned, pack_max=self.pack_max)
+            groups = self.scheduler.pack_groups(
+                assigned, pack_max=self.pack_max, plan=self.pack_plan
+            )
         else:
             groups = [[x] for x in assigned]
         for group in groups:
@@ -334,11 +421,30 @@ class ServeEngine:
         # 2. one decode step over every slot (mixed depths via pos: [B])
         active = self.scheduler.active_slots()
         if active:
+            if self.paged:
+                # make every active slot's write position appendable: allocate
+                # tail pages on chunk boundaries, copy-on-write shared tails
+                copies = []
+                for slot in active:
+                    cp = self.allocator.ensure_append(slot, int(self._depth[slot]))
+                    if cp is not None:
+                        copies.append(cp)
+                if copies:
+                    npages = self.allocator.layout.num_pages
+                    src = np.zeros((self.num_slots,), np.int32)
+                    dst = np.full((self.num_slots,), npages, np.int32)  # dropped
+                    for i, (s, d) in enumerate(copies):
+                        src[i], dst[i] = s, d
+                    self._cache = self._copy_pages(
+                        self._cache, jnp.asarray(src), jnp.asarray(dst)
+                    )
+                self._sync_block_table()
             nxt, self._cache, _ = self._decode(
                 self.params, self._cache, jnp.asarray(self._cur)
             )
             nxt_np = np.asarray(nxt)
             for slot in active:
+                self._depth[slot] += 1
                 req = self.scheduler.slots[slot]
                 tok = int(nxt_np[slot, 0])
                 req.generated.append(tok)
@@ -353,6 +459,38 @@ class ServeEngine:
         while self.has_work:
             self.step()
         return dict(self._finished)
+
+    def kv_cache_stats(self) -> Dict[str, float]:
+        """Attention-cache memory accounting (bench / capacity planning).
+        Dense: bytes are fixed at ``num_slots x max_seq``.  Paged: resident
+        bytes follow the allocator's peak page usage, and the allocator's
+        sharing/CoW counters ride along."""
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return {"cache_bytes": 0.0}
+        L = cfg.num_layers
+        itemsize = jnp.dtype(self.cache_dtype).itemsize
+        hkv = self._cache["k"].shape[-2]
+        elem = self._cache["k"].shape[-1] + self._cache["v"].shape[-1]  # dk + dv
+        per_tok = L * hkv * elem * itemsize
+        if self.allocator is None:
+            return {
+                "paged": 0,
+                "cache_bytes": float(self.num_slots * self.max_seq * per_tok),
+            }
+        lay = self.allocator.layout
+        stats = self.allocator.stats()
+        return {
+            "paged": 1,
+            "page_size": lay.page_size,
+            "chunk_tokens": lay.chunk,
+            "num_pages": lay.num_pages,
+            # pool reservation (what init_cache actually allocated) ...
+            "cache_bytes": float(lay.num_pages * lay.chunk * per_tok),
+            # ... vs what the workload actually touched
+            "peak_page_bytes": float(stats["peak_in_use"] * lay.chunk * per_tok),
+            **{k: float(v) for k, v in stats.items()},
+        }
 
     # -- legacy static-batch API --------------------------------------------
 

@@ -70,12 +70,17 @@ class Scheduler:
         exact: bool = False,
         multiple: int = 1,
         chunk: Optional[int] = None,
+        allocator=None,
     ):
         if num_slots < 1:
             raise ValueError("need at least one slot")
         self.num_slots = num_slots
         self.multiple = max(1, multiple)  # sequence-parallel divisibility
         self.chunk = chunk  # SSD scan chunk (exact mode only)
+        # paged KV pool: admission accounts PAGES, not slot rows — a request
+        # is only admitted when its whole lifetime (prompt + token budget)
+        # fits the unreserved pool, so decode can never exhaust mid-flight
+        self.allocator = allocator
         self.buckets = tuple(sorted(set(buckets)))
         if not self.buckets or self.buckets[-1] > max_seq:
             raise ValueError(f"buckets {buckets} must be non-empty and <= max_seq={max_seq}")
@@ -127,17 +132,30 @@ class Scheduler:
                 return b
         raise ValueError(f"prompt length {length} exceeds largest bucket {self.buckets[-1]}")
     def pack_groups(
-        self, assigned: List[Tuple[int, "Request"]], *, pack_max: int = 4
+        self,
+        assigned: List[Tuple[int, "Request"]],
+        *,
+        pack_max: int = 4,
+        plan: str = "binpack",
     ) -> List[List[Tuple[int, "Request"]]]:
         """Group same-tick admissions into packed prefill rows.
 
-        Greedy in admission order: a group closes when it reaches ``pack_max``
-        documents or its summed prompt length would overflow the largest
-        bucket.  Exact mode (SSM/hybrid) never packs — the recurrent state
-        has no per-document reset.
+        ``plan="binpack"`` (default) sorts by length (descending) and places
+        each request where the total padded-bucket cost grows least —
+        first-fit-decreasing toward bucket boundaries, so a 16+9+8 burst
+        prefers an exactly-full 32 row + a padding-free 8 over one 64-bucket
+        row.  The admission-order greedy plan is kept as a candidate and the
+        cheaper of the two (total bucketed tokens, then fewer groups) wins,
+        so binpack never prefills more padding than ``plan="greedy"`` — the
+        old behavior, kept for the serve bench's TTFT comparison.  Groups
+        close at ``pack_max`` documents or the largest bucket.  Exact mode
+        (SSM/hybrid) never packs — the recurrent state has no per-document
+        reset.
         """
         if self.exact or pack_max <= 1:
             return [[x] for x in assigned]
+        if plan not in ("greedy", "binpack"):
+            raise ValueError(f"unknown pack plan {plan!r} (greedy | binpack)")
         cap = self.buckets[-1]
         groups: List[List[Tuple[int, Request]]] = []
         cur: List[Tuple[int, Request]] = []
@@ -151,7 +169,36 @@ class Scheduler:
             cur_len += length
         if cur:
             groups.append(cur)
-        return groups
+        if plan == "greedy":
+            return groups
+
+        # first-fit-decreasing by MARGINAL bucket cost: joining a group costs
+        # bucket(total+len) - bucket(total) extra padded tokens, a fresh group
+        # costs bucket(len); ties join (fewer prefill launches)
+        bins: List[Tuple[int, List[Tuple[int, Request]]]] = []  # (sum, members)
+        order = sorted(assigned, key=lambda sr: len(sr[1].prompt), reverse=True)
+        for slot, req in order:
+            length = len(req.prompt)
+            best_i, best_c = None, self.bucket_for(length)  # fresh-group cost
+            for i, (total, members) in enumerate(bins):
+                if len(members) >= pack_max or total + length > cap:
+                    continue
+                c = self.bucket_for(total + length) - self.bucket_for(total)
+                if c <= best_c:
+                    best_i, best_c = i, c
+            if best_i is None:
+                bins.append((length, [(slot, req)]))
+            else:
+                total, members = bins[best_i]
+                bins[best_i] = (total + length, members + [(slot, req)])
+        packed = [members for _, members in bins]
+
+        def cost(gs):
+            return sum(self.bucket_for(sum(len(r.prompt) for _, r in g)) for g in gs)
+
+        # the greedy plan stays a candidate: dense bursts that fit one bucket
+        # row beat any split, and this guarantees cost(binpack) <= cost(greedy)
+        return min((packed, groups), key=lambda gs: (cost(gs), len(gs)))
 
     # -- per-tick operations ------------------------------------------------
 
@@ -159,6 +206,7 @@ class Scheduler:
         """Assign arrived queued requests to free slots, FIFO.  Returns
         [(slot, request)] for the engine to prefill."""
         assigned = []
+        pending_pages = 0  # pages promised to this tick's earlier admissions
         for slot in range(self.num_slots):
             if self.slots[slot] is not None:
                 continue
@@ -167,6 +215,14 @@ class Scheduler:
             )
             if req is None:
                 break
+            if self.allocator is not None:
+                if not self.allocator.can_admit(
+                    len(req.prompt), req.max_new_tokens, pending=pending_pages
+                ):
+                    break  # pool exhausted: FIFO holds the head until pages free
+                pending_pages += self.allocator.reserve_for(
+                    len(req.prompt), req.max_new_tokens
+                )
             self._queue.remove(req)
             req.slot, req.admit_tick = slot, tick
             self.slots[slot] = req

@@ -362,7 +362,7 @@ def check_decode_edge():
     ks = jax.random.normal(jax.random.PRNGKey(6), (T, B, 1, Hkv, D))
     vs = jax.random.normal(jax.random.PRNGKey(7), (T, B, 1, Hkv, D))
 
-    def build(layout, window=None, vec_pos=False):
+    def build(layout, window=None, vec_pos=False, prune=True):
         pos_spec = P(None) if vec_pos else P()
 
         def upd(kc, vc, kn, vn, pos):
@@ -370,7 +370,7 @@ def check_decode_edge():
 
         def dec(q, kc, vc, pos):
             return sharded_cache_decode(
-                q, kc, vc, pos, "sp", n, layout=layout, window=window
+                q, kc, vc, pos, "sp", n, layout=layout, window=window, prune=prune
             )
 
         upd_f = jax.jit(shard_map(
@@ -447,6 +447,29 @@ def check_decode_edge():
             max_err = max(max_err, float(jnp.max(jnp.abs(o_vec[b : b + 1] - o_b))))
         assert max_err == 0.0, (layout, "vector pos != scalar pos", max_err)
         results[f"vec_pos_{layout}"] = max_err
+
+    # 5: mask-pruned decode — the lax.cond shard skip under a sliding window
+    # (shard-uniform window-start round-down) must be EXACT: bitwise equal to
+    # the always-run-the-kernel program at every depth, scalar and vector pos.
+    # window=3 < n=8 leaves most shards provably empty under both layouts.
+    for layout in ("striped", "contiguous"):
+        upd_f, dec_p = build(layout, window=3, prune=True)
+        _, dec_u = build(layout, window=3, prune=False)
+        k_cache = jnp.zeros((B, n * m, Hkv, D))
+        v_cache = jnp.zeros((B, n * m, Hkv, D))
+        for t in range(T):
+            pos = jnp.int32(t)
+            k_cache, v_cache = upd_f(k_cache, v_cache, ks[t], vs[t], pos)
+            o_p = dec_p(qs[t], k_cache, v_cache, pos)
+            o_u = dec_u(qs[t], k_cache, v_cache, pos)
+            assert (np.asarray(o_p) == np.asarray(o_u)).all(), (layout, t)
+        upd_v, dec_pv = build(layout, window=3, vec_pos=True, prune=True)
+        _, dec_uv = build(layout, window=3, vec_pos=True, prune=False)
+        pos_vec = jnp.asarray((3, 9), jnp.int32)  # mixed depths
+        o_pv = dec_pv(qs[0], k_cache, v_cache, pos_vec)
+        o_uv = dec_uv(qs[0], k_cache, v_cache, pos_vec)
+        assert (np.asarray(o_pv) == np.asarray(o_uv)).all(), (layout, "vec")
+        results[f"prune_exact_{layout}"] = 0.0
     return results
 
 
@@ -961,6 +984,74 @@ def check_packed_prefill():
     return {"tokens": tokens}
 
 
+def check_paged_serve():
+    """Paged KV cache on a (2, 4) mesh: the paged engine (page pool + block
+    tables + refcounted allocator) must be token-for-token identical to the
+    dense engine on the mixed-length streaming trace, and a pair of requests
+    sharing a 32-token prefix must allocate strictly fewer pages than an
+    unshared pair while still matching the dense engine exactly."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import transformer as tfm
+    from repro.parallel.context import ParallelCtx
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config("granite-8b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(3)
+    trace = [(16, 0), (32, 1), (64, 2), (16, 4)]
+    prompts = [
+        rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32) for ln, _ in trace
+    ]
+    new_tokens = 6
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    ctx = ParallelCtx(mesh=mesh, batch_axes=("data",), sp_axis="model",
+                      block_q=8, block_kv=8)
+
+    def run_engine(prompt_list, arrivals, **kw):
+        eng = ServeEngine(cfg, params, ctx=ctx, max_seq=128, num_slots=3, **kw)
+        rids = [
+            eng.submit(p, max_new_tokens=new_tokens, arrival_tick=t)
+            for p, t in zip(prompt_list, arrivals)
+        ]
+        fin = eng.run()
+        return [fin[r].generated for r in rids], eng
+
+    arrivals = [t for _, t in trace]
+    dense_toks, _ = run_engine(prompts, arrivals)
+    # n=4, page_size=4 -> 16-token chunks; 8 logical pages cover max_seq=128
+    paged_toks, paged_eng = run_engine(prompts, arrivals, paged=True, page_size=4)
+    assert paged_toks == dense_toks, (paged_toks, dense_toks)
+    assert paged_eng.decode_trace_count == 1, paged_eng.decode_trace_count
+    assert paged_eng.allocator.pages_in_use == 0  # every retirement freed
+
+    # prefix sharing: two 48-token prompts with a common 32-token prefix
+    # (= 2 shared chunks) vs two unrelated 48-token prompts
+    prefix = rng.integers(0, cfg.vocab_size, (32,), dtype=np.int32)
+    shared_pair = [
+        np.concatenate([prefix, rng.integers(0, cfg.vocab_size, (16,), dtype=np.int32)])
+        for _ in range(2)
+    ]
+    unshared_pair = [
+        rng.integers(0, cfg.vocab_size, (48,), dtype=np.int32) for _ in range(2)
+    ]
+    dense_sh, _ = run_engine(shared_pair, [0, 0])
+    paged_sh, eng_sh = run_engine(shared_pair, [0, 0], paged=True, page_size=4)
+    _, eng_un = run_engine(unshared_pair, [0, 0], paged=True, page_size=4)
+    assert paged_sh == dense_sh, (paged_sh, dense_sh)
+    st_sh, st_un = eng_sh.allocator.stats(), eng_un.allocator.stats()
+    assert st_sh["shared_hits"] == 2, st_sh
+    assert st_sh["fresh_allocs"] < st_un["fresh_allocs"], (st_sh, st_un)
+    return {
+        "tokens": {i: t for i, t in enumerate(paged_toks)},
+        "shared_stats": st_sh,
+        "unshared_stats": st_un,
+    }
+
+
 CHECKS = {
     "mesh_fwd": check_mesh_attention_forward,
     "mesh_bwd": check_mesh_attention_backward,
@@ -979,6 +1070,7 @@ CHECKS = {
     "dispatch": check_dispatch_seam,
     "mask_prune": check_mask_prune,
     "packed_prefill": check_packed_prefill,
+    "paged_serve": check_paged_serve,
 }
 
 

@@ -81,3 +81,10 @@ def test_mask_pruning_and_packed_prefill():
     schedule blocks + comm with BITWISE-identical outputs and grads; packed
     multi-prompt serve prefill == sequential per-request generation."""
     _run_checks("mask_prune", "packed_prefill")
+
+
+def test_paged_serve():
+    """Paged KV cache on a (2,4) mesh: block-table decode/update must be
+    token-for-token identical to the dense engine on the streaming trace,
+    and a shared-prefix pair must allocate strictly fewer pages."""
+    _run_checks("paged_serve")

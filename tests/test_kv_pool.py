@@ -1,0 +1,176 @@
+"""Paged KV-cache pool: allocator lifecycle, refcounts, prefix sharing,
+copy-on-write, admission accounting, and the block-table gather oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve.kv_pool import PageAllocator, PagedLayout, gather_block_table
+from repro.serve.scheduler import Scheduler
+
+
+def _alloc(num_pages=8, page_size=4, max_pages=4, n=1):
+    return PageAllocator(PagedLayout(num_pages, page_size, max_pages, n))
+
+
+# --------------------------------------------------------------------------
+# lifecycle: alloc / append / free / refcount
+# --------------------------------------------------------------------------
+
+
+def test_alloc_append_free_lifecycle():
+    a = _alloc()  # chunk = 4 tokens, 8 pages
+    prompt = np.arange(6, dtype=np.int32)
+    got = a.alloc_slot(0, prompt, max_new_tokens=3)
+    assert got.shared_len == 0
+    assert a.slot_pages(0) == 2  # ceil(6/4)
+    assert a.pages_in_use == 2 and (a.ref[a.block_table[0, :2]] == 1).all()
+    # appends inside the tail page allocate nothing
+    assert a.ensure_append(0, 6) is None and a.ensure_append(0, 7) is None
+    assert a.slot_pages(0) == 2
+    # crossing the chunk boundary takes a fresh page
+    assert a.ensure_append(0, 8) is None
+    assert a.slot_pages(0) == 3 and a.pages_in_use == 3
+    a.free_slot(0)
+    assert a.pages_in_use == 0 and a.slot_pages(0) == 0
+    assert (a.block_table[0] == PageAllocator.FREE).all()
+    with pytest.raises(ValueError):  # double-alloc guard needs free_slot first
+        a.alloc_slot(1, prompt, 3)
+        a.alloc_slot(1, prompt, 3)
+
+
+def test_non_contiguous_append_rejected():
+    a = _alloc()
+    a.alloc_slot(0, np.arange(4, dtype=np.int32), 8)
+    with pytest.raises(ValueError):
+        a.ensure_append(0, 12)  # would skip logical page 1
+
+
+# --------------------------------------------------------------------------
+# prefix sharing + copy-on-write
+# --------------------------------------------------------------------------
+
+
+def test_prefix_sharing_refcounts_and_stale_invalidation():
+    a = _alloc(num_pages=16)
+    prompt = np.arange(10, dtype=np.int32)  # 2 full chunks + partial third
+    a.alloc_slot(0, prompt, 2)
+    assert a.fresh_allocs == 3
+    got = a.alloc_slot(1, prompt, 2)
+    assert got.shared_pages == 2 and got.shared_len == 8
+    assert a.shared_hits == 2 and a.fresh_allocs == 4  # only the tail is fresh
+    shared = a.block_table[0, :2].copy()
+    assert (a.block_table[1, :2] == shared).all()
+    assert (a.ref[shared] == 2).all()
+    # the owner retiring keeps shared pages alive for the reader
+    a.free_slot(0)
+    assert (a.ref[shared] == 1).all() and a.pages_in_use == 3
+    # a third request can still share against the surviving reader
+    got = a.alloc_slot(2, prompt, 2)
+    assert got.shared_pages == 2
+    a.free_slot(1)
+    a.free_slot(2)
+    assert a.pages_in_use == 0
+    # every reference is gone -> the registry entry is stale and must NOT
+    # resurrect freed pages (generation stamp mismatch)
+    got = a.alloc_slot(3, prompt, 2)
+    assert got.shared_pages == 0 and got.shared_len == 0
+
+
+def test_copy_on_write_on_shared_page_append():
+    a = _alloc(num_pages=8)
+    prompt = np.arange(4, dtype=np.int32)  # exactly one chunk, registered
+    a.alloc_slot(0, prompt, 4)
+    a.alloc_slot(1, prompt, 4)
+    pid = int(a.block_table[1, 0])
+    assert a.ref[pid] == 2  # shared
+    # slot 1 must not write into the shared page: ensure_append hands back a
+    # (src, dst) physical copy and repoints slot 1's table at the private dst
+    cp = a.ensure_append(1, 2)
+    assert cp is not None and cp[0] == pid
+    src, dst = cp
+    assert int(a.block_table[1, 0]) == dst != pid
+    assert a.ref[pid] == 1 and a.ref[dst] == 1 and a.cow_copies == 1
+    assert int(a.block_table[0, 0]) == pid  # the owner is untouched
+    # refcount 1 -> appends write in place, no further copies
+    assert a.ensure_append(1, 3) is None and a.cow_copies == 1
+
+
+# --------------------------------------------------------------------------
+# admission accounting: pages, not rows
+# --------------------------------------------------------------------------
+
+
+def test_pool_exhaustion_rejected_at_admission():
+    a = _alloc(num_pages=4)  # 16 tokens of pool, chunk 4
+    assert a.can_admit(8, 4)  # 3 pages
+    a.alloc_slot(0, np.arange(8, dtype=np.int32), 4)
+    # 3 of 4 pages reserved for slot 0's lifetime: a second 8+4 cannot fit
+    assert not a.can_admit(8, 4)
+    assert a.can_admit(2, 2)  # 1 page does
+    with pytest.raises(RuntimeError):
+        a.alloc_slot(1, np.arange(8, dtype=np.int32), 4)  # forced past the check
+    a.free_slot(0)
+    assert a.can_admit(8, 4)
+
+
+def test_scheduler_defers_admission_until_pages_free():
+    a = _alloc(num_pages=4)
+    s = Scheduler(4, (16,), 16, allocator=a)
+    r0 = s.submit(np.arange(8, dtype=np.int32), 4)  # 3 pages
+    r1 = s.submit(np.arange(8, dtype=np.int32), 4)  # won't fit alongside
+    assigned = s.admit(0)
+    assert [r.rid for _, r in assigned] == [r0.rid]
+    a.alloc_slot(assigned[0][0], r0.prompt, 4)
+    assert s.admit(1) == []  # held in queue, FIFO, until pages free
+    s.retire(assigned[0][0], 1)
+    a.free_slot(assigned[0][0])
+    assert [r.rid for _, r in s.admit(2)] == [r1.rid]
+
+
+def test_pool_exhaustion_mid_decode_raises():
+    a = _alloc(num_pages=3)
+    a.alloc_slot(0, np.arange(8, dtype=np.int32), 0)  # 2 pages
+    a.alloc_slot(1, np.arange(2, dtype=np.int32), 0)  # 1 page
+    with pytest.raises(RuntimeError):
+        a.ensure_append(1, 4)  # appending past its reservation; pool empty
+
+
+# --------------------------------------------------------------------------
+# hypothesis: block-table gather == dense cache for random depths
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    depths=st.lists(st.integers(min_value=1, max_value=16), min_size=1, max_size=4),
+    page_size=st.sampled_from([1, 2, 4]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_block_table_gather_matches_dense(depths, page_size, seed):
+    """Writing each slot's positions through the allocator's block table and
+    gathering them back must reproduce a dense [slots, cap] cache exactly,
+    for arbitrary per-slot depths (mixed-depth continuous batching)."""
+    rng = np.random.default_rng(seed)
+    cap = 16
+    max_pages = -(-cap // page_size)
+    lay = PagedLayout(
+        num_pages=len(depths) * max_pages, page_size=page_size,
+        max_pages=max_pages, n=1,
+    )
+    a = PageAllocator(lay)
+    pool = np.zeros((lay.num_pages, page_size, 2), np.float64)
+    dense = np.zeros((len(depths), max_pages * page_size, 2), np.float64)
+    for slot, d in enumerate(depths):
+        # unique prompts so prefix sharing never collapses the comparison
+        prompt = rng.integers(0, 2**30, (d,), dtype=np.int32)
+        a.alloc_slot(slot, prompt, 0)
+        for p in range(d):
+            val = rng.normal(size=(2,))
+            lp, off = p // page_size, p % page_size
+            pool[a.block_table[slot, lp], off] = val
+            dense[slot, p] = val
+    got = gather_block_table(pool, a.device_table(len(depths)))
+    for slot, d in enumerate(depths):
+        np.testing.assert_array_equal(got[slot, :d], dense[slot, :d])
