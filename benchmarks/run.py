@@ -417,6 +417,30 @@ def bench_serve():
     return payload
 
 
+# ---- decode kernel: gather vs paged-native split-K --------------------------------
+
+
+def bench_decode():
+    """One decode tick over a paged KV pool, gather vs the native split-K
+    kernel, at several depth mixes and pool occupancies: measured tokens/s
+    plus modeled HBM bytes/token (depth- vs capacity-proportional)."""
+    from benchmarks.decode_bench import run_bench
+
+    payload = run_bench()
+    _save("decode_bench", payload)
+    half = payload["hbm_bytes_ratio_at_half_occupancy"]
+    mesh = payload.get("mesh_engine") or {}
+    eq = mesh.get("native_equals_gather_equals_dense")
+    rows = payload["op_level"]
+    mixed = next(r for r in rows if r["scenario"] == "mixed_depth")
+    _emit(
+        "decode_bench", mixed["native"]["us_per_tick"],
+        f"native_hbm_bytes={half:.2f}x_gather mesh_tokens_eq={eq} "
+        f"native_backend={payload['native_backend']}",
+    )
+    return payload
+
+
 # ---- roofline table from the dry-run ----------------------------------------------
 
 
@@ -453,6 +477,7 @@ BENCHES = {
     "measured_mesh_attention": bench_measured_mesh_attention,
     "mesh_attention_bench": bench_mesh_attention,
     "serve_bench": bench_serve,
+    "decode_bench": bench_decode,
     "roofline_table": bench_roofline_table,
 }
 

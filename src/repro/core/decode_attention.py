@@ -38,6 +38,17 @@ branch returns the exact empty-band result (o = 0, lse = NEG_INF), so the
 psum combine is bitwise-unchanged.  The bound is shard-uniform — one window
 start per shard, rounded down over the batch (min over rows, floored to a
 stripe multiple) — so pruning never depends on a single row's depth.
+
+Both decode entries take a ``kernel`` selector:
+
+  * ``"gather"`` / ``"band"`` (the defaults) — the original paths: paged
+    gathers the row's pages into a dense local view, then both run the band
+    kernel (one vmapped call per row under vector pos).
+  * ``"native"`` — the split-K Pallas kernel (``kernels/paged_decode.py``)
+    reads the block table in-kernel and indexes the page pool directly; the
+    dense cache routes through the SAME kernel by viewing each ``[m]`` row as
+    one implicit page run (reshape + identity block table).  Falls back to
+    the gather/band oracle under ``REPRO_KERNELS=ref``.
 """
 
 from __future__ import annotations
@@ -49,6 +60,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.kernels import ops
+from repro.kernels import paged_decode as pk
 from repro.kernels.ref import BAND_INF, NEG_INF
 
 __all__ = [
@@ -72,11 +84,11 @@ def sharded_cache_update(
     k_new: jnp.ndarray,  # [B, 1, Hkv, D] replicated across the axis
     v_new: jnp.ndarray,
     pos,  # int32 scalar or [B] vector: global position(s) being written
-    axis_name: str,
+    axis_name: Optional[str],
     n: int,
     layout: str = "striped",
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    i = lax.axis_index(axis_name)
+    i = lax.axis_index(axis_name) if axis_name is not None else 0
     m = k_cache.shape[1]
     pos = jnp.asarray(pos, jnp.int32)
     if pos.ndim == 0:
@@ -165,19 +177,12 @@ def _banded_partial(q, k_loc, v_loc, pos, kv_off, stride_kv, hi, scale):
     return jax.vmap(one)(q, k_loc, v_loc, pos)
 
 
-def _maybe_pruned_partial(
-    q, k_loc, v_loc, pos, i, n, m, layout, window, scale, prune,
-):
-    """The shard's partial, with the kernel call skipped (``lax.cond``) when a
-    sliding window provably hides every local slot.  The skip branch returns
-    the EXACT empty-band kernel result (o = 0, lse = NEG_INF), so downstream
-    combines are bitwise-identical to the unpruned program."""
-    kv_off, stride_kv = _shard_geometry(i, n, m, layout)
-    hi = (window - 1) if window else BAND_INF
-
-    def run(_):
-        return _banded_partial(q, k_loc, v_loc, pos, kv_off, stride_kv, hi, scale)
-
+def _maybe_pruned(run, q, pos, i, n, m, layout, window, prune):
+    """Wrap a shard-partial thunk in the window-prune ``lax.cond``: the kernel
+    call is skipped when a sliding window provably hides every local slot.
+    The skip branch returns the EXACT empty-band kernel result (o = 0,
+    lse = NEG_INF), so downstream combines are bitwise-identical to the
+    unpruned program."""
     if not (prune and window):
         return run(None)
 
@@ -192,26 +197,72 @@ def _maybe_pruned_partial(
     return lax.cond(_window_nonempty(pos, i, n, m, layout, window), run, skip, None)
 
 
+def _maybe_pruned_partial(
+    q, k_loc, v_loc, pos, i, n, m, layout, window, scale, prune,
+):
+    kv_off, stride_kv = _shard_geometry(i, n, m, layout)
+    hi = (window - 1) if window else BAND_INF
+
+    def run(_):
+        return _banded_partial(q, k_loc, v_loc, pos, kv_off, stride_kv, hi, scale)
+
+    return _maybe_pruned(run, q, pos, i, n, m, layout, window, prune)
+
+
+def _native_enabled(kernel: str) -> bool:
+    """The split-K kernel serves ``kernel="native"`` except under the pure-jnp
+    oracle backend, where the gather/band path (the exact reference the kernel
+    is validated against) stands in."""
+    if kernel in ("gather", "band"):
+        return False
+    if kernel != "native":
+        raise ValueError(f"unknown decode kernel {kernel!r}")
+    return ops.current_backend() != "ref"
+
+
 def sharded_cache_decode(
     q: jnp.ndarray,  # [B, 1, H, D] new token's query, replicated over the axis
     k_cache: jnp.ndarray,  # [B, m, Hkv, D] local slice
     v_cache: jnp.ndarray,
     pos,  # int32 scalar or [B] vector: current position(s); attends to <= pos
-    axis_name: str,
+    axis_name: Optional[str],
     n: int,
     *,
     layout: str = "striped",
     window: Optional[int] = None,
     scale: Optional[float] = None,
     prune: bool = True,
+    kernel: str = "band",  # band | native (split-K over implicit page runs)
 ) -> jnp.ndarray:
-    """One decode step: partial attention per shard + lse-weighted psum."""
-    i = lax.axis_index(axis_name)
+    """One decode step: partial attention per shard + lse-weighted psum.
+
+    ``kernel="native"`` views each row's dense slice as ONE implicit page run
+    (reshape + identity block table) and runs the split-K paged kernel — same
+    band math, no per-row vmap, mixed depths spread over the split grid.
+    """
+    i = lax.axis_index(axis_name) if axis_name is not None else 0
     m = k_cache.shape[1]
     pos = jnp.asarray(pos, jnp.int32)
-    o, lse = _maybe_pruned_partial(
-        q, k_cache, v_cache, pos, i, n, m, layout, window, scale, prune
-    )
+    if _native_enabled(kernel):
+        B, _, hkv, d = k_cache.shape
+        chunk = pk.dense_chunk_for(m)
+        chunks = m // chunk
+        kv_off, stride_kv = _shard_geometry(i, n, m, layout)
+        k_pool = k_cache.reshape(B * chunks, chunk, hkv, d)
+        v_pool = v_cache.reshape(B * chunks, chunk, hkv, v_cache.shape[-1])
+        bt = jnp.arange(B * chunks, dtype=jnp.int32).reshape(B, chunks)
+
+        def run(_):
+            return pk.paged_flash_decode(
+                q, k_pool, v_pool, bt, pos, kv_off,
+                stride_kv=stride_kv, window=window, scale=scale,
+            )
+
+        o, lse = _maybe_pruned(run, q, pos, i, n, m, layout, window, prune)
+    else:
+        o, lse = _maybe_pruned_partial(
+            q, k_cache, v_cache, pos, i, n, m, layout, window, scale, prune
+        )
     return _psum_combine(o, lse, axis_name, q.dtype)
 
 
@@ -287,17 +338,32 @@ def paged_cache_decode(
     window: Optional[int] = None,
     scale: Optional[float] = None,
     prune: bool = True,
+    kernel: str = "gather",  # gather | native (block table read in-kernel)
 ) -> jnp.ndarray:
-    """Gather-by-block-table decode: page-gather each row's local view, then
-    the identical banded partial + psum combine the dense path uses."""
+    """Paged decode partial + psum combine.  ``kernel="gather"`` materializes
+    each row's dense local view from its pages and runs the identical banded
+    partial the dense path uses (the correctness oracle); ``"native"`` hands
+    the pool and the block table straight to the split-K Pallas kernel — no
+    gathered intermediate, HBM traffic follows allocated depth."""
     i = lax.axis_index(axis_name) if axis_name is not None else 0
     page_size, max_pages = k_pool.shape[1], block_table.shape[1]
     m = max_pages * page_size
     pos = jnp.asarray(pos, jnp.int32)
-    k_loc, v_loc = paged_cache_gather(k_pool, v_pool, block_table)
-    o, lse = _maybe_pruned_partial(
-        q, k_loc, v_loc, pos, i, n, m, layout, window, scale, prune
-    )
+    if _native_enabled(kernel):
+        kv_off, stride_kv = _shard_geometry(i, n, m, layout)
+
+        def run(_):
+            return pk.paged_flash_decode(
+                q, k_pool, v_pool, block_table, pos, kv_off,
+                stride_kv=stride_kv, window=window, scale=scale,
+            )
+
+        o, lse = _maybe_pruned(run, q, pos, i, n, m, layout, window, prune)
+    else:
+        k_loc, v_loc = paged_cache_gather(k_pool, v_pool, block_table)
+        o, lse = _maybe_pruned_partial(
+            q, k_loc, v_loc, pos, i, n, m, layout, window, scale, prune
+        )
     return _psum_combine(o, lse, axis_name, q.dtype)
 
 

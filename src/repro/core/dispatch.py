@@ -100,6 +100,11 @@ class AttentionPlanConfig:
     allow_concurrent_rings: bool = False
     mask: Optional[MaskSpec] = None  # first-class mask; supersedes causal/window
     paged: bool = False  # decode reads/writes a page pool through a block table
+    # decode kernel variant: "auto" -> "native" (the split-K Pallas kernel
+    # reading the block table in-kernel, kernels/paged_decode.py) for the
+    # paged cache wherever Pallas runs (TPU / REPRO_KERNELS=pallas), the
+    # gather/band reference elsewhere; "native"/"gather" force either.
+    decode_kernel: str = "auto"
     # --- Figure-6 autotuning (simulator-planned tile + schedules) ---
     autotune: bool = False
     with_backward: bool = True
@@ -109,6 +114,11 @@ class AttentionPlanConfig:
     def __post_init__(self):
         if self.mask is not None and (self.causal or self.window is not None):
             raise ValueError("pass either mask= or the legacy causal/window flags, not both")
+        if self.decode_kernel not in ("auto", "native", "gather"):
+            raise ValueError(
+                f"unknown decode_kernel {self.decode_kernel!r}; "
+                "expected auto | native | gather"
+            )
 
     def resolved_backend(self) -> str:
         return resolve_backend_name(self)
@@ -117,6 +127,29 @@ class AttentionPlanConfig:
         if self.mask is not None:
             return self.mask
         return MaskSpec.from_flags(self.causal, self.window)
+
+
+def _resolve_decode_kernel(kernel: Optional[str], paged: bool) -> str:
+    """"auto" -> the split-K native kernel for the paged cache (the gather
+    intermediate is exactly what it exists to kill) wherever the backend
+    policy actually runs Pallas (TPU, or REPRO_KERNELS=pallas correctness
+    runs) — "auto" off-TPU keeps the fast XLA gather/band reference, same
+    policy as every other kernel (kernels/ops.py).  Explicit "native" runs
+    the kernel interpret-mode off-TPU (except REPRO_KERNELS=ref, where
+    ``_native_enabled`` serves it with the gather oracle); "gather" forces
+    the oracle.  The dense cache defaults to the band path either way."""
+    if kernel in (None, "auto"):
+        if paged and ops.pallas_enabled():
+            return "native"
+        return "gather" if paged else "band"
+    if kernel not in ("native", "gather"):
+        # every route validates here (the n==1 paths never build a plan
+        # config), so a typo'd variant fails loudly instead of silently
+        # measuring the default path
+        raise ValueError(
+            f"unknown decode_kernel {kernel!r}; expected auto | native | gather"
+        )
+    return "band" if (kernel == "gather" and not paged) else kernel
 
 
 def plan_from_ctx(
@@ -242,7 +275,7 @@ def _plan_key(cfg: AttentionPlanConfig, comm: CommModel, hw: HardwareModel) -> T
     the same (shape, dtype, n, hw) from ever colliding — mask structure
     changes both block cost and the pruned schedule."""
     desc = {
-        "v": 2,
+        "v": 3,
         "n": comm.n,
         "a": cfg.a,
         "seq": comm.seq,
@@ -255,6 +288,9 @@ def _plan_key(cfg: AttentionPlanConfig, comm: CommModel, hw: HardwareModel) -> T
         # paged and dense decode stacks must never share a plan entry: the
         # paged gather changes the achievable tile/arithmetic intensity
         "paged": cfg.paged,
+        # gather and native decode kernels have different HBM traffic models,
+        # so their plans must not collide either
+        "decode_kernel": _resolve_decode_kernel(cfg.decode_kernel, cfg.paged),
         "with_backward": cfg.with_backward,
         "allow_concurrent_rings": cfg.allow_concurrent_rings,
         "hw_profile": cfg.hw_profile,
@@ -427,6 +463,7 @@ def _decode_step_local(q, k_new, v_new, k_cache, v_cache, pos, cfg: AttentionPla
         o = paged_cache_decode(
             q, k_cache, v_cache, bt, pos, cfg.axis_name, cfg.n,
             layout=cfg.layout, window=cfg.window, scale=cfg.scale,
+            kernel=_resolve_decode_kernel(cfg.decode_kernel, paged=True),
         )
         return o, k_cache, v_cache
     k_cache, v_cache = sharded_cache_update(
@@ -435,6 +472,7 @@ def _decode_step_local(q, k_new, v_new, k_cache, v_cache, pos, cfg: AttentionPla
     o = sharded_cache_decode(
         q, k_cache, v_cache, pos, cfg.axis_name, cfg.n,
         layout=cfg.layout, window=cfg.window, scale=cfg.scale,
+        kernel=_resolve_decode_kernel(cfg.decode_kernel, paged=False),
     )
     return o, k_cache, v_cache
 
@@ -561,6 +599,7 @@ def decode_attention_step(
     layout: str = "striped",
     scale: Optional[float] = None,
     block_table=None,  # int32 [B, max_pages]: switches to the paged cache
+    decode_kernel: Optional[str] = None,  # None -> ctx.decode_kernel
 ):
     """One token of cache-based decode through the 'decode' backend.
 
@@ -574,16 +613,33 @@ def decode_attention_step(
     no batch axis, so the paged step runs batch-REPLICATED over any data
     axes — every device applies the identical pool update (slots are few;
     pages, not rows, carry the memory).
+
+    ``decode_kernel`` (default from ``ctx``) picks the band/gather oracle or
+    the split-K native kernel; "auto" resolves paged -> native, dense -> band.
     """
     n = ctx.sp_size
     pos = jnp.asarray(pos, jnp.int32)
     hi = (window - 1) if window else BAND_INF
+    if decode_kernel is None:
+        decode_kernel = getattr(ctx, "decode_kernel", "auto")
     if block_table is not None:
         return _decode_attention_step_paged(
             q, k_new, v_new, k_cache, v_cache, pos, block_table, ctx,
-            window=window, layout=layout, scale=scale,
+            window=window, layout=layout, scale=scale, decode_kernel=decode_kernel,
         )
+    dense_kernel = _resolve_decode_kernel(decode_kernel, paged=False)
     if n == 1:
+        if dense_kernel == "native":
+            # one shared update + split-K decode call covers scalar AND
+            # vector pos (the kernel's grid is per-row, no vmap needed)
+            k_cache, v_cache = sharded_cache_update(
+                k_cache, v_cache, k_new, v_new, pos, None, 1, layout=layout
+            )
+            o = sharded_cache_decode(
+                q, k_cache, v_cache, pos, None, 1,
+                layout=layout, window=window, scale=scale, kernel="native",
+            )
+            return o.astype(q.dtype), k_cache, v_cache
         if pos.ndim == 0:
             k_cache = jax.lax.dynamic_update_slice_in_dim(
                 k_cache, k_new.astype(k_cache.dtype), pos, axis=1
@@ -616,7 +672,7 @@ def decode_attention_step(
 
     cfg = AttentionPlanConfig(
         backend="decode", axis_name=ctx.sp_axis, n=n,
-        window=window, layout=layout, scale=scale,
+        window=window, layout=layout, scale=scale, decode_kernel=decode_kernel,
     )
     step = get_backend("decode").step
 
@@ -637,26 +693,28 @@ def decode_attention_step(
 
 def _decode_attention_step_paged(
     q, k_new, v_new, k_pool, v_pool, pos, block_table, ctx,
-    *, window, layout, scale,
+    *, window, layout, scale, decode_kernel="auto",
 ):
     """Paged decode step: the pool's page axis is unsharded, its position
     axis is sharded over the sequence axis; everything else is replicated
     (see ``decode_attention_step``)."""
     n = ctx.sp_size
     bt = jnp.asarray(block_table, jnp.int32)
+    kernel = _resolve_decode_kernel(decode_kernel, paged=True)
     if n == 1:
         k_pool, v_pool = paged_cache_update(
             k_pool, v_pool, k_new, v_new, bt, pos, None, 1, layout=layout
         )
         o = paged_cache_decode(
             q, k_pool, v_pool, bt, pos, None, 1,
-            layout=layout, window=window, scale=scale,
+            layout=layout, window=window, scale=scale, kernel=kernel,
         )
         return o, k_pool, v_pool
 
     cfg = AttentionPlanConfig(
         backend="decode", axis_name=ctx.sp_axis, n=n,
         window=window, layout=layout, scale=scale, paged=True,
+        decode_kernel=kernel,
     )
     step = get_backend("decode").step
     rep = P(None, None, None, None)

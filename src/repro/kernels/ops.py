@@ -42,6 +42,17 @@ def set_backend(name: str) -> None:
     _BACKEND = name
 
 
+def current_backend() -> str:
+    return _BACKEND
+
+
+def pallas_enabled() -> bool:
+    """Does the current backend policy run Pallas kernels (compiled on TPU,
+    or interpret-mode under REPRO_KERNELS=pallas)?  "auto" off-TPU runs the
+    fast XLA reference instead — perf-default code paths key off this."""
+    return _use_pallas()[0]
+
+
 def _use_pallas() -> Tuple[bool, bool]:
     """-> (use_pallas, interpret)"""
     on_tpu = jax.default_backend() == "tpu"

@@ -50,6 +50,10 @@ def main():
                     help="local positions per page (paged mode)")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="physical pool size in pages (paged mode)")
+    ap.add_argument("--decode-kernel", default="auto",
+                    choices=("auto", "native", "gather"),
+                    help="flash-decode variant: auto (paged -> split-K "
+                         "native kernel), native, or the gather oracle")
     args = ap.parse_args()
 
     if args.fake_devices:
@@ -79,7 +83,7 @@ def main():
     params = tfm.init_params(cfg, jax.random.PRNGKey(0), ctx=ctx)
     eng = ServeEngine(cfg, params, ctx=ctx, max_seq=args.max_seq, num_slots=args.slots,
                       paged=args.paged, page_size=args.page_size,
-                      num_pages=args.num_pages)
+                      num_pages=args.num_pages, decode_kernel=args.decode_kernel)
     rng = np.random.default_rng(0)
 
     if args.stream:

@@ -71,11 +71,15 @@ def decode_attention_step(
     layout: str = "striped",
     scale: Optional[float] = None,
     block_table: Optional[jnp.ndarray] = None,  # [B, max_pages]: paged cache
+    decode_kernel: Optional[str] = None,  # None -> ctx.decode_kernel
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Returns (o, new_k_cache, new_v_cache)."""
+    """Returns (o, new_k_cache, new_v_cache).  ``block_table`` is handed to
+    the decode backend verbatim; with the native kernel variant it is read
+    in-kernel (scalar-prefetched), never gathered into a dense view."""
     return dispatch.decode_attention_step(
         q, k_new, v_new, k_cache, v_cache, pos, ctx,
         window=window, layout=layout, scale=scale, block_table=block_table,
+        decode_kernel=decode_kernel,
     )
 
 

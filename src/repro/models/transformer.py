@@ -396,7 +396,12 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: ParallelCtx):
     ``cache["pos"]`` is the per-slot position vector [B] (a scalar still
     works for legacy callers); every row advances by one — rows holding
     retired/free slots tick harmlessly (their cache writes are masked past
-    capacity and their outputs are ignored by the engine)."""
+    capacity and their outputs are ignored by the engine).
+
+    A paged cache's block table ``cache["bt"]`` is threaded to the decode
+    backend VERBATIM (layer-shared device operand): ``ctx.decode_kernel``
+    picks whether it drives a page gather or is scalar-prefetched into the
+    native split-K kernel (kernels/paged_decode.py)."""
     pos = cache["pos"]
     bt = cache.get("bt")  # paged K/V: block table, shared by every layer
     x = jnp.take(params["embed"], tokens, axis=0)

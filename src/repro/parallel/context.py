@@ -35,6 +35,9 @@ class ParallelCtx:
     attn_autotune: bool = False  # pick (a, b) + schedules via the simulator
     # (Figure 6) through the on-disk plan cache instead of the sqrt-n heuristic
     plan_cache_dir: Optional[str] = None  # None -> dispatch's default cache dir
+    decode_kernel: str = "auto"  # flash-decode variant: auto (paged -> the
+    # split-K native kernel where Pallas runs, else the gather/band
+    # reference) | native | gather
     # --- other knobs ---
     remat: bool = True
     unroll_layers: bool = False  # python-loop the layer stack (dry-run cost

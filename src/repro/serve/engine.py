@@ -20,6 +20,7 @@ documented exception: expert capacity couples rows by construction).
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -63,9 +64,15 @@ class ServeEngine:
         paged: bool = False,
         page_size: Optional[int] = None,
         num_pages: Optional[int] = None,
+        decode_kernel: str = "auto",
     ):
         self.cfg = cfg
         self.ctx = ctx or ParallelCtx()
+        # flash-decode kernel variant: "auto" serves the paged cache with the
+        # split-K native kernel (block table read in-kernel) wherever Pallas
+        # runs, the gather/band reference elsewhere; "native"/"gather" force
+        if decode_kernel != "auto":
+            self.ctx = dataclasses.replace(self.ctx, decode_kernel=decode_kernel)
         self.params = params
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
@@ -123,6 +130,8 @@ class ServeEngine:
         self._cur = np.zeros((num_slots, 1), np.int32)  # last token per slot
         self._depth = np.zeros((num_slots,), np.int64)  # host view of pos
         self._bt_version = -1  # device block table staleness marker
+        self.bt_uploads = 0  # device block-table uploads (version-gated:
+        # ticks whose appends stay inside a page re-upload nothing)
         self._tick = 0
         self._finished: Dict[int, Request] = {}
         # jit bookkeeping: trace counters tick at TRACE time only, so tests
@@ -160,6 +169,7 @@ class ServeEngine:
         self._cache = dict(self._cache)
         self._cache["bt"] = jnp.asarray(self.allocator.device_table(self.num_slots))
         self._bt_version = self.allocator.version
+        self.bt_uploads += 1
 
     def _aux_inputs(self, batch_size: int) -> Dict:
         """Frontend stub inputs (audio frames / vision patches)."""
@@ -489,6 +499,7 @@ class ServeEngine:
             "cache_bytes": float(lay.num_pages * lay.chunk * per_tok),
             # ... vs what the workload actually touched
             "peak_page_bytes": float(stats["peak_in_use"] * lay.chunk * per_tok),
+            "bt_uploads": float(self.bt_uploads),
             **{k: float(v) for k, v in stats.items()},
         }
 

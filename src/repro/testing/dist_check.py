@@ -989,7 +989,13 @@ def check_paged_serve():
     tables + refcounted allocator) must be token-for-token identical to the
     dense engine on the mixed-length streaming trace, and a pair of requests
     sharing a 32-token prefix must allocate strictly fewer pages than an
-    unshared pair while still matching the dense engine exactly."""
+    unshared pair while still matching the dense engine exactly.
+
+    A second paged run forces ``decode_kernel="native"`` — the split-K kernel
+    (kernels/paged_decode.py: block table read in-kernel, no gather
+    intermediate; interpret-mode Pallas on these CPU devices) — and must
+    produce the same tokens, so native == gather == dense on the live serve
+    trace.  The device block-table upload count must stay version-gated."""
     import jax
     import numpy as np
 
@@ -1023,10 +1029,23 @@ def check_paged_serve():
     arrivals = [t for _, t in trace]
     dense_toks, _ = run_engine(prompts, arrivals)
     # n=4, page_size=4 -> 16-token chunks; 8 logical pages cover max_seq=128
+    # ("auto" resolves to the gather oracle on CPU: Pallas is off-policy here)
     paged_toks, paged_eng = run_engine(prompts, arrivals, paged=True, page_size=4)
     assert paged_toks == dense_toks, (paged_toks, dense_toks)
     assert paged_eng.decode_trace_count == 1, paged_eng.decode_trace_count
     assert paged_eng.allocator.pages_in_use == 0  # every retirement freed
+    # the NATIVE split-K kernel (forced; interpret-mode Pallas on CPU) must
+    # reproduce the trace token-for-token on the (2, 4) mesh
+    native_toks, _ = run_engine(
+        prompts, arrivals, paged=True, page_size=4, decode_kernel="native"
+    )
+    assert native_toks == dense_toks, (native_toks, dense_toks)
+    # block-table uploads are version-gated (bounded by allocator mutations,
+    # not by sync calls; tests/test_paged_decode.py pins the strict in-page
+    # property with a controlled page size)
+    assert 0 < paged_eng.bt_uploads <= paged_eng.allocator.version, (
+        paged_eng.bt_uploads, paged_eng.allocator.version,
+    )
 
     # prefix sharing: two 48-token prompts with a common 32-token prefix
     # (= 2 shared chunks) vs two unrelated 48-token prompts
@@ -1047,6 +1066,9 @@ def check_paged_serve():
     assert st_sh["fresh_allocs"] < st_un["fresh_allocs"], (st_sh, st_un)
     return {
         "tokens": {i: t for i, t in enumerate(paged_toks)},
+        "native_equals_gather_equals_dense": True,
+        "bt_uploads": paged_eng.bt_uploads,
+        "ticks": paged_eng._tick,
         "shared_stats": st_sh,
         "unshared_stats": st_un,
     }

@@ -1,0 +1,332 @@
+"""Paged-native split-K flash-decode kernel vs the gather-then-dense oracle.
+
+The native kernel (kernels/paged_decode.py) must agree with the gather path
+(page-gather + band kernel) to combine-order fp tolerance for arbitrary
+depths, page tables, pool sizes, shard geometries, and windows — and must be
+EXACT about what it reads: tail positions of a partial last page and
+unallocated pages are poisoned with huge values that would blow up any leak.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import decode_attention as da
+from repro.core import dispatch
+from repro.core.am import CommModel
+from repro.kernels import ops
+from repro.kernels import paged_decode as pk
+from repro.kernels.ref import NEG_INF
+from repro.parallel.context import ParallelCtx
+from repro.serve.kv_pool import PageAllocator, PagedLayout
+
+H, HKV, D = 4, 2, 8
+POISON = 1e4  # any leak of a masked/unallocated position is unmissable
+
+
+def _build_pool(rng, depths, page_size, max_pages, extra_pages=0):
+    """Allocator-backed local pool: slot rows at the given LOCAL depths, all
+    unwritten positions (page tails past depth, free pages) poisoned."""
+    lay = PagedLayout(
+        num_pages=len(depths) * max_pages + extra_pages,
+        page_size=page_size, max_pages=max_pages, n=1,
+    )
+    alloc = PageAllocator(lay)
+    k_pool = np.full((lay.num_pages, page_size, HKV, D), POISON, np.float32)
+    v_pool = np.full_like(k_pool, POISON)
+    dense_k = np.zeros((len(depths), max_pages * page_size, HKV, D), np.float32)
+    dense_v = np.zeros_like(dense_k)
+    for slot, d in enumerate(depths):
+        prompt = rng.integers(0, 2**30, (d,), dtype=np.int32)
+        alloc.alloc_slot(slot, prompt, 0)
+        for p in range(d):
+            kv = rng.normal(size=(2, HKV, D)).astype(np.float32)
+            lp, off = p // page_size, p % page_size
+            k_pool[alloc.block_table[slot, lp], off] = kv[0]
+            v_pool[alloc.block_table[slot, lp], off] = kv[1]
+            dense_k[slot, p], dense_v[slot, p] = kv[0], kv[1]
+    bt = jnp.asarray(alloc.device_table(len(depths)))
+    return alloc, jnp.asarray(k_pool), jnp.asarray(v_pool), bt, dense_k, dense_v
+
+
+def _oracle_partial(q, dense_k, dense_v, pos, kv_off, stride, window):
+    """Gather-then-dense band partial — the exact reference path."""
+    hi = (window - 1) if window else da.BAND_INF
+    return da._banded_partial(
+        q, jnp.asarray(dense_k), jnp.asarray(dense_v),
+        jnp.asarray(pos, jnp.int32), kv_off, stride, hi, D**-0.5,
+    )
+
+
+# --------------------------------------------------------------------------
+# hypothesis: native == gather over random depths / tables / pools / geometry
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    depths=st.lists(st.integers(min_value=1, max_value=12), min_size=1, max_size=3),
+    page_size=st.sampled_from([1, 2, 4]),
+    stride=st.sampled_from([1, 2, 4]),
+    window=st.sampled_from([None, 3, 8]),
+    vector_pos=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_native_matches_gather_oracle(depths, page_size, stride, window, vector_pos, seed):
+    rng = np.random.default_rng(seed)
+    max_pages = -(-max(depths) // page_size) + 1  # at least one never-written page
+    shard = rng.integers(0, stride)  # striped shard geometry: kv_off = i
+    _, k_pool, v_pool, bt, dense_k, dense_v = _build_pool(
+        rng, depths, page_size, max_pages
+    )
+    q = jnp.asarray(rng.normal(size=(len(depths), 1, H, D)), jnp.float32)
+    # global position whose last visible LOCAL slot is depth-1 on this shard
+    pos = np.asarray([shard + stride * (d - 1) for d in depths], np.int32)
+    if not vector_pos:
+        pos = pos.min()  # scalar pos: every row at the same (lowest) depth
+    o_n, lse_n = pk.paged_flash_decode(
+        q, k_pool, v_pool, bt, jnp.asarray(pos), shard,
+        stride_kv=stride, window=window,
+    )
+    o_g, lse_g = _oracle_partial(q, dense_k, dense_v, pos, shard, stride, window)
+    np.testing.assert_allclose(np.asarray(o_n), np.asarray(o_g), atol=2e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(lse_n), np.asarray(lse_g), atol=2e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# partial last page: the in-page tail mask is where split-K silently breaks
+# --------------------------------------------------------------------------
+
+
+def test_partial_last_page_exact_against_truncated_oracle():
+    """Depths not divisible by page_size: the kernel must weigh the partial
+    page by its LIVE tail only.  The oracle here sees just the first d
+    positions (no masked garbage at all), so any tail leak — wrong lse
+    weight, poison read — breaks the comparison loudly."""
+    rng = np.random.default_rng(0)
+    page_size, max_pages = 4, 4
+    depths = [1, 5, 11]  # 1 = lone token in a page; 5, 11 = ragged tails
+    _, k_pool, v_pool, bt, dense_k, dense_v = _build_pool(
+        rng, depths, page_size, max_pages
+    )
+    q = jnp.asarray(rng.normal(size=(len(depths), 1, H, D)), jnp.float32)
+    pos = jnp.asarray([d - 1 for d in depths], jnp.int32)
+    o_n, lse_n = pk.paged_flash_decode(
+        q, k_pool, v_pool, bt, pos, 0, stride_kv=1
+    )
+    for slot, d in enumerate(depths):
+        o_ref, lse_ref = ops.block_attention(
+            q[slot : slot + 1],
+            jnp.asarray(dense_k[slot : slot + 1, :d]),
+            jnp.asarray(dense_v[slot : slot + 1, :d]),
+            (d - 1, 0, 0, da.BAND_INF),
+        )
+        np.testing.assert_allclose(
+            np.asarray(o_n[slot]), np.asarray(o_ref[0]), atol=2e-5, rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(lse_n[slot]), np.asarray(lse_ref[0]), atol=2e-5, rtol=1e-5
+        )
+
+
+def test_empty_shard_returns_exact_empty_band():
+    """A shard holding nothing visible must return o = 0, lse = NEG_INF
+    exactly (the psum combine depends on it); all-empty splits must not
+    resurrect with weight exp(NEG_INF - NEG_INF) = 1."""
+    rng = np.random.default_rng(1)
+    _, k_pool, v_pool, bt, _, _ = _build_pool(rng, [8], 4, 3)
+    q = jnp.asarray(rng.normal(size=(1, 1, H, D)), jnp.float32)
+    # striped shard i=3 of n=4 sees positions 3, 7, ...; pos=2 hides them all
+    o, lse = pk.paged_flash_decode(
+        q, k_pool, v_pool, bt, jnp.int32(2), 3, stride_kv=4
+    )
+    np.testing.assert_array_equal(np.asarray(o), 0.0)
+    np.testing.assert_array_equal(np.asarray(lse), np.float32(NEG_INF))
+
+
+def test_combine_split_partials_empty_guard():
+    o = jnp.zeros((1, 3, H, D), jnp.float32)
+    lse = jnp.full((1, 3, H), NEG_INF, jnp.float32)
+    oc, lc = pk.combine_split_partials(o, lse)
+    np.testing.assert_array_equal(np.asarray(oc), 0.0)
+    np.testing.assert_array_equal(np.asarray(lc), np.float32(NEG_INF))
+
+
+# --------------------------------------------------------------------------
+# copy-on-write: decode through shared then privately-copied pages
+# --------------------------------------------------------------------------
+
+
+def test_cow_shared_page_decode():
+    """Two slots share their prompt's page; slot 1 then appends through a CoW
+    copy.  The native kernel must read each slot's CURRENT table — the shared
+    page for slot 0, the private copy for slot 1."""
+    rng = np.random.default_rng(2)
+    page_size = 4
+    lay = PagedLayout(num_pages=8, page_size=page_size, max_pages=2, n=1)
+    alloc = PageAllocator(lay)
+    prompt = np.arange(4, dtype=np.int32)  # exactly one chunk -> registered
+    alloc.alloc_slot(0, prompt, 4)
+    got = alloc.alloc_slot(1, prompt, 4)
+    assert got.shared_pages == 1
+    k_pool = np.full((lay.num_pages, page_size, HKV, D), POISON, np.float32)
+    v_pool = np.full_like(k_pool, POISON)
+    shared_kv = rng.normal(size=(2, page_size, HKV, D)).astype(np.float32)
+    pid = int(alloc.block_table[0, 0])
+    k_pool[pid], v_pool[pid] = shared_kv[0], shared_kv[1]
+    # slot 1 appends at pos 2 (inside the shared page) -> private copy
+    cp = alloc.ensure_append(1, 2)
+    assert cp is not None
+    src, dst = cp
+    k_pool[dst], v_pool[dst] = k_pool[src].copy(), v_pool[src].copy()
+    new_kv = rng.normal(size=(2, HKV, D)).astype(np.float32)
+    k_pool[dst, 2], v_pool[dst, 2] = new_kv[0], new_kv[1]
+
+    bt = jnp.asarray(alloc.device_table(2))
+    q = jnp.asarray(rng.normal(size=(2, 1, H, D)), jnp.float32)
+    pos = jnp.asarray([3, 2], jnp.int32)
+    o_n, lse_n = pk.paged_flash_decode(
+        jnp.asarray(q), jnp.asarray(k_pool), jnp.asarray(v_pool), bt, pos, 0,
+        stride_kv=1,
+    )
+    dense_k = np.zeros((2, lay.max_pages * page_size, HKV, D), np.float32)
+    dense_v = np.zeros_like(dense_k)
+    dense_k[0, :4], dense_v[0, :4] = shared_kv[0], shared_kv[1]
+    dense_k[1, :4], dense_v[1, :4] = k_pool[dst], v_pool[dst]
+    o_g, lse_g = _oracle_partial(q, dense_k, dense_v, pos, 0, 1, None)
+    np.testing.assert_allclose(np.asarray(o_n), np.asarray(o_g), atol=2e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(lse_n), np.asarray(lse_g), atol=2e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# dense cache as one implicit page run (split-K for the dense engine too)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,window", [(16, None), (32, 5), (24, None)])
+def test_dense_split_k_matches_band(m, window):
+    rng = np.random.default_rng(3)
+    B = 3
+    k_cache = jnp.asarray(rng.normal(size=(B, m, HKV, D)), jnp.float32)
+    v_cache = jnp.asarray(rng.normal(size=(B, m, HKV, D)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, m, (B,)), jnp.int32)
+    o_band = da.sharded_cache_decode(
+        q, k_cache, v_cache, pos, None, 1, window=window, kernel="band"
+    )
+    o_native = da.sharded_cache_decode(
+        q, k_cache, v_cache, pos, None, 1, window=window, kernel="native"
+    )
+    np.testing.assert_allclose(
+        np.asarray(o_native), np.asarray(o_band), atol=2e-5, rtol=1e-5
+    )
+
+
+# --------------------------------------------------------------------------
+# dispatch seam: the kernel-variant flag routes and keys correctly
+# --------------------------------------------------------------------------
+
+
+def test_decode_step_kernel_flag_paged_n1():
+    # depths chosen so the append position sits inside an ALLOCATED page —
+    # the engine guarantees this via ensure_append before every tick (an
+    # unallocated append target is out of contract: the scatter drops the
+    # write, the native kernel skips the page, and the gather path would
+    # read clamped page 0 through the band)
+    rng = np.random.default_rng(4)
+    depths = [5, 3]
+    page_size, max_pages = 2, 4
+    _, k_pool, v_pool, bt, _, _ = _build_pool(rng, depths, page_size, max_pages)
+    ctx = ParallelCtx()
+    q = jnp.asarray(rng.normal(size=(2, 1, H, D)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(2, 1, HKV, D)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(2, 1, HKV, D)), jnp.float32)
+    pos = jnp.asarray(depths, jnp.int32)  # append AT depth, attend <= pos
+    outs, pools = {}, {}
+    for kernel in ("gather", "native"):
+        o, kp, vp = dispatch.decode_attention_step(
+            q, kn, vn, k_pool, v_pool, pos, ctx,
+            block_table=bt, decode_kernel=kernel,
+        )
+        outs[kernel] = np.asarray(o)
+        pools[kernel] = (np.asarray(kp), np.asarray(vp))
+    np.testing.assert_allclose(outs["native"], outs["gather"], atol=2e-5, rtol=1e-5)
+    # the UPDATE is kernel-independent: bitwise-identical pool writes
+    for a, b in zip(pools["gather"], pools["native"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_native_falls_back_to_gather_under_ref_backend():
+    """REPRO_KERNELS=ref must serve 'native' with the gather oracle (bitwise
+    equal outputs), so pure-jnp environments keep one code path."""
+    rng = np.random.default_rng(5)
+    _, k_pool, v_pool, bt, _, _ = _build_pool(rng, [5], 2, 4)
+    q = jnp.asarray(rng.normal(size=(1, 1, H, D)), jnp.float32)
+    pos = jnp.asarray([4], jnp.int32)
+    ops.set_backend("ref")
+    try:
+        o_n = da.paged_cache_decode(q, k_pool, v_pool, bt, pos, None, 1, kernel="native")
+        o_g = da.paged_cache_decode(q, k_pool, v_pool, bt, pos, None, 1, kernel="gather")
+    finally:
+        ops.set_backend("auto")
+    np.testing.assert_array_equal(np.asarray(o_n), np.asarray(o_g))
+
+
+def test_plan_key_distinguishes_decode_kernel():
+    comm = CommModel(seq=256, hidden=128, n=4)
+    hw = dispatch.HW_PROFILES["default"]
+    keys = {
+        dispatch._plan_key(
+            dispatch.AttentionPlanConfig(n=4, paged=True, decode_kernel=dk), comm, hw
+        )[0]
+        for dk in ("native", "gather")
+    }
+    assert len(keys) == 2
+    with pytest.raises(ValueError):
+        dispatch.AttentionPlanConfig(decode_kernel="warp")
+    # the n==1 dense path never builds a plan config: the resolver itself
+    # must reject typos instead of silently serving the default kernel
+    with pytest.raises(ValueError):
+        dispatch.decode_attention_step(
+            jnp.zeros((1, 1, H, D)), jnp.zeros((1, 1, HKV, D)),
+            jnp.zeros((1, 1, HKV, D)), jnp.zeros((1, 8, HKV, D)),
+            jnp.zeros((1, 8, HKV, D)), jnp.int32(0), ParallelCtx(),
+            decode_kernel="nativ",
+        )
+
+
+# --------------------------------------------------------------------------
+# engine: version-gated block-table upload
+# --------------------------------------------------------------------------
+
+
+def test_block_table_upload_is_version_gated():
+    """Decode ticks whose appends stay inside the current page must NOT
+    re-upload the device block table; only allocator mutations (prefill,
+    chunk-boundary appends, CoW, retirement) do."""
+    from repro.configs import get_config
+    from repro.models import transformer as tfm
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config("granite-8b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(6)
+    # page_size 16 = one chunk holds prompt + all new tokens: after the
+    # prefill upload, every decode tick stays inside the page
+    eng = ServeEngine(cfg, params, max_seq=64, num_slots=2, paged=True, page_size=16)
+    eng.submit(rng.integers(0, cfg.vocab_size, (4,), dtype=np.int32), 5)
+    eng.step()  # prefill + first decode tick
+    uploads_after_prefill = eng.bt_uploads
+    assert uploads_after_prefill >= 1
+    while eng.has_work:
+        eng.step()
+    # retirement frees pages (a table mutation) -> at most one more upload
+    # would show on a NEXT sync; the decode ticks themselves added none
+    assert eng.bt_uploads == uploads_after_prefill
+    ticks = eng._tick
+    assert eng.bt_uploads < ticks
+    assert eng.kv_cache_stats()["bt_uploads"] == float(eng.bt_uploads)
