@@ -9,7 +9,7 @@ measurement on accelerators) and writes JSON next to the table-2 results in
 ``benchmarks/results/serve_bench.json`` so the perf trajectory accumulates
 per commit (same convention as ``table2_comm_volume.json``).
 
-Two comparison sections ride along in the payload:
+Three comparison sections ride along in the payload:
 
   * ``pack_planner`` — the same bursty trace under the greedy vs the
     bin-packing ``Scheduler.pack_groups`` planner: padded prefill tokens and
@@ -18,6 +18,13 @@ Two comparison sections ride along in the payload:
     same system prompt) on the dense vs the PAGED engine: attention-cache
     bytes per request (dense: the fixed slot pool; paged: peak resident
     pages) and TTFT, with the allocator's sharing counters.
+  * ``continuous_prefill`` — a bursty long-prompt trace (one long prompt
+    arriving while short requests decode) under one-shot vs chunked
+    (``ServeConfig.prefill_chunk`` + ``tick_token_budget``) prefill:
+    per-tick wall times give real inter-token latency percentiles for the
+    short requests, reported as multiples of a quiet (no-burst) trace.
+    ``--check-bursty-p95 MULT`` exits nonzero if the chunked bursty p95
+    exceeds MULT x the quiet p95 — the CI latency-bound gate.
 """
 
 from __future__ import annotations
@@ -77,11 +84,122 @@ def _ttft(reqs, tick_s):
     return {"p50": _pct(vals, 50), "p95": _pct(vals, 95)}
 
 
+def _replay_ticks(eng, prompts, arrivals, new_tokens):
+    """Like ``_replay`` but records per-tick wall times so inter-token
+    latency can be measured rather than averaged.  Returns
+    (requests, walls, base_tick): ``walls[i]`` is the wall time of absolute
+    tick ``base_tick + i``."""
+    import time
+
+    def submit():
+        base = eng._tick
+        return [
+            eng.submit(p, max_new_tokens=new_tokens, arrival_tick=base + t)
+            for p, t in zip(prompts, arrivals)
+        ]
+
+    submit()
+    eng.run()  # warmup: compiles every launch shape the timed pass hits
+    base = eng._tick
+    rids = submit()
+    walls = []
+    while eng.has_work:
+        t0 = time.perf_counter()
+        eng.step()
+        walls.append(time.perf_counter() - t0)
+    return [eng._finished[r] for r in rids], walls, base
+
+
+def _inter_token_gaps(reqs, walls, base):
+    """Wall-clock gap between consecutive tokens of each request: the sum of
+    tick walls from just after the earlier token's tick through the later
+    token's tick."""
+    gaps = []
+    for r in reqs:
+        ticks = [t - base for t in r.token_ticks]
+        for a, b in zip(ticks, ticks[1:]):
+            gaps.append(sum(walls[a + 1:b + 1]))
+    return sorted(gaps)
+
+
+def bench_continuous_prefill(
+    cfg, params, *, seed=0, new_tokens=16, long_len=512, chunk=64, budget=96
+):
+    """Bursty long-prompt trace: short requests decode steadily while one
+    ``long_len``-token prompt arrives mid-stream.  Three engines:
+
+      * ``quiet``    — short requests only: the inter-token latency baseline.
+      * ``one_shot`` — the burst prefilled in a single launch: every short
+        request sees a latency spike proportional to the prompt length.
+      * ``chunked``  — continuous prefill: the burst ingests ``chunk`` tokens
+        per tick under ``budget``, so no tick's launch scales with the
+        prompt and the spike is bounded.
+
+    The headline numbers are the bursty p95 inter-token latencies as
+    multiples of the quiet p95, plus the long request's TTFT in ticks and
+    decode throughput under each engine."""
+    import numpy as np
+
+    from repro.serve.config import ServeConfig
+    from repro.serve.engine import ServeEngine
+
+    rng = np.random.default_rng(seed)
+    max_seq = long_len + new_tokens + 16
+    shorts = [rng.integers(0, cfg.vocab_size, (16,), dtype=np.int32)
+              for _ in range(6)]
+    long_prompt = rng.integers(0, cfg.vocab_size, (long_len,), dtype=np.int32)
+    short_arrivals = [0, 0, 2, 4, 6, 8]
+    burst_prompts = shorts + [long_prompt]
+    burst_arrivals = short_arrivals + [4]
+
+    configs = {
+        "quiet": (ServeConfig(max_seq=max_seq, num_slots=3),
+                  shorts, short_arrivals),
+        "one_shot": (ServeConfig(max_seq=max_seq, num_slots=3),
+                     burst_prompts, burst_arrivals),
+        "chunked": (ServeConfig(max_seq=max_seq, num_slots=3,
+                                prefill_chunk=chunk, tick_token_budget=budget),
+                    burst_prompts, burst_arrivals),
+    }
+    out = {"long_len": long_len, "chunk": chunk, "tick_token_budget": budget}
+    for name, (serve, prompts, arrivals) in configs.items():
+        eng = ServeEngine(cfg, params, serve=serve)
+        reqs, walls, base = _replay_ticks(eng, prompts, arrivals, new_tokens)
+        short_reqs = [r for r in reqs if len(r.prompt) < long_len]
+        gaps = _inter_token_gaps(short_reqs, walls, base)
+        decode_tokens = sum(len(r.generated) for r in reqs)
+        wall = sum(walls)
+        section = {
+            "ticks": len(walls),
+            "wall_s": wall,
+            "inter_token_s": {"p50": _pct(gaps, 50), "p95": _pct(gaps, 95)},
+            "tick_wall_max_s": max(walls) if walls else None,
+            "decode_tokens_per_s": decode_tokens / max(wall, 1e-9),
+        }
+        long_reqs = [r for r in reqs if len(r.prompt) >= long_len]
+        if long_reqs:
+            section["long_ttft_ticks"] = long_reqs[0].ttft_ticks
+            section["long_chunks"] = long_reqs[0].chunks
+        if name == "chunked":
+            stats = eng.tick_stats()
+            n = len(walls)
+            section["tick_prefill_tokens"] = stats["prefill_tokens"][-n:]
+            section["tick_decode_tokens"] = stats["decode_tokens"][-n:]
+        out[name] = section
+    quiet_p95 = out["quiet"]["inter_token_s"]["p95"] or 1e-9
+    for name in ("one_shot", "chunked"):
+        out[name]["inter_token_p95_vs_quiet"] = (
+            (out[name]["inter_token_s"]["p95"] or 0.0) / quiet_p95
+        )
+    return out
+
+
 def bench_pack_planner(cfg, params, *, seed=0, new_tokens=4, max_seq=128):
     """Bursty trace (same-tick admission waves of mixed short lengths) under
     the greedy vs the bin-packing pack planner: TTFT + padded prefill cost."""
     import numpy as np
 
+    from repro.serve.config import ServeConfig
     from repro.serve.engine import ServeEngine
 
     rng = np.random.default_rng(seed)
@@ -94,7 +212,8 @@ def bench_pack_planner(cfg, params, *, seed=0, new_tokens=4, max_seq=128):
     real_tokens = sum(lengths)
     for plan in ("greedy", "binpack"):
         eng = ServeEngine(
-            cfg, params, max_seq=max_seq, num_slots=4, pack_plan=plan
+            cfg, params,
+            serve=ServeConfig(max_seq=max_seq, num_slots=4, pack_plan=plan),
         )
         snap = {}
 
@@ -127,6 +246,7 @@ def bench_paged_prefix(cfg, params, *, seed=0, requests=6, new_tokens=4, max_seq
     prompt.  Dense vs paged engine: cache bytes per request + TTFT."""
     import numpy as np
 
+    from repro.serve.config import ServeConfig
     from repro.serve.engine import ServeEngine
 
     rng = np.random.default_rng(seed)
@@ -142,7 +262,10 @@ def bench_paged_prefix(cfg, params, *, seed=0, requests=6, new_tokens=4, max_seq
     out = {}
     for mode in ("dense", "paged"):
         kw = dict(paged=True, page_size=8) if mode == "paged" else {}
-        eng = ServeEngine(cfg, params, max_seq=max_seq, num_slots=4, **kw)
+        eng = ServeEngine(
+            cfg, params,
+            serve=ServeConfig(max_seq=max_seq, num_slots=4, **kw),
+        )
         snap = {}
 
         def before_timed():
@@ -184,17 +307,22 @@ def run_bench(
     new_tokens: int = 8,
     max_seq: int = 128,
     seed: int = 0,
+    long_len: int = 512,
+    prefill_chunk: int = 64,
+    tick_token_budget: int = 96,
 ):
     import jax
     import numpy as np
 
     from repro.configs import get_config
     from repro.models import transformer as tfm
+    from repro.serve.config import ServeConfig
     from repro.serve.engine import ServeEngine
 
     cfg = get_config(arch).reduced()
     params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
-    eng = ServeEngine(cfg, params, max_seq=max_seq, num_slots=slots)
+    eng = ServeEngine(cfg, params,
+                      serve=ServeConfig(max_seq=max_seq, num_slots=slots))
 
     rng = np.random.default_rng(seed)
     lengths = [int(rng.choice([16, 32, 64])) for _ in range(requests)]
@@ -259,6 +387,10 @@ def run_bench(
         payload["paged_prefix"] = bench_paged_prefix(
             cfg, params, seed=seed, max_seq=max_seq
         )
+        payload["continuous_prefill"] = bench_continuous_prefill(
+            cfg, params, seed=seed, long_len=long_len,
+            chunk=prefill_chunk, budget=tick_token_budget,
+        )
     return payload
 
 
@@ -269,11 +401,22 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--long-len", type=int, default=512,
+                    help="burst prompt length for the continuous_prefill section")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="chunk size for the continuous_prefill section")
+    ap.add_argument("--tick-token-budget", type=int, default=96,
+                    help="per-tick token budget for the continuous_prefill section")
+    ap.add_argument("--check-bursty-p95", type=float, default=None, metavar="MULT",
+                    help="exit nonzero if the chunked bursty p95 inter-token "
+                         "latency exceeds MULT x the quiet-trace p95")
     ap.add_argument("--json-out", default=os.path.join(RESULTS_DIR, "serve_bench.json"))
     args = ap.parse_args(argv)
     payload = run_bench(
         args.arch, slots=args.slots, requests=args.requests,
         new_tokens=args.new_tokens, max_seq=args.max_seq,
+        long_len=args.long_len, prefill_chunk=args.prefill_chunk,
+        tick_token_budget=args.tick_token_budget,
     )
     os.makedirs(os.path.dirname(args.json_out), exist_ok=True)
     with open(args.json_out, "w") as f:
@@ -285,7 +428,24 @@ def main(argv=None) -> int:
         summary["paged_bytes_per_request_ratio"] = (
             payload["paged_prefix"]["bytes_per_request_ratio"]
         )
+    if "continuous_prefill" in payload:
+        cp = payload["continuous_prefill"]
+        summary["bursty_p95_vs_quiet"] = {
+            "one_shot": cp["one_shot"]["inter_token_p95_vs_quiet"],
+            "chunked": cp["chunked"]["inter_token_p95_vs_quiet"],
+        }
     print(json.dumps(summary))
+    if args.check_bursty_p95 is not None:
+        if "continuous_prefill" not in payload:
+            print(f"check-bursty-p95: arch {args.arch!r} skips the "
+                  "continuous_prefill section", file=sys.stderr)
+            return 1
+        ratio = payload["continuous_prefill"]["chunked"]["inter_token_p95_vs_quiet"]
+        if ratio > args.check_bursty_p95:
+            print(f"check-bursty-p95: chunked bursty p95 is {ratio:.2f}x the "
+                  f"quiet p95 (bound: {args.check_bursty_p95:.2f}x)",
+                  file=sys.stderr)
+            return 1
     return 0
 
 

@@ -66,8 +66,12 @@ from repro.kernels.ref import BAND_INF, NEG_INF
 __all__ = [
     "sharded_cache_decode",
     "sharded_cache_update",
+    "sharded_cache_chunk_update",
+    "sharded_cache_chunk_decode",
     "paged_cache_decode",
     "paged_cache_update",
+    "paged_cache_chunk_update",
+    "paged_cache_chunk_decode",
 ]
 
 
@@ -186,12 +190,12 @@ def _maybe_pruned(run, q, pos, i, n, m, layout, window, prune):
     if not (prune and window):
         return run(None)
 
-    B, H = q.shape[0], q.shape[2]
+    B, S, H = q.shape[0], q.shape[1], q.shape[2]
 
     def skip(_):
         return (
             jnp.zeros(q.shape, q.dtype),
-            jnp.full((B, H, 1), NEG_INF, jnp.float32),
+            jnp.full((B, H, S), NEG_INF, jnp.float32),
         )
 
     return lax.cond(_window_nonempty(pos, i, n, m, layout, window), run, skip, None)
@@ -364,6 +368,182 @@ def paged_cache_decode(
         o, lse = _maybe_pruned_partial(
             q, k_loc, v_loc, pos, i, n, m, layout, window, scale, prune
         )
+    return _psum_combine(o, lse, axis_name, q.dtype)
+
+
+# --------------------------------------------------------------------------
+# chunked prefill: multi-token append + prefix-causal chunk attention
+# --------------------------------------------------------------------------
+#
+# Continuous prefill feeds a prompt into a live slot C tokens at a time.  A
+# chunk is just C consecutive decode writes batched into one launch: row b
+# scatters positions starts[b] .. starts[b]+lens[b]-1 through the SAME
+# owner/stripe math the single-token path uses, and the chunk's attention is
+# the same banded partial with a multi-row q — row i of the chunk sits at
+# global position starts[b]+i, so band = (starts[b], kv_off, 0, hi) with
+# stride_q=1 is exactly prefix-causal over resident positions.  Pad rows
+# (i >= lens[b]) compute garbage but never write; softmax is per-row so they
+# cannot contaminate real rows.
+
+
+def sharded_cache_chunk_update(
+    k_cache: jnp.ndarray,  # [B, m, Hkv, D] local slice
+    v_cache: jnp.ndarray,
+    k_new: jnp.ndarray,  # [B, C, Hkv, D] replicated across the axis
+    v_new: jnp.ndarray,
+    starts: jnp.ndarray,  # [B] int32: global position of each row's chunk base
+    lens: jnp.ndarray,  # [B] int32: valid tokens per row (0 = inactive row)
+    write_starts: jnp.ndarray,  # [B] int32: skip writes below this position
+    axis_name: Optional[str],
+    n: int,
+    layout: str = "striped",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter a C-token chunk per row into the local cache slice.  Positions
+    below ``write_starts`` (a shared prefix already resident) and at/after
+    ``starts + lens`` are dropped; distinct owned positions of one row map to
+    distinct local slots, so the scatter has no duplicate coordinates."""
+    i = lax.axis_index(axis_name) if axis_name is not None else 0
+    B, C = k_new.shape[0], k_new.shape[1]
+    m = k_cache.shape[1]
+    starts = jnp.asarray(starts, jnp.int32)
+    c = jnp.arange(C, dtype=jnp.int32)
+    pos = starts[:, None] + c[None, :]  # [B, C]
+    is_owner, slot = _owner_slot(pos, i, n, m, layout)
+    write = (
+        is_owner
+        & (c[None, :] < lens[:, None])
+        & (pos >= write_starts[:, None])
+        & (pos < n * m)
+    )
+    slot = jnp.clip(slot, 0, m - 1)
+    b = jnp.broadcast_to(jnp.arange(B)[:, None], (B, C))
+    # out-of-range batch index -> scatter drops the element entirely
+    b_idx = jnp.where(write, b, B)
+    out = []
+    for cache, new in ((k_cache, k_new), (v_cache, v_new)):
+        out.append(cache.at[b_idx, slot].set(new.astype(cache.dtype), mode="drop"))
+    return out[0], out[1]
+
+
+def _chunk_banded_partial(q, k_loc, v_loc, starts, kv_off, stride_kv, hi, scale):
+    """Per-shard partial for a [B, C, H, D] chunk: one banded kernel call per
+    row, with the band's q offset at that row's chunk base."""
+
+    def one(qb, kb, vb, sb):
+        band = jnp.stack(
+            [sb, jnp.asarray(kv_off, jnp.int32), jnp.int32(0), jnp.int32(hi)]
+        )
+        ob, lb = ops.block_attention(
+            qb[None], kb[None], vb[None], band,
+            scale=scale, stride_q=1, stride_kv=stride_kv,
+        )
+        return ob[0], lb[0]
+
+    return jax.vmap(one)(q, k_loc, v_loc, starts)
+
+
+def sharded_cache_chunk_decode(
+    q: jnp.ndarray,  # [B, C, H, D] chunk queries, replicated over the axis
+    k_cache: jnp.ndarray,  # [B, m, Hkv, D] local slice (chunk already written)
+    v_cache: jnp.ndarray,
+    starts,  # int32 [B]: global position of each row's chunk base
+    axis_name: Optional[str],
+    n: int,
+    *,
+    layout: str = "striped",
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    prune: bool = True,
+) -> jnp.ndarray:
+    """Prefix-causal chunk attention: row i of the chunk attends to global
+    positions <= starts + i (within the window).  Same partial + psum combine
+    as single-token decode; the window-prune bound widens by C - 1 because the
+    oldest row's window starts C - 1 earlier than the newest's."""
+    i = lax.axis_index(axis_name) if axis_name is not None else 0
+    m = k_cache.shape[1]
+    C = q.shape[1]
+    starts = jnp.asarray(starts, jnp.int32)
+    kv_off, stride_kv = _shard_geometry(i, n, m, layout)
+    hi = (window - 1) if window else BAND_INF
+
+    def run(_):
+        return _chunk_banded_partial(
+            q, k_cache, v_cache, starts, kv_off, stride_kv, hi, scale
+        )
+
+    win_eff = (window + C - 1) if window else None
+    o, lse = _maybe_pruned(run, q, starts + (C - 1), i, n, m, layout, win_eff, prune)
+    return _psum_combine(o, lse, axis_name, q.dtype)
+
+
+def paged_cache_chunk_update(
+    k_pool: jnp.ndarray,  # [num_pages, page_size, Hkv, D] local page pool
+    v_pool: jnp.ndarray,
+    k_new: jnp.ndarray,  # [B, C, Hkv, D] replicated across the axis
+    v_new: jnp.ndarray,
+    block_table: jnp.ndarray,  # [B, max_pages] int32; -1 = unallocated
+    starts: jnp.ndarray,  # [B] int32
+    lens: jnp.ndarray,  # [B] int32 (0 = inactive row)
+    write_starts: jnp.ndarray,  # [B] int32: skip writes below this position
+    axis_name: Optional[str],
+    n: int,
+    layout: str = "striped",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunk append through the block table: the allocator pre-books every
+    prompt page at admission, so a chunk never lands on an unallocated page;
+    shared-prefix positions (below ``write_starts``) are skipped so CoW pages
+    are never touched mid-prefill."""
+    i = lax.axis_index(axis_name) if axis_name is not None else 0
+    num_pages, page_size = k_pool.shape[0], k_pool.shape[1]
+    max_pages = block_table.shape[1]
+    B, C = k_new.shape[0], k_new.shape[1]
+    starts = jnp.asarray(starts, jnp.int32)
+    c = jnp.arange(C, dtype=jnp.int32)
+    pos = starts[:, None] + c[None, :]  # [B, C]
+    write, lp, off = _page_coords(pos, i, n, page_size, max_pages, layout)
+    write = write & (c[None, :] < lens[:, None]) & (pos >= write_starts[:, None])
+    lp = jnp.clip(lp, 0, max_pages - 1)
+    b = jnp.broadcast_to(jnp.arange(B)[:, None], (B, C))
+    phys = block_table[b, lp]
+    write = write & (phys >= 0)
+    page_idx = jnp.where(write, phys, num_pages)
+    out = []
+    for pool, new in ((k_pool, k_new), (v_pool, v_new)):
+        out.append(pool.at[page_idx, off].set(new.astype(pool.dtype), mode="drop"))
+    return out[0], out[1]
+
+
+def paged_cache_chunk_decode(
+    q: jnp.ndarray,  # [B, C, H, D] replicated over the axis
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    block_table: jnp.ndarray,  # [B, max_pages] int32
+    starts,  # int32 [B]
+    axis_name: Optional[str],
+    n: int,
+    *,
+    layout: str = "striped",
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    prune: bool = True,
+) -> jnp.ndarray:
+    """Paged chunk attention: gather the row's pages into the dense local view
+    and run the identical banded chunk partial (chunks are a prefill-side
+    path — the split-K decode kernel stays single-token)."""
+    i = lax.axis_index(axis_name) if axis_name is not None else 0
+    page_size, max_pages = k_pool.shape[1], block_table.shape[1]
+    m = max_pages * page_size
+    C = q.shape[1]
+    starts = jnp.asarray(starts, jnp.int32)
+    k_loc, v_loc = paged_cache_gather(k_pool, v_pool, block_table)
+    kv_off, stride_kv = _shard_geometry(i, n, m, layout)
+    hi = (window - 1) if window else BAND_INF
+
+    def run(_):
+        return _chunk_banded_partial(q, k_loc, v_loc, starts, kv_off, stride_kv, hi, scale)
+
+    win_eff = (window + C - 1) if window else None
+    o, lse = _maybe_pruned(run, q, starts + (C - 1), i, n, m, layout, win_eff, prune)
     return _psum_combine(o, lse, axis_name, q.dtype)
 
 

@@ -39,8 +39,12 @@ from repro.core import autotune
 from repro.core import schedule as S
 from repro.core.am import CommModel
 from repro.core.decode_attention import (
+    paged_cache_chunk_decode,
+    paged_cache_chunk_update,
     paged_cache_decode,
     paged_cache_update,
+    sharded_cache_chunk_decode,
+    sharded_cache_chunk_update,
     sharded_cache_decode,
     sharded_cache_update,
 )
@@ -62,6 +66,7 @@ __all__ = [
     "distributed_attention",
     "attention_in_shard_map",
     "decode_attention_step",
+    "chunk_attention_step",
     "latent_wire_attention",
     "plan_from_ctx",
     "plan_schedules",
@@ -728,6 +733,121 @@ def _decode_attention_step_paged(
         check_vma=False,
     )
     return f(q, k_new, v_new, k_pool, v_pool, pos, bt)
+
+
+def _chunk_step_local(
+    q, k_new, v_new, k_cache, v_cache, starts, lens, wstarts,
+    cfg: AttentionPlanConfig, bt=None,
+):
+    """One prefill chunk over the local cache slice (inside shard_map):
+    scatter the chunk's KV by absolute position, then prefix-causal chunk
+    attention over everything resident."""
+    if cfg.paged:
+        k_cache, v_cache = paged_cache_chunk_update(
+            k_cache, v_cache, k_new, v_new, bt, starts, lens, wstarts,
+            cfg.axis_name, cfg.n, layout=cfg.layout,
+        )
+        o = paged_cache_chunk_decode(
+            q, k_cache, v_cache, bt, starts, cfg.axis_name, cfg.n,
+            layout=cfg.layout, window=cfg.window, scale=cfg.scale,
+        )
+        return o, k_cache, v_cache
+    k_cache, v_cache = sharded_cache_chunk_update(
+        k_cache, v_cache, k_new, v_new, starts, lens, wstarts,
+        cfg.axis_name, cfg.n, layout=cfg.layout,
+    )
+    o = sharded_cache_chunk_decode(
+        q, k_cache, v_cache, starts, cfg.axis_name, cfg.n,
+        layout=cfg.layout, window=cfg.window, scale=cfg.scale,
+    )
+    return o, k_cache, v_cache
+
+
+def chunk_attention_step(
+    q,  # [B, C, H, D] chunk queries (pad rows beyond lens compute garbage)
+    k_new,  # [B, C, Hkv, D]
+    v_new,
+    k_cache,  # [B, cap(/n), Hkv, D] — or, paged: the pool
+    v_cache,
+    starts,  # int32 [B]: global position of each row's chunk base
+    lens,  # int32 [B]: valid tokens per row (0 = inactive row, nothing written)
+    write_starts,  # int32 [B]: skip KV writes below this position (shared prefix)
+    ctx,
+    *,
+    window: Optional[int] = None,
+    layout: str = "striped",
+    scale: Optional[float] = None,
+    block_table=None,  # int32 [B, max_pages]: switches to the paged cache
+):
+    """One continuous-prefill chunk: C tokens of row b land at global
+    positions ``starts[b] .. starts[b]+lens[b]-1`` and attend prefix-causally
+    to every resident position (row i sees <= starts[b]+i, within the
+    window).  Returns (o, new_k_cache, new_v_cache) exactly like
+    ``decode_attention_step`` — it is the same banded partial + lse psum with
+    a multi-row q, so chunked prefill reproduces one-shot prefill bit-for-bit
+    on the reference backend.  Chunks always run the band/gather path; the
+    split-K native kernel stays single-token."""
+    n = ctx.sp_size
+    starts = jnp.asarray(starts, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    write_starts = jnp.asarray(write_starts, jnp.int32)
+    if block_table is not None:
+        bt = jnp.asarray(block_table, jnp.int32)
+        if n == 1:
+            k_cache, v_cache = paged_cache_chunk_update(
+                k_cache, v_cache, k_new, v_new, bt, starts, lens, write_starts,
+                None, 1, layout=layout,
+            )
+            o = paged_cache_chunk_decode(
+                q, k_cache, v_cache, bt, starts, None, 1,
+                layout=layout, window=window, scale=scale,
+            )
+            return o, k_cache, v_cache
+        cfg = AttentionPlanConfig(
+            backend="decode", axis_name=ctx.sp_axis, n=n,
+            window=window, layout=layout, scale=scale, paged=True,
+        )
+        rep = P(None, None, None, None)
+        pool_spec = P(None, ctx.sp_axis, None, None)
+        f = shard_map(
+            lambda q, kn, vn, kp, vp, st, ln, ws, bt: _chunk_step_local(
+                q, kn, vn, kp, vp, st, ln, ws, cfg, bt=bt
+            ),
+            mesh=ctx.shard_map_mesh(),
+            in_specs=(rep, rep, rep, pool_spec, pool_spec,
+                      P(None), P(None), P(None), P(None, None)),
+            out_specs=(rep, pool_spec, pool_spec),
+            check_vma=False,
+        )
+        return f(q, k_new, v_new, k_cache, v_cache, starts, lens, write_starts, bt)
+    if n == 1:
+        k_cache, v_cache = sharded_cache_chunk_update(
+            k_cache, v_cache, k_new, v_new, starts, lens, write_starts,
+            None, 1, layout=layout,
+        )
+        o = sharded_cache_chunk_decode(
+            q, k_cache, v_cache, starts, None, 1,
+            layout=layout, window=window, scale=scale,
+        )
+        return o, k_cache, v_cache
+    cfg = AttentionPlanConfig(
+        backend="decode", axis_name=ctx.sp_axis, n=n,
+        window=window, layout=layout, scale=scale,
+    )
+    bs = ctx.eff_batch_spec(q.shape[0])
+    rep = P(bs, None, None, None)
+    cache_spec = P(bs, ctx.sp_axis, None, None)
+    vec = P(bs)
+    f = shard_map(
+        lambda q, kn, vn, kc, vc, st, ln, ws: _chunk_step_local(
+            q, kn, vn, kc, vc, st, ln, ws, cfg
+        ),
+        mesh=ctx.shard_map_mesh(),
+        in_specs=(rep, rep, rep, cache_spec, cache_spec, vec, vec, vec),
+        out_specs=(rep, cache_spec, cache_spec),
+        check_vma=False,
+    )
+    return f(q, k_new, v_new, k_cache, v_cache, starts, lens, write_starts)
 
 
 def latent_wire_attention(

@@ -10,7 +10,9 @@ batching over the slot-pool engine.
         [--fake-devices 8] [--trace 16:0,32:1,64:2,16:4] [--slots 4]
 
 ``--trace`` is a comma list of ``prompt_len[:arrival_tick]`` items; slots at
-different depths decode in a single jitted step per tick.
+different depths decode in a single jitted step per tick.  Add
+``--prefill-chunk 64 [--tick-token-budget 128]`` to ingest prompts through
+the continuous-prefill path, interleaved with decode.
 """
 
 import argparse
@@ -54,6 +56,12 @@ def main():
                     choices=("auto", "native", "gather"),
                     help="flash-decode variant: auto (paged -> split-K "
                          "native kernel), native, or the gather oracle")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="continuous prefill: ingest prompts in chunks of "
+                         "this many tokens, interleaved with decode")
+    ap.add_argument("--tick-token-budget", type=int, default=None,
+                    help="cap decode+prefill-chunk tokens per tick "
+                         "(requires --prefill-chunk)")
     args = ap.parse_args()
 
     if args.fake_devices:
@@ -68,6 +76,7 @@ def main():
     from repro.configs import get_config
     from repro.models import transformer as tfm
     from repro.parallel.context import ParallelCtx
+    from repro.serve.config import ServeConfig
     from repro.serve.engine import ServeEngine
 
     cfg = get_config(args.arch)
@@ -81,9 +90,13 @@ def main():
     else:
         ctx = ParallelCtx()
     params = tfm.init_params(cfg, jax.random.PRNGKey(0), ctx=ctx)
-    eng = ServeEngine(cfg, params, ctx=ctx, max_seq=args.max_seq, num_slots=args.slots,
-                      paged=args.paged, page_size=args.page_size,
-                      num_pages=args.num_pages, decode_kernel=args.decode_kernel)
+    serve = ServeConfig(
+        max_seq=args.max_seq, num_slots=args.slots, paged=args.paged,
+        page_size=args.page_size, num_pages=args.num_pages,
+        decode_kernel=args.decode_kernel, prefill_chunk=args.prefill_chunk,
+        tick_token_budget=args.tick_token_budget,
+    )
+    eng = ServeEngine(cfg, params, ctx=ctx, serve=serve)
     rng = np.random.default_rng(0)
 
     if args.stream:
@@ -106,6 +119,12 @@ def main():
             "prefill_traces": {str(k): v for k, v in eng.prefill_trace_counts.items()},
             "decode_traces": eng.decode_trace_count,
         }
+        if args.prefill_chunk:
+            stats = eng.tick_stats()
+            summary["chunk_traces"] = eng.chunk_trace_count
+            summary["chunk_launches"] = eng.chunk_launches
+            summary["prefill_tokens"] = int(sum(stats["prefill_tokens"]))
+            summary["decode_tokens"] = int(sum(stats["decode_tokens"]))
         if args.paged:
             summary["kv_cache"] = eng.kv_cache_stats()
         print(json.dumps(summary))

@@ -26,6 +26,7 @@ __all__ = [
     "cross_attention_block",
     "distributed_attention",
     "decode_attention_step",
+    "chunk_attention_step",
 ]
 
 
@@ -80,6 +81,30 @@ def decode_attention_step(
         q, k_new, v_new, k_cache, v_cache, pos, ctx,
         window=window, layout=layout, scale=scale, block_table=block_table,
         decode_kernel=decode_kernel,
+    )
+
+
+def chunk_attention_step(
+    q: jnp.ndarray,  # [B, C, H, D] chunk queries
+    k_new: jnp.ndarray,  # [B, C, Hkv, D]
+    v_new: jnp.ndarray,
+    k_cache: jnp.ndarray,  # [B, cap(/n), Hkv, D] (paged: the page pool)
+    v_cache: jnp.ndarray,
+    starts,  # int32 [B]: global position of each row's chunk base
+    lens,  # int32 [B]: valid tokens per row (0 = inactive row)
+    write_starts,  # int32 [B]: skip KV writes below this (shared prefix)
+    ctx: ParallelCtx,
+    *,
+    window: Optional[int] = None,
+    layout: str = "striped",
+    scale: Optional[float] = None,
+    block_table: Optional[jnp.ndarray] = None,  # [B, max_pages]: paged cache
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Continuous-prefill chunk append + prefix-causal attention; returns
+    (o, new_k_cache, new_v_cache) like ``decode_attention_step``."""
+    return dispatch.chunk_attention_step(
+        q, k_new, v_new, k_cache, v_cache, starts, lens, write_starts, ctx,
+        window=window, layout=layout, scale=scale, block_table=block_table,
     )
 
 

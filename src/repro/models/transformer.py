@@ -42,6 +42,7 @@ __all__ = [
     "init_cache",
     "prefill",
     "prefill_packed",
+    "prefill_chunk",
     "decode_step",
     "param_count",
 ]
@@ -298,16 +299,23 @@ def init_cache(cfg: ModelConfig, batch: int, cap: int, dtype=jnp.bfloat16, ctx=N
 
 
 def _decode_qkv(h, lp, cfg: ModelConfig, pos):
-    """Single-token projections in cache space. h [B,1,D] ->
-    (q [B,1,Hq,dk], k_new [B,1,hkv,dk], v_new [B,1,hkv,dv], scale)."""
-    B = h.shape[0]
+    """Cache-space projections for decode / chunk append. h [B,S,D] ->
+    (q [B,S,Hq,dk], k_new [B,S,hkv,dk], v_new [B,S,hkv,dv], scale).
+    ``pos`` is a scalar, a [B] per-slot vector (S=1 decode), or a full [B,S]
+    position grid (continuous-prefill chunks)."""
+    B, S = h.shape[0], h.shape[1]
     pos = jnp.asarray(pos, jnp.int32)
-    positions = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
+    if pos.ndim == 2:
+        positions = pos  # [B, S] chunk grid
+    elif pos.ndim == 1:
+        positions = pos[:, None]
+    else:
+        positions = jnp.full((1,), pos, jnp.int32)
     if cfg.mla is not None:
         m = cfg.mla
         qk = m.qk_nope_head_dim + m.qk_rope_head_dim
         cq = rms_norm(h @ lp["wq_a"], lp["q_ln"])
-        q = (cq @ lp["wq_b"]).reshape(B, 1, cfg.num_heads, qk)
+        q = (cq @ lp["wq_b"]).reshape(B, S, cfg.num_heads, qk)
         q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
         q_rope = rope(q_rope, positions, cfg.rope_theta)
         kv_a = h @ lp["wkv_a"]
@@ -317,7 +325,7 @@ def _decode_qkv(h, lp, cfg: ModelConfig, pos):
         wb = lp["wkv_b"].reshape(m.kv_lora_rank, cfg.num_heads, -1)
         wb_k = wb[..., : m.qk_nope_head_dim]
         q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wb_k)
-        q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)  # [B,1,H,kvr+rope]
+        q_eff = jnp.concatenate([q_lat, q_rope], axis=-1)  # [B,S,H,kvr+rope]
         kv_new = jnp.concatenate([c_kv[:, :, None, :], k_rope], axis=-1)  # latent "K"
         scale = qk**-0.5
         return q_eff, kv_new, kv_new, scale
@@ -327,22 +335,22 @@ def _decode_qkv(h, lp, cfg: ModelConfig, pos):
     v = h @ lp["wv"]
     if cfg.qkv_bias:
         q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
-    q = rope(q.reshape(B, 1, cfg.num_heads, hd), positions, cfg.rope_theta)
-    k = rope(k.reshape(B, 1, cfg.num_kv_heads, hd), positions, cfg.rope_theta)
-    v = v.reshape(B, 1, cfg.num_kv_heads, hd)
+    q = rope(q.reshape(B, S, cfg.num_heads, hd), positions, cfg.rope_theta)
+    k = rope(k.reshape(B, S, cfg.num_kv_heads, hd), positions, cfg.rope_theta)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
     return q, k, v, hd**-0.5
 
 
 def _decode_attn_out(o, h_in, lp, cfg: ModelConfig):
-    B = o.shape[0]
+    B, S = o.shape[0], o.shape[1]
     if cfg.mla is not None:
         m = cfg.mla
         o_lat = o[..., : m.kv_lora_rank]  # latent-space values
         wb = lp["wkv_b"].reshape(m.kv_lora_rank, cfg.num_heads, -1)
         wb_v = wb[..., m.qk_nope_head_dim :]
         ov = jnp.einsum("bshr,rhv->bshv", o_lat, wb_v)
-        return h_in + ov.reshape(B, 1, -1) @ lp["wo"]
-    return h_in + o.reshape(B, 1, -1) @ lp["wo"]
+        return h_in + ov.reshape(B, S, -1) @ lp["wo"]
+    return h_in + o.reshape(B, S, -1) @ lp["wo"]
 
 
 def _decode_block(x, lp, cache_l, cfg: ModelConfig, ctx: ParallelCtx, pos, bt=None):
@@ -424,6 +432,84 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, ctx: ParallelCtx):
     if bt is not None:
         new_cache["bt"] = bt
     return nxt, new_cache, logits
+
+
+def prefill_chunk(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
+    """Continuous prefill: append one C-token chunk per slot into the live
+    cache and run prefix-causal attention over everything resident.
+
+    ``batch`` carries fixed-shape [B(=num_slots), C] operands so ONE jitted
+    trace serves every tick:
+
+      * ``tokens``  [B, C] int32 — chunk tokens, right-padded per row
+      * ``starts``  [B] int32 — absolute position of each row's chunk base
+      * ``lens``    [B] int32 — valid tokens per row (0 = inactive row:
+        nothing is written and the row's output is garbage to be ignored)
+      * ``write_starts`` [B] int32 — skip KV writes below this absolute
+        position (a shared prefix already resident in the paged pool)
+      * ``pos_set`` [B] int32 — new ``cache["pos"]`` per row, or -1 to keep
+        the current value (mid-prefill rows stay parked past capacity so the
+        shared decode step's writes keep dropping)
+
+    Returns (logits [B, V] at each row's LAST valid chunk token, new cache).
+    The logits row is only meaningful for rows whose final chunk this is —
+    the engine samples the first generated token from it that same tick, so
+    a chunked request's first token lands on exactly the tick its one-shot
+    twin would have produced it.  Token-for-token equivalence with one-shot
+    ``prefill`` holds because the chunk path runs the SAME banded kernel,
+    stripe math, and lse-psum combine (bitwise on the reference backend).
+
+    Works on the dense sharded cache and the paged pool (``cache["bt"]``);
+    attention-only decoder archs (no SSM state, no cross-attention, no
+    frontend) — the same restriction packed/paged prefill already has.
+    """
+    if cfg.ssm is not None or cfg.encoder_layers or cfg.frontend is not None:
+        raise ValueError("chunked prefill serves attention-only decoder archs")
+    tokens = batch["tokens"]
+    starts = jnp.asarray(batch["starts"], jnp.int32)
+    lens = jnp.asarray(batch["lens"], jnp.int32)
+    write_starts = jnp.asarray(batch["write_starts"], jnp.int32)
+    pos_set = jnp.asarray(batch["pos_set"], jnp.int32)
+    B, C = tokens.shape
+    positions = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    bt = cache.get("bt")  # paged K/V: block table, shared by every layer
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = ctx.constrain(x, None, None)
+    layer_cache = {k: v for k, v in cache.items() if k not in ("pos", "bt")}
+
+    def body(x, inp):
+        lp, cl = inp
+        new_cl = dict(cl)
+        h = rms_norm(x, lp["attn"]["ln"]) if cfg.norm == "rmsnorm" else layer_norm(
+            x, lp["attn"]["ln"], lp["attn"]["ln_b"]
+        )
+        q, k_new, v_new, scale = _decode_qkv(h, lp["attn"], cfg, positions)
+        # the decode cache is ALWAYS striped; chunk rows scatter straight to
+        # their owner shards exactly like single-token appends
+        o, ck, cv = attn.chunk_attention_step(
+            q, k_new, v_new, cl["k"], cl["v"], starts, lens, write_starts, ctx,
+            window=cfg.window, layout="striped", scale=scale, block_table=bt,
+        )
+        new_cl["k"], new_cl["v"] = ck, cv
+        y = _decode_attn_out(o, x, lp["attn"], cfg)
+        if cfg.moe is not None:
+            y, _ = moe_mod.moe_block(y, lp["moe"], cfg, ctx)
+        elif cfg.d_ff > 0:
+            y = mlp_block(y, lp["mlp"], cfg, ctx)
+        return y, new_cl
+
+    x, new_layer_cache = _stack_scan(body, x, (params["layers"], layer_cache), ctx)
+    x = _final_norm(x, params, cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    last = jnp.clip(lens - 1, 0, C - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)  # [B, 1, D]
+    logits = x_last[:, 0] @ head.astype(x.dtype)  # [B, V]
+    new_cache = dict(cache)
+    new_cache.update(new_layer_cache)
+    new_cache["pos"] = jnp.where(pos_set >= 0, pos_set, cache["pos"])
+    if bt is not None:
+        new_cache["bt"] = bt
+    return logits, new_cache
 
 
 def _cache_scatter_indices(cfg: ModelConfig, S: int, cap: int, n: int):

@@ -1,0 +1,115 @@
+"""ServeConfig: one frozen object for every serving knob.
+
+``ServeEngine`` grew its knobs one PR at a time — bucketed prefill, packing,
+the paged pool, the native decode kernel — until the constructor carried a
+dozen loose kwargs that ``launch/serve.py``, ``serve_bench`` and every test
+had to thread through individually.  This module is the redesigned surface:
+
+    eng = ServeEngine(cfg, params, ctx=ctx, serve=ServeConfig(
+        max_seq=256, num_slots=4, paged=True, prefill_chunk=64,
+        tick_token_budget=128,
+    ))
+
+All validation lives in ``ServeConfig.__post_init__`` so a bad combination
+fails at construction, not three layers down at trace time.  The legacy
+``ServeEngine(cfg, params, ctx, max_seq=..., paged=...)`` kwarg form still
+works through a deprecation shim (one ``DeprecationWarning``, pinned by
+test) that maps the old names 1:1 onto this dataclass.
+
+The two fields new in this PR drive continuous prefill:
+
+* ``prefill_chunk`` — split every admitted prompt into chunks of this many
+  tokens and append them through the live-cache chunk path, interleaved
+  with decode ticks.  ``None`` (default) keeps the one-shot bucketed
+  prefill.  Unlike ``prefill_buckets``, the chunk size has NO divisibility
+  constraint with the mesh: chunks scatter by absolute position.
+* ``tick_token_budget`` — cap on (decode tokens + prefill-chunk tokens) per
+  tick.  Each tick spends one token per decodable slot first, then grants
+  prefill chunks (oldest request first) until the budget is exhausted; the
+  head-of-line chunk is always granted so prefill cannot starve.  This is
+  the TTFT / inter-token-latency bound: no tick's launch size scales with
+  the longest pending prompt, only with the budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["ServeConfig"]
+
+_DECODE_KERNELS = ("auto", "native", "gather", "band")
+_PACK_PLANS = ("greedy", "binpack")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Every serving knob in one validated, hashable place."""
+
+    max_seq: int = 256  # per-request cap: len(prompt) + max_new_tokens
+    num_slots: int = 4  # concurrent requests (cache batch rows)
+    cache_dtype: Any = jnp.float32  # KV cache dtype
+    prefill_buckets: Optional[Tuple[int, ...]] = None  # one-shot prefill sizes
+    eos_id: Optional[int] = None  # early-stop token
+    pack_prefill: bool = True  # pack same-tick prompts into one row
+    pack_max: int = 4  # max prompts per packed row
+    pack_plan: str = "binpack"  # greedy | binpack (FFD by marginal cost)
+    paged: bool = False  # paged KV pool + prefix sharing
+    page_size: Optional[int] = None  # per-shard tokens per page (paged)
+    num_pages: Optional[int] = None  # physical pool size (paged)
+    decode_kernel: str = "auto"  # auto | native | gather | band
+    prefill_chunk: Optional[int] = None  # continuous prefill: chunk size
+    tick_token_budget: Optional[int] = None  # cap decode+chunk tokens per tick
+
+    def __post_init__(self):
+        if self.max_seq < 1:
+            raise ValueError(f"max_seq must be >= 1, got {self.max_seq}")
+        if self.num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {self.num_slots}")
+        if self.pack_max < 1:
+            raise ValueError(f"pack_max must be >= 1, got {self.pack_max}")
+        if self.pack_plan not in _PACK_PLANS:
+            raise ValueError(
+                f"pack_plan must be one of {_PACK_PLANS}, got {self.pack_plan!r}"
+            )
+        if self.decode_kernel not in _DECODE_KERNELS:
+            raise ValueError(
+                f"decode_kernel must be one of {_DECODE_KERNELS}, "
+                f"got {self.decode_kernel!r}"
+            )
+        if self.prefill_buckets is not None:
+            buckets = tuple(int(b) for b in self.prefill_buckets)
+            if not buckets or any(b < 1 for b in buckets):
+                raise ValueError(f"prefill_buckets must be positive, got {buckets}")
+            object.__setattr__(self, "prefill_buckets", buckets)
+        if not self.paged and (self.page_size is not None or self.num_pages is not None):
+            raise ValueError("page_size/num_pages require paged=True")
+        if self.page_size is not None and self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.num_pages is not None and self.num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {self.num_pages}")
+        if self.prefill_chunk is not None and self.prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
+        if self.tick_token_budget is not None:
+            if self.prefill_chunk is None:
+                raise ValueError(
+                    "tick_token_budget only budgets continuous prefill; "
+                    "set prefill_chunk as well"
+                )
+            if self.tick_token_budget < 1:
+                raise ValueError(
+                    f"tick_token_budget must be >= 1, got {self.tick_token_budget}"
+                )
+
+    @classmethod
+    def from_legacy_kwargs(cls, kwargs: dict) -> "ServeConfig":
+        """Map the pre-redesign ``ServeEngine(**kwargs)`` names (identical
+        1:1) onto a validated config; unknown names raise ``TypeError`` like
+        the old constructor did."""
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(kwargs) - names)
+        if unknown:
+            raise TypeError(f"unknown ServeEngine kwargs: {unknown}")
+        return cls(**kwargs)

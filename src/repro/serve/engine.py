@@ -6,7 +6,12 @@ construction.  Requests flow through ``serve/scheduler.py``:
   * **prefill**: an admitted request is right-padded to a bucket length and
     prefilled alone (batch=1) through a per-bucket jitted function that
     scatters the resulting cache row into its assigned slot — jit retraces
-    are bounded by the number of buckets, not by batch composition.
+    are bounded by the number of buckets, not by batch composition.  With
+    ``ServeConfig.prefill_chunk`` set, prompts instead stream into their
+    slot in fixed-size chunks interleaved with decode (continuous prefill):
+    one fixed-shape jitted chunk launch per tick, budgeted by
+    ``ServeConfig.tick_token_budget``, so no tick scales with the longest
+    pending prompt.
   * **decode**: ONE jitted step advances every slot per tick.  The cache
     carries a per-slot position vector ``pos: [B]`` (threaded through
     ``core/decode_attention.py``), so slots at arbitrary mixed depths decode
@@ -21,7 +26,8 @@ documented exception: expert capacity couples rows by construction).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import warnings
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,18 +39,39 @@ from repro.core import dispatch
 from repro.core.am import CommModel
 from repro.models import transformer as tfm
 from repro.parallel.context import ParallelCtx
+from repro.serve.config import ServeConfig
 from repro.serve.kv_pool import PageAllocator, PagedLayout
-from repro.serve.scheduler import Request, Scheduler, default_buckets
+from repro.serve.scheduler import Request, RequestResult, Scheduler, default_buckets
 
 __all__ = ["ServeEngine"]
+
+# mid-prefill slots park their cache position past any capacity: the shared
+# decode step still ticks their row, but every write guard (pos < n*m) drops
+# the append, so a half-ingested prompt can never be corrupted by decode
+_PARKED = 2**30
 
 
 class ServeEngine:
     """Slot-based continuous-batching engine.
 
+    All knobs arrive as ONE validated object: ``ServeEngine(cfg, params,
+    ctx=ctx, serve=ServeConfig(...))``.  The pre-redesign kwarg form
+    (``ServeEngine(cfg, params, ctx, max_seq=..., paged=...)``) still works
+    through a deprecation shim that maps the old names onto ``ServeConfig``.
+
     ``generate(prompts, max_new_tokens)`` keeps the legacy static-batch API
     (greedy, exactly max_new_tokens per row) on top of the streaming path:
-    ``submit()`` requests, ``step()`` ticks, ``run()`` to drain.
+    ``submit()`` requests, ``step()`` ticks, ``run()`` to drain — the
+    streaming calls return ``RequestResult`` (tokens + per-token tick
+    stamps + TTFT + chunk count).
+
+    With ``serve.prefill_chunk`` set the engine runs CONTINUOUS PREFILL:
+    admitted prompts stream into their slot ``prefill_chunk`` tokens per
+    tick (budgeted by ``serve.tick_token_budget``), interleaved with the
+    decode batch, instead of monopolizing a tick with one bucket-sized
+    launch.  A request starts decoding on the same tick its last chunk
+    lands, so chunked serving is token-for-token AND tick-for-tick
+    identical to one-shot prefill — only launch sizes change.
     """
 
     def __init__(
@@ -53,65 +80,91 @@ class ServeEngine:
         params,
         ctx: Optional[ParallelCtx] = None,
         *,
-        max_seq: int = 256,
-        cache_dtype=jnp.float32,
-        num_slots: int = 4,
-        prefill_buckets: Optional[Sequence[int]] = None,
-        eos_id: Optional[int] = None,
-        pack_prefill: bool = True,
-        pack_max: int = 4,
-        pack_plan: str = "binpack",
-        paged: bool = False,
-        page_size: Optional[int] = None,
-        num_pages: Optional[int] = None,
-        decode_kernel: str = "auto",
+        serve: Optional[ServeConfig] = None,
+        **legacy,
     ):
+        if serve is not None and legacy:
+            raise TypeError(
+                f"pass serve=ServeConfig(...) or legacy kwargs, not both "
+                f"(got both serve= and {sorted(legacy)})"
+            )
+        if serve is None:
+            if legacy:
+                warnings.warn(
+                    "ServeEngine(cfg, params, ctx, max_seq=..., ...) is "
+                    "deprecated; pass serve=ServeConfig(...) instead",
+                    DeprecationWarning,
+                    stacklevel=2,
+                )
+            serve = ServeConfig.from_legacy_kwargs(legacy)
+        self.serve = serve
         self.cfg = cfg
         self.ctx = ctx or ParallelCtx()
         # flash-decode kernel variant: "auto" serves the paged cache with the
         # split-K native kernel (block table read in-kernel) wherever Pallas
         # runs, the gather/band reference elsewhere; "native"/"gather" force
-        if decode_kernel != "auto":
-            self.ctx = dataclasses.replace(self.ctx, decode_kernel=decode_kernel)
+        if serve.decode_kernel != "auto":
+            self.ctx = dataclasses.replace(self.ctx, decode_kernel=serve.decode_kernel)
         self.params = params
-        self.max_seq = max_seq
-        self.cache_dtype = cache_dtype
-        self.num_slots = num_slots
-        self.eos_id = eos_id
-        self.pack_plan = pack_plan
+        self.max_seq = serve.max_seq
+        self.cache_dtype = serve.cache_dtype
+        self.num_slots = serve.num_slots
+        self.eos_id = serve.eos_id
+        self.pack_plan = serve.pack_plan
         n = self.ctx.sp_size
-        if max_seq % max(n, 1):
-            raise ValueError(f"max_seq={max_seq} must be divisible by sp_size={n}")
+        if serve.max_seq % max(n, 1):
+            raise ValueError(
+                f"max_seq={serve.max_seq} must be divisible by sp_size={n}"
+            )
+        # continuous prefill: chunk size + per-tick token budget (None/None =
+        # legacy one-shot bucketed prefill).  Chunks scatter by absolute
+        # position, so unlike buckets they need no divisibility with n.
+        self.prefill_chunk = serve.prefill_chunk
+        self.tick_token_budget = serve.tick_token_budget
+        if self.prefill_chunk is not None and (
+            cfg.ssm is not None or cfg.encoder_layers or cfg.frontend is not None
+        ):
+            raise ValueError(
+                "continuous prefill serves attention-only decoder archs "
+                "(SSM state / encoder / frontend inputs have no chunk-append)"
+            )
         # paged KV: slot rows virtualize over a refcounted physical page pool
         # (serve/kv_pool.py) — memory follows allocated pages, and identical
         # prompt prefixes share pages across requests
-        self.paged = paged
+        self.paged = serve.paged
         self.allocator: Optional[PageAllocator] = None
-        if paged:
+        if serve.paged:
             if cfg.ssm is not None or cfg.encoder_layers:
                 raise ValueError(
                     "the paged KV cache serves attention-only decoder archs "
                     "(SSM state / encoder cross-K/V have no page structure)"
                 )
             layout = PagedLayout.for_engine(
-                max_seq, max(n, 1), num_slots, page_size=page_size, num_pages=num_pages
+                serve.max_seq, max(n, 1), serve.num_slots,
+                page_size=serve.page_size, num_pages=serve.num_pages,
             )
             self.allocator = PageAllocator(layout)
         # SSD's recurrent state has no pad-correction: prefill exactly
         exact = cfg.ssm is not None
-        buckets = tuple(prefill_buckets) if prefill_buckets else default_buckets(max_seq, n)
+        buckets = (
+            tuple(serve.prefill_buckets)
+            if serve.prefill_buckets
+            else default_buckets(serve.max_seq, n)
+        )
         if any(b % max(n, 1) for b in buckets) and not exact:
             raise ValueError(f"buckets {buckets} must be multiples of sp_size={n}")
         self.scheduler = Scheduler(
-            num_slots, buckets, max_seq, exact=exact, multiple=n,
+            self.num_slots, buckets, self.max_seq, exact=exact, multiple=n,
             chunk=cfg.ssm.chunk if exact else None, allocator=self.allocator,
+            prefill_chunk=self.prefill_chunk,
+            tick_token_budget=self.tick_token_budget,
         )
         # packed prefill: several same-tick admissions share one row under a
         # document mask (attention-only decoder archs; SSD state and per-row
         # frontend/encoder side inputs do not pack)
-        self.pack_max = max(1, pack_max)
+        self.pack_max = max(1, serve.pack_max)
         self._can_pack = (
-            pack_prefill
+            serve.pack_prefill
             and cfg.ssm is None
             and not cfg.encoder_layers
             and cfg.frontend is None
@@ -124,33 +177,58 @@ class ServeEngine:
         # THE cache: allocated once here, threaded through prefill inserts
         # and decode steps for the engine's whole lifetime
         self._cache = tfm.init_cache(
-            cfg, num_slots, max_seq, dtype=cache_dtype, ctx=self.ctx,
+            cfg, self.num_slots, self.max_seq, dtype=self.cache_dtype, ctx=self.ctx,
             paged=self.allocator.layout if self.allocator else None,
         )
-        self._cur = np.zeros((num_slots, 1), np.int32)  # last token per slot
-        self._depth = np.zeros((num_slots,), np.int64)  # host view of pos
+        self._cur = np.zeros((self.num_slots, 1), np.int32)  # last token per slot
+        self._depth = np.zeros((self.num_slots,), np.int64)  # host view of pos
+        self._shared_len = np.zeros((self.num_slots,), np.int64)  # paged prefix
         self._bt_version = -1  # device block table staleness marker
         self.bt_uploads = 0  # device block-table uploads (version-gated:
         # ticks whose appends stay inside a page re-upload nothing)
         self._tick = 0
-        self._finished: Dict[int, Request] = {}
+        self._finished: Dict[int, RequestResult] = {}
         # jit bookkeeping: trace counters tick at TRACE time only, so tests
         # can assert the retrace count is bounded by the bucket set
         self._prefill_fns: Dict[int, object] = {}
         self.prefill_trace_counts: Dict[int, int] = {}
         self.decode_trace_count = 0
+        self.chunk_trace_count = 0
         # launch accounting (every call, not just traces): the pack planner's
         # padded-prefill cost is launches x bucket tokens
         self.prefill_launches = 0
         self.prefill_launch_tokens = 0
+        self.chunk_launches = 0
+        self.chunk_launch_tokens = 0
+        # per-tick token series: PROMPT tokens ingested vs tokens GENERATED
+        # (kept separate so a prefill-heavy tick cannot inflate decode
+        # tokens/s — serve_bench reports both)
+        self.tick_prefill_tokens: List[int] = []
+        self.tick_decode_tokens: List[int] = []
         self._decode = jax.jit(self._decode_traced)
         self._copy_pages = jax.jit(self._copy_pages_traced)
+        self._chunk_step = jax.jit(self._chunk_traced)
 
     # -- jitted paths -------------------------------------------------------
 
     def _decode_traced(self, params, cache, tokens):
         self.decode_trace_count += 1  # python side effect: trace-time only
         return tfm.decode_step(params, cache, tokens, self.cfg, self.ctx)
+
+    def _chunk_traced(self, params, cache, tokens, starts, lens, wstarts, pos_set):
+        """Continuous prefill: append one [num_slots, prefill_chunk] chunk
+        batch into the live cache — fixed operand shapes, so ONE trace serves
+        every tick regardless of which slots have chunk work."""
+        self.chunk_trace_count += 1  # python side effect: trace-time only
+        batch = {
+            "tokens": tokens,
+            "starts": starts,
+            "lens": lens,
+            "write_starts": wstarts,
+            "pos_set": pos_set,
+        }
+        logits, cache = tfm.prefill_chunk(params, self.cfg, self.ctx, batch, cache)
+        return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B]
 
     def _copy_pages_traced(self, cache, src, dst):
         """Copy-on-write: physical page src[i] -> dst[i] in every layer's
@@ -331,14 +409,15 @@ class ServeEngine:
     def has_work(self) -> bool:
         return self.scheduler.has_work
 
-    def _finish(self, slot: int) -> Request:
+    def _finish(self, slot: int) -> RequestResult:
         req = self.scheduler.retire(slot, self._tick)
         if self.allocator is not None:
             # drop the slot's page references; pages shared with live slots
             # survive until their last reader retires
             self.allocator.free_slot(slot)
-        self._finished[req.rid] = req
-        return req
+        result = RequestResult.from_request(req)
+        self._finished[req.rid] = result
+        return result
 
     def _req_done(self, req: Request, tok: int) -> bool:
         if self.eos_id is not None and tok == self.eos_id:
@@ -351,6 +430,30 @@ class ServeEngine:
         the shared-prefix length the scatter must skip."""
         alloc = self.allocator.alloc_slot(slot, req.prompt, req.max_new_tokens)
         return alloc.shared_len
+
+    def _resident_shared_len(self, slot: int, shared: int) -> int:
+        """Shared-prefix tokens whose CONTENT is already resident.
+
+        Continuous prefill admits a sharer while its prefix donor may still
+        be mid-chunk-ingestion: the shared pages are booked but their data
+        hasn't been written, and a chunk that attended them would bake zeros
+        into its deeper-layer KV writes.  Cap the credit at every
+        mid-prefill donor's written watermark (page-aligned); the sharer
+        recomputes and rewrites the rest of the prefix itself — identical
+        values into the same physical pages, so the donor's own later
+        writes are idempotent.  One-shot mode never needs this: a donor's
+        full prefill launch always precedes a later sharer's admission."""
+        lay = self.allocator.layout
+        mine = {
+            int(p) for p in self.allocator.block_table[slot, : lay.pages_for(shared)]
+        }
+        for s2, r2 in enumerate(self.scheduler.slots):
+            if s2 == slot or r2 is None or r2.prefill_pos >= len(r2.prompt):
+                continue
+            theirs = self.allocator.block_table[s2, : lay.pages_for(len(r2.prompt))]
+            if mine & {int(p) for p in theirs}:
+                shared = min(shared, (r2.prefill_pos // lay.chunk) * lay.chunk)
+        return shared
 
     def _prefill_single(self, slot: int, req: Request) -> int:
         """Legacy one-row-per-request prefill (exact/frontend archs)."""
@@ -404,38 +507,134 @@ class ServeEngine:
             self._depth[slot] = ln
         return [int(t) for t in np.asarray(firsts)]
 
-    def step(self) -> List[Request]:
-        """One engine tick: admit+prefill into free slots (same-tick
-        admissions PACK into shared rows under a document mask), then one
-        jitted decode over ALL slots.  Returns requests finished this tick."""
-        finished: List[Request] = []
-        # 1. admission: bucketed (packed) prefill straight into slot rows
+    def _record_first_token(self, slot: int, req: Request, tok: int, finished) -> None:
+        """First generated token (from prefill logits, one-shot or final
+        chunk): same-tick bookkeeping shared by both ingestion modes."""
+        req.generated.append(tok)
+        req.token_ticks.append(self._tick)
+        req.first_token_tick = self._tick
+        self._cur[slot, 0] = tok
+        if self._req_done(req, tok):
+            finished.append(self._finish(slot))
+
+    def _run_chunks(self, plan, finished) -> int:
+        """Launch this tick's chunk plan as ONE fixed-shape [num_slots, C]
+        jitted call; rows without work carry lens=0 (nothing written).  Rows
+        whose LAST chunk this is get their cache position un-parked to the
+        prompt length and sample their first token from the returned logits —
+        the same tick a one-shot prefill would have.  Returns prompt tokens
+        ingested."""
+        C = self.prefill_chunk
+        B = self.num_slots
+        tokens = np.zeros((B, C), np.int32)
+        starts = np.zeros((B,), np.int32)
+        lens = np.zeros((B,), np.int32)
+        wstarts = np.zeros((B,), np.int32)
+        pos_set = np.full((B,), -1, np.int32)
+        finishing = []
+        total = 0
+        for slot, req, start, take in plan:
+            tokens[slot, :take] = req.prompt[start : start + take]
+            starts[slot] = start
+            lens[slot] = take
+            wstarts[slot] = self._shared_len[slot]  # skip resident shared prefix
+            if req.first_chunk_tick is None:
+                req.first_chunk_tick = self._tick
+            req.prefill_pos = start + take
+            req.chunks += 1
+            total += take
+            if req.prefill_pos >= len(req.prompt):
+                pos_set[slot] = len(req.prompt)
+                finishing.append((slot, req))
+        self.chunk_launches += 1
+        self.chunk_launch_tokens += B * C  # device tokens (incl. pad rows)
+        self._sync_block_table()  # paged: admission allocated this plan's pages
+        self._cache, first = self._chunk_step(
+            self.params, self._cache, jnp.asarray(tokens), jnp.asarray(starts),
+            jnp.asarray(lens), jnp.asarray(wstarts), jnp.asarray(pos_set),
+        )
+        first_np = np.asarray(first)
+        for slot, req in finishing:
+            self._depth[slot] = len(req.prompt)
+            self._record_first_token(slot, req, int(first_np[slot]), finished)
+        return total, len(finishing)
+
+    def step(self) -> List[RequestResult]:
+        """One engine tick: admission, prompt ingestion, then one jitted
+        decode over every decodable slot.  Returns requests finished this
+        tick (as ``RequestResult``).
+
+        Legacy mode ingests each admission in ONE bucketed prefill launch
+        (same-tick admissions PACK into shared rows under a document mask).
+        Continuous mode (``serve.prefill_chunk``) parks newly admitted slots
+        past cache capacity and streams their prompt in ``prefill_chunk``-
+        token chunks under ``serve.tick_token_budget``; a slot joins the
+        decode batch the same tick its last chunk lands."""
+        finished: List[RequestResult] = []
+        prefill_tokens = 0
+        decode_tokens = 0
+        # 1. admission + prompt ingestion
         assigned = self.scheduler.admit(self._tick)
-        if self._can_pack:
-            groups = self.scheduler.pack_groups(
-                assigned, pack_max=self.pack_max, plan=self.pack_plan
-            )
+        if self.prefill_chunk is not None:
+            for slot, req in assigned:
+                shared = self._alloc_pages(slot, req) if self.paged else 0
+                if shared:
+                    shared = self._resident_shared_len(slot, shared)
+                self._shared_len[slot] = shared
+                # fully-shared chunks never launch, but the LAST prompt token
+                # always runs forward — its logits seed the first decode
+                req.prefill_pos = min(shared, len(req.prompt) - 1)
+            if assigned:
+                # park mid-prefill rows so the shared decode's writes drop
+                idx = jnp.asarray([slot for slot, _ in assigned], jnp.int32)
+                self._cache = dict(self._cache)
+                self._cache["pos"] = self._cache["pos"].at[idx].set(_PARKED)
+            decodable = [
+                s
+                for s in self.scheduler.active_slots()
+                if self.scheduler.slots[s].prefill_pos
+                >= len(self.scheduler.slots[s].prompt)
+            ]
+            plan = self.scheduler.plan_chunks(len(decodable))
+            if plan:
+                ingested, n_first = self._run_chunks(plan, finished)
+                prefill_tokens += ingested
+                decode_tokens += n_first  # first tokens off final-chunk logits
+                # final chunks join the decode batch this same tick
+                decodable = [
+                    s
+                    for s in self.scheduler.active_slots()
+                    if self.scheduler.slots[s].prefill_pos
+                    >= len(self.scheduler.slots[s].prompt)
+                ]
         else:
-            groups = [[x] for x in assigned]
-        for group in groups:
             if self._can_pack:
-                firsts = self._prefill_group(group)
+                groups = self.scheduler.pack_groups(
+                    assigned, pack_max=self.pack_max, plan=self.pack_plan
+                )
             else:
-                firsts = [self._prefill_single(slot, req) for slot, req in group]
-            for tok, (slot, req) in zip(firsts, group):
-                req.generated.append(tok)
-                req.first_token_tick = self._tick
-                self._cur[slot, 0] = tok
-                if self._req_done(req, tok):
-                    finished.append(self._finish(slot))
-        # 2. one decode step over every slot (mixed depths via pos: [B])
-        active = self.scheduler.active_slots()
-        if active:
+                groups = [[x] for x in assigned]
+            for group in groups:
+                if self._can_pack:
+                    firsts = self._prefill_group(group)
+                else:
+                    firsts = [self._prefill_single(slot, req) for slot, req in group]
+                for tok, (slot, req) in zip(firsts, group):
+                    req.prefill_pos = len(req.prompt)
+                    req.chunks = 1
+                    req.first_chunk_tick = self._tick
+                    prefill_tokens += len(req.prompt)
+                    decode_tokens += 1  # first token off the prefill logits
+                    self._record_first_token(slot, req, tok, finished)
+            decodable = self.scheduler.active_slots()
+        # 2. one decode step over every decodable slot (mixed depths via
+        # pos: [B]; mid-prefill rows ride along parked, writes dropped)
+        if decodable:
             if self.paged:
-                # make every active slot's write position appendable: allocate
-                # tail pages on chunk boundaries, copy-on-write shared tails
+                # make every decodable slot's write position appendable:
+                # allocate tail pages on chunk boundaries, CoW shared tails
                 copies = []
-                for slot in active:
+                for slot in decodable:
                     cp = self.allocator.ensure_append(slot, int(self._depth[slot]))
                     if cp is not None:
                         copies.append(cp)
@@ -453,22 +652,36 @@ class ServeEngine:
                 self.params, self._cache, jnp.asarray(self._cur)
             )
             nxt_np = np.asarray(nxt)
-            for slot in active:
+            for slot in decodable:
                 self._depth[slot] += 1
                 req = self.scheduler.slots[slot]
                 tok = int(nxt_np[slot, 0])
                 req.generated.append(tok)
+                req.token_ticks.append(self._tick)
+                decode_tokens += 1
                 self._cur[slot, 0] = tok
                 if self._req_done(req, tok):
                     finished.append(self._finish(slot))
+        self.tick_prefill_tokens.append(prefill_tokens)
+        self.tick_decode_tokens.append(decode_tokens)
         self._tick += 1
         return finished
 
-    def run(self) -> Dict[int, Request]:
-        """Drain the queue; returns {rid: finished Request}."""
+    def run(self) -> Dict[int, RequestResult]:
+        """Drain the queue; returns {rid: RequestResult}."""
         while self.has_work:
             self.step()
         return dict(self._finished)
+
+    def tick_stats(self) -> Dict[str, object]:
+        """Per-tick token series: prompt tokens ingested (one-shot prefill or
+        chunk launches) vs tokens generated, kept separate so prefill ticks
+        cannot inflate decode tokens/s."""
+        return {
+            "ticks": self._tick,
+            "prefill_tokens": list(self.tick_prefill_tokens),
+            "decode_tokens": list(self.tick_decode_tokens),
+        }
 
     def kv_cache_stats(self) -> Dict[str, float]:
         """Attention-cache memory accounting (bench / capacity planning).

@@ -21,7 +21,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["Request", "Scheduler", "default_buckets"]
+__all__ = ["Request", "RequestResult", "Scheduler", "default_buckets"]
 
 
 def default_buckets(max_seq: int, n: int = 1, lo: int = 16) -> Tuple[int, ...]:
@@ -48,14 +48,78 @@ class Request:
     arrival_tick: int = 0
     # filled in by the engine as the request progresses:
     generated: List[int] = dataclasses.field(default_factory=list)
+    token_ticks: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
     admit_tick: Optional[int] = None
     first_token_tick: Optional[int] = None
     finish_tick: Optional[int] = None
+    # continuous prefill: how far into the prompt the cache is, and how many
+    # chunk launches it took (a one-shot prefill counts as one chunk)
+    prefill_pos: int = 0
+    chunks: int = 0
+    first_chunk_tick: Optional[int] = None
 
     @property
     def done(self) -> bool:
         return self.finish_tick is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestResult:
+    """What the engine hands back for a finished request.
+
+    The streaming surface (``submit()``/``run()``/``step()``) returns these
+    instead of bare token arrays so callers stop recomputing latency from
+    trace side-channels: per-token tick stamps, TTFT and the chunk count
+    ride along.  ``generated`` (list view of ``tokens``) and the tick fields
+    keep the pre-redesign ``Request`` attribute names, so existing callers
+    keep working unchanged."""
+
+    rid: int
+    prompt: np.ndarray  # [S0] int32
+    tokens: np.ndarray  # [T] int32 generated tokens
+    token_ticks: Tuple[int, ...]  # engine tick each token landed on
+    arrival_tick: int
+    admit_tick: int
+    first_token_tick: int
+    finish_tick: int
+    max_new_tokens: int
+    slot: int
+    chunks: int  # prefill launches (1 = one-shot)
+    first_chunk_tick: int  # tick the first prompt chunk landed
+
+    @property
+    def generated(self) -> List[int]:
+        """Legacy list view of ``tokens``."""
+        return self.tokens.tolist()
+
+    @property
+    def ttft_ticks(self) -> int:
+        """Ticks from arrival to the first generated token (inclusive)."""
+        return self.first_token_tick - self.arrival_tick + 1
+
+    @property
+    def done(self) -> bool:
+        return True
+
+    @classmethod
+    def from_request(cls, req: Request) -> "RequestResult":
+        return cls(
+            rid=req.rid,
+            prompt=req.prompt,
+            tokens=np.asarray(req.generated, np.int32),
+            token_ticks=tuple(req.token_ticks),
+            arrival_tick=req.arrival_tick,
+            admit_tick=req.admit_tick,
+            first_token_tick=req.first_token_tick,
+            finish_tick=req.finish_tick,
+            max_new_tokens=req.max_new_tokens,
+            slot=req.slot,
+            chunks=req.chunks,
+            first_chunk_tick=(
+                req.first_chunk_tick if req.first_chunk_tick is not None else req.admit_tick
+            ),
+        )
 
 
 class Scheduler:
@@ -71,12 +135,19 @@ class Scheduler:
         multiple: int = 1,
         chunk: Optional[int] = None,
         allocator=None,
+        prefill_chunk: Optional[int] = None,
+        tick_token_budget: Optional[int] = None,
     ):
         if num_slots < 1:
             raise ValueError("need at least one slot")
         self.num_slots = num_slots
         self.multiple = max(1, multiple)  # sequence-parallel divisibility
         self.chunk = chunk  # SSD scan chunk (exact mode only)
+        # continuous prefill: prompts stream into their slot prefill_chunk
+        # tokens per launch; tick_token_budget caps decode + chunk tokens per
+        # tick (None = unbudgeted: every pending chunk runs every tick)
+        self.prefill_chunk = prefill_chunk
+        self.tick_token_budget = tick_token_budget
         # paged KV pool: admission accounts PAGES, not slot rows — a request
         # is only admitted when its whole lifetime (prompt + token budget)
         # fits the unreserved pool, so decode can never exhaust mid-flight
@@ -101,7 +172,8 @@ class Scheduler:
                 f"prompt({len(prompt)}) + max_new_tokens({max_new_tokens}) exceeds "
                 f"cache capacity {self.max_seq}"
             )
-        self.bucket_for(len(prompt))  # raise early on un-bucketable prompts
+        if self.prefill_chunk is None:
+            self.bucket_for(len(prompt))  # raise early on un-bucketable prompts
         req = Request(self._next_rid, prompt, max_new_tokens, arrival_tick)
         self._next_rid += 1
         self._queue.append(req)
@@ -228,6 +300,37 @@ class Scheduler:
             self.slots[slot] = req
             assigned.append((slot, req))
         return assigned
+
+    def plan_chunks(self, decode_slots: int) -> List[Tuple[int, Request, int, int]]:
+        """Continuous prefill: pick this tick's chunk work under the token
+        budget.  Returns ``[(slot, request, start, take)]`` — the engine
+        launches exactly this plan and advances ``request.prefill_pos``.
+
+        Chunks are served oldest-request-first (admission order), so the
+        head of the line finishes prefilling — and starts decoding — as
+        early as possible.  The budget charges one token per decodable slot
+        (``decode_slots``) first, then grants whole chunks until it runs
+        out.  The head-of-line chunk is ALWAYS granted, budget or not:
+        prefill makes progress every tick, it can only be throttled."""
+        if self.prefill_chunk is None:
+            return []
+        work = sorted(
+            (r.admit_tick, r.rid, slot, r)
+            for slot, r in enumerate(self.slots)
+            if r is not None and r.prefill_pos < len(r.prompt)
+        )
+        budget = None
+        if self.tick_token_budget is not None:
+            budget = max(self.tick_token_budget - decode_slots, 0)
+        plan: List[Tuple[int, Request, int, int]] = []
+        spent = 0
+        for _, _, slot, r in work:
+            take = min(self.prefill_chunk, len(r.prompt) - r.prefill_pos)
+            if plan and budget is not None and spent + take > budget:
+                break
+            plan.append((slot, r, r.prefill_pos, take))
+            spent += take
+        return plan
 
     def retire(self, slot: int, tick: int) -> Request:
         req = self.slots[slot]

@@ -1,0 +1,390 @@
+"""Continuous prefill: chunked prompt ingestion == one-shot prefill.
+
+Model level: feeding a prompt through ``tfm.prefill_chunk`` in arbitrary
+chunk sizes must leave the same striped cache and produce the same
+next-token logits as a single one-shot ``tfm.prefill`` — bitwise on the ref
+backend for GQA at aligned prompt lengths (the chunk path reuses the exact
+decode einsums and band kernel; ragged lengths differ only by XLA's choice
+of reduction association, pinned to a tight atol), token-level for MLA
+(absorbed decode math vs non-absorbed prefill math differ in fp
+association only).
+
+Engine level: a ``ServeEngine`` with ``ServeConfig.prefill_chunk`` set must
+generate token-for-token what the one-shot engine generates, for any chunk
+size and token budget, dense and paged, with the budget bounding each
+tick's ingested prompt tokens.  Plus the ``ServeConfig`` validation surface
+and the legacy-kwarg deprecation shim this PR pins.
+"""
+
+import dataclasses
+import math
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.masking import prefix_chunk_visibility
+from repro.kernels import ops
+from repro.models import transformer as tfm
+from repro.parallel.context import ParallelCtx
+from repro.serve.config import ServeConfig
+from repro.serve.engine import ServeEngine
+
+CAP = 64
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = get_config("granite-8b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def _oneshot(cfg, params, ctx, prompt):
+    cache = tfm.init_cache(cfg, 1, CAP, dtype=jnp.float32, ctx=ctx)
+    S = len(prompt)
+    batch = {
+        "tokens": jnp.asarray(prompt)[None],
+        "positions": jnp.arange(S, dtype=jnp.int32),
+    }
+    return tfm.prefill(params, cfg, ctx, batch, cache)
+
+
+def _chunked(cfg, params, ctx, prompt, C):
+    cache = tfm.init_cache(cfg, 1, CAP, dtype=jnp.float32, ctx=ctx)
+    cache["pos"] = cache["pos"].at[0].set(2**30)  # park: not yet decodable
+    S = len(prompt)
+    for start in range(0, S, C):
+        take = min(C, S - start)
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :take] = prompt[start:start + take]
+        batch = {
+            "tokens": jnp.asarray(toks),
+            "starts": jnp.asarray([start], jnp.int32),
+            "lens": jnp.asarray([take], jnp.int32),
+            "write_starts": jnp.asarray([0], jnp.int32),
+            "pos_set": jnp.asarray([S if start + take >= S else -1], jnp.int32),
+        }
+        logits, cache = tfm.prefill_chunk(params, cfg, ctx, batch, cache)
+    return logits, cache
+
+
+def _assert_pair(cfg, params, prompt, C, atol=None):
+    """atol=None: bitwise logits + cache.  atol=float: same token, logits
+    and cache within atol (XLA picks a different reduction association for
+    the [S, S] one-shot matmul vs the banded chunk path when S is ragged —
+    fp-order noise, not a visibility difference)."""
+    ctx = ParallelCtx()
+    l1, c1 = _oneshot(cfg, params, ctx, prompt)
+    l2, c2 = _chunked(cfg, params, ctx, prompt, C)
+    l1 = np.asarray(l1).reshape(-1)
+    l2 = np.asarray(l2).reshape(-1)
+    assert int(np.argmax(l1)) == int(np.argmax(l2))
+    for a, b in [(l1, l2)] + [
+        (np.asarray(c1[k]), np.asarray(c2[k]))
+        for k in c1 if k not in ("pos", "bt")
+    ]:
+        if atol is None:
+            np.testing.assert_array_equal(a, b)
+        else:
+            np.testing.assert_allclose(a, b, atol=atol, rtol=1e-5)
+    assert int(c1["pos"][0]) == int(c2["pos"][0]) == len(prompt)
+
+
+# --------------------------------------------------------------------------
+# model level: chunked == one-shot on the live cache
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    S=st.integers(min_value=1, max_value=28),
+    C=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_chunked_prefill_matches_oneshot(granite, S, C, seed):
+    """Any chunking of the prompt selects the same next token and leaves the
+    cache equal to fp-reassociation tolerance, for arbitrary (S, C)."""
+    cfg, params = granite
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, cfg.vocab_size, (S,), dtype=np.int32)
+    ops.set_backend("ref")
+    try:
+        _assert_pair(cfg, params, prompt, C, atol=1e-5)
+    finally:
+        ops.set_backend("auto")
+
+
+@pytest.mark.parametrize("S", [8, 16, 24, 32])
+@pytest.mark.parametrize("C", [5, 8, 16])
+def test_chunked_prefill_bitwise_on_aligned_lengths(granite, S, C):
+    """On the ref backend both paths run the same einsums and band kernel,
+    so aligned prompt lengths (where XLA keeps one reduction association
+    for both launch shapes) are BITWISE identical — logits and cache."""
+    cfg, params = granite
+    rng = np.random.default_rng(S * 31 + C)
+    prompt = rng.integers(0, cfg.vocab_size, (S,), dtype=np.int32)
+    ops.set_backend("ref")
+    try:
+        _assert_pair(cfg, params, prompt, C)
+    finally:
+        ops.set_backend("auto")
+
+
+def test_chunked_prefill_windowed_arch_bitwise(granite):
+    """Sliding-window attention: the chunk band widens only the schedule
+    prune, not the visibility, so windowed archs stay bitwise too."""
+    cfg, params = granite
+    wcfg = dataclasses.replace(cfg, window=8)
+    wparams = tfm.init_params(wcfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, wcfg.vocab_size, (24,), dtype=np.int32)
+    ops.set_backend("ref")
+    try:
+        for C in (5, 8):
+            _assert_pair(wcfg, wparams, prompt, C)
+    finally:
+        ops.set_backend("auto")
+
+
+def test_chunked_prefill_mla_token_equal():
+    """MLA chunks through the absorbed decode einsums while one-shot prefill
+    uses the non-absorbed form: same math, different fp association —
+    token-level equal, logits close."""
+    cfg = get_config("minicpm3-4b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, (20,), dtype=np.int32)
+    ctx = ParallelCtx()
+    ops.set_backend("ref")
+    try:
+        l1, _ = _oneshot(cfg, params, ctx, prompt)
+        l2, _ = _chunked(cfg, params, ctx, prompt, 8)
+    finally:
+        ops.set_backend("auto")
+    l1, l2 = np.asarray(l1).reshape(-1), np.asarray(l2).reshape(-1)
+    assert int(np.argmax(l1)) == int(np.argmax(l2))
+    np.testing.assert_allclose(l1, l2, atol=1e-4, rtol=1e-4)
+
+
+def test_chunked_prefill_then_decode_token_for_token(granite):
+    """Decode from a chunk-built cache must emit the same tokens as decode
+    from a one-shot cache — the cache states are interchangeable."""
+    cfg, params = granite
+    ctx = ParallelCtx()
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab_size, (23,), dtype=np.int32)
+    ops.set_backend("ref")
+    try:
+        l1, c1 = _oneshot(cfg, params, ctx, prompt)
+        l2, c2 = _chunked(cfg, params, ctx, prompt, 6)
+        t1 = jnp.asarray([[int(np.argmax(np.asarray(l1)))]], jnp.int32)
+        t2 = jnp.asarray([[int(np.argmax(np.asarray(l2)))]], jnp.int32)
+        s1, s2 = [], []
+        for _ in range(5):
+            t1, c1, _ = tfm.decode_step(params, c1, t1, cfg, ctx)
+            t2, c2, _ = tfm.decode_step(params, c2, t2, cfg, ctx)
+            s1.append(int(t1[0, 0]))
+            s2.append(int(t2[0, 0]))
+    finally:
+        ops.set_backend("auto")
+    assert s1 == s2
+
+
+def test_prefill_chunk_rejects_non_attention_arch():
+    cfg = get_config("mamba2-370m").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    ctx = ParallelCtx()
+    cache = tfm.init_cache(cfg, 1, CAP, dtype=jnp.float32, ctx=ctx)
+    batch = {
+        "tokens": jnp.zeros((1, 4), jnp.int32),
+        "starts": jnp.zeros((1,), jnp.int32),
+        "lens": jnp.full((1,), 4, jnp.int32),
+        "write_starts": jnp.zeros((1,), jnp.int32),
+        "pos_set": jnp.full((1,), 4, jnp.int32),
+    }
+    with pytest.raises(ValueError, match="attention-only"):
+        tfm.prefill_chunk(params, cfg, ctx, batch, cache)
+    with pytest.raises(ValueError, match="attention-only"):
+        ServeEngine(cfg, params,
+                    serve=ServeConfig(max_seq=32, num_slots=1, prefill_chunk=4))
+
+
+# --------------------------------------------------------------------------
+# engine level: chunked serving == one-shot serving
+# --------------------------------------------------------------------------
+
+_PROMPT_LENS = (9, 22, 13, 30)
+_ARRIVALS = (0, 0, 2, 3)
+_NEW = 5
+
+
+def _serve(cfg, params, serve, prompts):
+    eng = ServeEngine(cfg, params, serve=serve)
+    rids = [eng.submit(p, _NEW, arrival_tick=a)
+            for p, a in zip(prompts, _ARRIVALS)]
+    out = eng.run()
+    return eng, [out[r] for r in rids]
+
+
+@pytest.fixture(scope="module")
+def engine_ref(granite):
+    cfg, params = granite
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32)
+               for ln in _PROMPT_LENS]
+    _, results = _serve(cfg, params, ServeConfig(max_seq=CAP, num_slots=2),
+                        prompts)
+    return prompts, results
+
+
+@pytest.mark.parametrize("chunk,budget", [(4, None), (8, 12), (64, None)])
+def test_engine_chunked_matches_oneshot(granite, engine_ref, chunk, budget):
+    cfg, params = granite
+    prompts, ref = engine_ref
+    eng, got = _serve(
+        cfg, params,
+        ServeConfig(max_seq=CAP, num_slots=2,
+                    prefill_chunk=chunk, tick_token_budget=budget),
+        prompts,
+    )
+    for r, g in zip(ref, got):
+        assert g.generated == r.generated
+    assert eng.chunk_trace_count == 1  # one [slots, C] trace serves every tick
+    if chunk == 64 and budget is None:
+        # every prompt fits one chunk and nothing is deferred: tick parity
+        # with the one-shot engine, not just token parity
+        for r, g in zip(ref, got):
+            assert g.first_token_tick == r.first_token_tick
+            assert g.finish_tick == r.finish_tick
+
+
+def test_engine_chunked_paged_shared_prefix(granite):
+    cfg, params = granite
+    rng = np.random.default_rng(9)
+    prefix = rng.integers(0, cfg.vocab_size, (16,), dtype=np.int32)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, cfg.vocab_size, (ln,),
+                                            dtype=np.int32)]).astype(np.int32)
+               for ln in (6, 14, 9, 11)]
+    _, ref = _serve(cfg, params,
+                    ServeConfig(max_seq=CAP, num_slots=2, paged=True), prompts)
+    eng, got = _serve(
+        cfg, params,
+        ServeConfig(max_seq=CAP, num_slots=2, paged=True,
+                    prefill_chunk=8, tick_token_budget=16),
+        prompts,
+    )
+    for r, g in zip(ref, got):
+        assert g.generated == r.generated
+    assert eng.allocator.stats()["shared_hits"] > 0
+
+
+def test_budget_bounds_tick_prefill_tokens(granite):
+    """No tick ingests more prompt tokens than the budget allows (the
+    head-of-line chunk is always granted, so the bound is
+    max(budget, chunk))."""
+    cfg, params = granite
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32)
+               for ln in _PROMPT_LENS]
+    budget, chunk = 6, 4
+    eng, _ = _serve(
+        cfg, params,
+        ServeConfig(max_seq=CAP, num_slots=2,
+                    prefill_chunk=chunk, tick_token_budget=budget),
+        prompts,
+    )
+    stats = eng.tick_stats()
+    assert sum(stats["prefill_tokens"]) == sum(_PROMPT_LENS)
+    assert max(stats["prefill_tokens"]) <= max(budget, chunk)
+    assert sum(stats["decode_tokens"]) == len(_PROMPT_LENS) * _NEW
+
+
+def test_request_result_surface(granite, engine_ref):
+    cfg, params = granite
+    prompts, _ = engine_ref
+    chunk = 8
+    _, got = _serve(
+        cfg, params,
+        ServeConfig(max_seq=CAP, num_slots=2, prefill_chunk=chunk),
+        prompts,
+    )
+    for p, r in zip(prompts, got):
+        assert list(r.tokens) == r.generated
+        assert len(r.token_ticks) == len(r.generated) == _NEW
+        assert list(r.token_ticks) == sorted(r.token_ticks)
+        assert r.ttft_ticks == r.first_token_tick - r.arrival_tick + 1
+        assert r.chunks == math.ceil(len(p) / chunk)
+        assert r.first_chunk_tick <= r.first_token_tick
+        assert r.done
+
+
+# --------------------------------------------------------------------------
+# ServeConfig surface: validation + the legacy-kwarg shim
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(max_seq=0),
+    dict(num_slots=0),
+    dict(pack_plan="fastest"),
+    dict(decode_kernel="magic"),
+    dict(prefill_buckets=(0,)),
+    dict(page_size=8),  # requires paged=True
+    dict(paged=True, page_size=0),
+    dict(prefill_chunk=0),
+    dict(tick_token_budget=8),  # requires prefill_chunk
+    dict(prefill_chunk=4, tick_token_budget=0),
+])
+def test_serve_config_rejects_bad_combinations(kwargs):
+    with pytest.raises(ValueError):
+        ServeConfig(**kwargs)
+
+
+def test_legacy_kwargs_warn_and_map(granite):
+    cfg, params = granite
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        eng = ServeEngine(cfg, params, max_seq=32, num_slots=1)
+    assert eng.serve == ServeConfig(max_seq=32, num_slots=1)
+    with pytest.raises(TypeError, match="unknown ServeEngine kwargs"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            ServeEngine(cfg, params, max_sequence=32)
+    with pytest.raises(TypeError, match="not both"):
+        ServeEngine(cfg, params, serve=ServeConfig(), max_seq=32)
+
+
+# --------------------------------------------------------------------------
+# masking: chunk-vs-prefix visibility classification
+# --------------------------------------------------------------------------
+
+
+def test_prefix_chunk_visibility_classification():
+    # a chunk at [8, 16) over prefix keys [0, 8): all causal-visible
+    assert prefix_chunk_visibility(8, 16, 0, 8) == "full"
+    # keys overlapping the chunk's own rows: partial (diagonal inside)
+    assert prefix_chunk_visibility(8, 16, 8, 16) == "partial"
+    # keys entirely in the future (bounds inclusive, so k_lo=16 would still
+    # touch the diagonal at q=16): empty
+    assert prefix_chunk_visibility(8, 16, 17, 24) == "empty"
+    assert prefix_chunk_visibility(8, 16, 16, 24) == "partial"
+    # window clips the oldest keys for the newest rows
+    assert prefix_chunk_visibility(8, 16, 0, 8, window=4) == "partial"
+    # window wide enough to keep the whole prefix: full again
+    assert prefix_chunk_visibility(8, 16, 7, 8, window=16) == "full"
+    # keys too old for every row under the window: empty
+    assert prefix_chunk_visibility(32, 40, 0, 8, window=4) == "empty"
+    # single-position ranges are valid (bounds inclusive): the diagonal
+    # pair (q=8, k=8) is causal-visible
+    assert prefix_chunk_visibility(8, 8, 8, 8) == "full"
+    with pytest.raises(ValueError):
+        prefix_chunk_visibility(8, 7, 0, 8)
+    with pytest.raises(ValueError):
+        prefix_chunk_visibility(8, 16, 0, 8, window=0)

@@ -88,3 +88,11 @@ def test_paged_serve():
     token-for-token identical to the dense engine on the streaming trace,
     and a shared-prefix pair must allocate strictly fewer pages."""
     _run_checks("paged_serve")
+
+
+def test_continuous_prefill():
+    """Chunked, budgeted prompt ingestion on a (2,4) mesh: the continuous-
+    prefill engine == one-shot engine == single-device generation,
+    token-for-token, dense and paged (shared prefixes included), with one
+    chunk trace and the per-tick budget respected."""
+    _run_checks("continuous_prefill")
