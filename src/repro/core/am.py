@@ -16,6 +16,7 @@ import dataclasses
 import math
 from typing import Dict, Optional
 
+from repro.core.schedule import validate_comm_overlap
 from repro.core.tiling import TileLayout, best_square_a, factorizations
 
 __all__ = [
@@ -27,7 +28,36 @@ __all__ = [
     "mesh_volume_chunks",
     "commcom_ratio",
     "table2",
+    "ppermute_pair_factor",
+    "logical_ppermute_steps",
 ]
+
+
+def ppermute_pair_factor(comm_overlap: str = "overlap") -> int:
+    """HLO collective-permutes emitted per logical ring hop.
+
+    ``bidir`` ships every hop as a half-payload pair (one permute per ring
+    direction) whose bytes sum to exactly one hop's traffic, so byte volumes
+    stay mode-invariant while the raw op count doubles.  serial/overlap emit
+    one permute per hop.
+    """
+    validate_comm_overlap(comm_overlap)
+    return 2 if comm_overlap == "bidir" else 1
+
+
+def logical_ppermute_steps(op_count: int, comm_overlap: str = "overlap") -> int:
+    """Collapse a measured HLO collective-permute op count (see
+    ``launch.hlo_analysis.collective_bytes``'s ``collective-permute-count``)
+    to logical ring steps: a bidirectional half-payload pair is ONE step's
+    traffic — its bytes are summed, its two ops are not two steps.  Keeps the
+    measured-vs-theory comparison honest across comm_overlap modes."""
+    factor = ppermute_pair_factor(comm_overlap)
+    if op_count % factor:
+        raise ValueError(
+            f"{op_count} collective-permutes cannot be grouped into "
+            f"half-payload pairs ({comm_overlap!r} expects multiples of {factor})"
+        )
+    return op_count // factor
 
 
 def ring_volume(n: int) -> float:

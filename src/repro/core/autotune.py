@@ -51,8 +51,10 @@ def _plan(
     allow_concurrent_rings: bool,
     mask: Optional[MaskSpec] = None,
     layout: str = "striped",
+    comm_overlap: str = "overlap",
 ) -> TilePlan:
     b = comm.n // a
+    S.validate_comm_overlap(comm_overlap)
     mask = mask if mask is not None else MaskSpec.from_flags(causal)
     # mask-empty slot blocks are pruned from BOTH schedules (their dQ/dKV is
     # zero), which shortens the simulated comm and compute alike.  An
@@ -61,8 +63,15 @@ def _plan(
     skip: frozenset = frozenset()
     if comm.seq % comm.n == 0:
         skip = mask.empty_blocks(a, b, layout=layout, n=comm.n, seq=comm.seq)
-    fwd_cost = make_cost_model(comm, hw, backward=False, mask=mask)
-    bwd_cost = make_cost_model(comm, hw, backward=True, mask=mask)
+    # bidir halves t_chunk (per-direction bandwidth), which shrinks the
+    # profile's c_* hiding requirements: the greedy search then co-schedules
+    # fewer blocks per transfer and prefers tiles whose comm actually hides
+    fwd_cost = make_cost_model(
+        comm, hw, backward=False, mask=mask, comm_overlap=comm_overlap
+    )
+    bwd_cost = make_cost_model(
+        comm, hw, backward=True, mask=mask, comm_overlap=comm_overlap
+    )
     if skip:
         # visible_fraction averages over ALL a*b blocks, but the pruned
         # schedule only runs the survivors — rescale so the per-block time
@@ -75,7 +84,7 @@ def _plan(
         a, b, fwd_profile, allow_concurrent_rings=allow_concurrent_rings, skip_blocks=skip
     )
     S.validate_schedule(fwd, strict_paper=not allow_concurrent_rings)
-    fwd_sim = simulate(fwd, fwd_cost, comm)
+    fwd_sim = simulate(fwd, fwd_cost, comm, comm_overlap=comm_overlap)
     bwd = bwd_sim = None
     if with_backward:
         bwd = S.greedy_backward_schedule(
@@ -83,7 +92,7 @@ def _plan(
             skip_blocks=skip,
         )
         S.validate_schedule(bwd, strict_paper=not allow_concurrent_rings)
-        bwd_sim = simulate(bwd, bwd_cost, comm)
+        bwd_sim = simulate(bwd, bwd_cost, comm, comm_overlap=comm_overlap)
     return TilePlan(a=a, b=b, fwd=fwd, bwd=bwd, fwd_sim=fwd_sim, bwd_sim=bwd_sim, profile=fwd_profile)
 
 
@@ -97,12 +106,16 @@ def tune(
     candidates: Optional[List[int]] = None,
     mask: Optional[MaskSpec] = None,
     layout: str = "striped",
+    comm_overlap: str = "overlap",
 ) -> TilePlan:
     """Figure-6 flow: profile -> greedy schedule -> simulate -> argmin.
 
     ``mask`` supersedes the legacy ``causal`` flag; mask structure changes
     both the per-block cost (visible fraction) and the schedule itself
     (pruned blocks/comm), so it can shift the optimal tile shape.
+    ``comm_overlap`` selects the executor's step-cost model (serial |
+    overlap | bidir) — hidden comm is free under overlap, so the optimum can
+    move relative to the serial model.
     """
     if candidates is None:
         candidates = [a for a, _ in factorizations(comm.n)]
@@ -116,6 +129,7 @@ def tune(
             allow_concurrent_rings=allow_concurrent_rings,
             mask=mask,
             layout=layout,
+            comm_overlap=comm_overlap,
         )
         for a in candidates
     ]
@@ -132,6 +146,7 @@ def plan_for(
     allow_concurrent_rings: bool = False,
     mask: Optional[MaskSpec] = None,
     layout: str = "striped",
+    comm_overlap: str = "overlap",
 ) -> TilePlan:
     """Plan for a fixed tile height (a=1 reproduces Ring-Attention)."""
     return _plan(
@@ -143,4 +158,5 @@ def plan_for(
         allow_concurrent_rings=allow_concurrent_rings,
         mask=mask,
         layout=layout,
+        comm_overlap=comm_overlap,
     )

@@ -104,6 +104,12 @@ class AttentionPlanConfig:
     bwd_wire: str = "qdod"
     allow_concurrent_rings: bool = False
     mask: Optional[MaskSpec] = None  # first-class mask; supersedes causal/window
+    # ring-transport mode (schedule.COMM_OVERLAP_MODES): serial pins each
+    # step's permutes ahead of its blocks, overlap (default) leaves them in
+    # flight during the blocks, bidir splits each hop into a half-payload
+    # ppermute pair over both ring directions.  Bitwise-equal; changes the
+    # simulated step cost, so it is part of the plan-cache key.
+    comm_overlap: str = "overlap"
     paged: bool = False  # decode reads/writes a page pool through a block table
     # decode kernel variant: "auto" -> "native" (the split-K Pallas kernel
     # reading the block table in-kernel, kernels/paged_decode.py) for the
@@ -117,6 +123,7 @@ class AttentionPlanConfig:
     plan_cache_dir: Optional[str] = None  # None -> $REPRO_PLAN_CACHE_DIR or ~/.cache
 
     def __post_init__(self):
+        S.validate_comm_overlap(self.comm_overlap)
         if self.mask is not None and (self.causal or self.window is not None):
             raise ValueError("pass either mask= or the legacy causal/window flags, not both")
         if self.decode_kernel not in ("auto", "native", "gather"):
@@ -185,6 +192,7 @@ def plan_from_ctx(
         block_kv=ctx.block_kv,
         bwd_wire=ctx.bwd_wire,
         allow_concurrent_rings=ctx.allow_concurrent_rings,
+        comm_overlap=getattr(ctx, "comm_overlap", "overlap"),
         autotune=getattr(ctx, "attn_autotune", False),
         plan_cache_dir=getattr(ctx, "plan_cache_dir", None),
     )
@@ -280,7 +288,7 @@ def _plan_key(cfg: AttentionPlanConfig, comm: CommModel, hw: HardwareModel) -> T
     the same (shape, dtype, n, hw) from ever colliding — mask structure
     changes both block cost and the pruned schedule."""
     desc = {
-        "v": 3,
+        "v": 4,
         "n": comm.n,
         "a": cfg.a,
         "seq": comm.seq,
@@ -298,6 +306,10 @@ def _plan_key(cfg: AttentionPlanConfig, comm: CommModel, hw: HardwareModel) -> T
         "decode_kernel": _resolve_decode_kernel(cfg.decode_kernel, cfg.paged),
         "with_backward": cfg.with_backward,
         "allow_concurrent_rings": cfg.allow_concurrent_rings,
+        # overlap modes price steps differently (serial: comm+compute;
+        # overlap: max+residual; bidir: per-direction bandwidth), so the
+        # tuned tile/schedule may differ per mode — never share entries
+        "comm_overlap": cfg.comm_overlap,
         "hw_profile": cfg.hw_profile,
         "hw": dataclasses.asdict(hw),
     }
@@ -343,6 +355,7 @@ def plan_schedules(
         layout=cfg.layout,
         with_backward=cfg.with_backward,
         allow_concurrent_rings=cfg.allow_concurrent_rings,
+        comm_overlap=cfg.comm_overlap,
     )
     if cfg.a is not None:
         plan = autotune.plan_for(comm, cfg.a, hw, **kw)
@@ -407,6 +420,7 @@ def _mesh_cfg(
         block_q=cfg.block_q,
         block_kv=cfg.block_kv,
         allow_concurrent_rings=cfg.allow_concurrent_rings,
+        comm_overlap=cfg.comm_overlap,
     )
 
 

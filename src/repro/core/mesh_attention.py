@@ -23,6 +23,16 @@ KV ring with plain sums) — so JAX never auto-differentiates the ring code.
 ``a = 1`` degenerates to Ring-Attention (no Q ring, no O sends): the baseline
 is literally a config choice, as in the paper ("covers Ring-Attention as a
 special case").
+
+Both executors run each step as an issue/compute/commit pipeline governed by
+``cfg.comm_overlap`` (see ``schedule.COMM_OVERLAP_MODES``): the step's ring
+permutes are emitted ahead of its flash blocks and only land in their slots
+at step end, so in ``overlap`` mode (default) the transfer is in flight while
+the blocks run; ``serial`` barriers the blocks on the transfers (the naive
+baseline the cost model prices as comm+compute); ``bidir`` splits every hop
+into a half-payload ppermute pair over both ring directions (TokenRing,
+PAPERS.md).  All three modes are BITWISE-equal — only transport routing and
+HLO ordering differ (dist_check ``overlap_exact``).
 """
 
 from __future__ import annotations
@@ -67,8 +77,15 @@ class MeshAttentionConfig:
     block_kv: int = 128
     allow_concurrent_rings: bool = False
     mask: Optional[MaskSpec] = None  # takes precedence over causal/window
+    # how each step's ring permutes are ordered against its compute blocks
+    # (schedule.COMM_OVERLAP_MODES): serial barriers them onto the critical
+    # path, overlap leaves them in flight during the blocks (double-buffered
+    # slots), bidir additionally splits each hop into a half-payload pair on
+    # both ring directions.  All three are bitwise-equal.
+    comm_overlap: str = "overlap"
 
     def __post_init__(self):
+        S.validate_comm_overlap(self.comm_overlap)
         if self.n % self.a:
             raise ValueError(f"a={self.a} must divide n={self.n}")
         if self.mask is not None and (self.causal or self.window is not None):
@@ -185,6 +202,48 @@ def _merge(acc: Optional[tuple], o, lse):
 
 
 # --------------------------------------------------------------------------
+# ring transport (comm_overlap modes)
+# --------------------------------------------------------------------------
+
+
+def _ring_hop(buf, axis_name: str, perm, mode: str):
+    """One ring hop of a pytree payload under the comm_overlap mode.
+
+    ``serial``/``overlap``: one ppermute per leaf.  ``bidir``: every leaf is
+    split into two half-payloads shipped as a concurrent ppermute pair — the
+    TokenRing move (PAPERS.md): two independent transfers the runtime can
+    route over both directions of the torus link, so each half moves at full
+    per-direction bandwidth.  Reassembly is pure transport
+    (``concat(x[..., :h], x[..., h:]) == x``), so downstream compute sees
+    bitwise the single-permute payload and total wire bytes are unchanged.
+    """
+    if mode != "bidir":
+        return jax.tree.map(lambda x: lax.ppermute(x, axis_name, perm), buf)
+
+    def hop(x):
+        if x.ndim == 0 or x.shape[-1] < 2:  # nothing to split (tiny payload)
+            return lax.ppermute(x, axis_name, perm)
+        h = x.shape[-1] // 2
+        cw = lax.ppermute(x[..., :h], axis_name, perm)
+        ccw = lax.ppermute(x[..., h:], axis_name, perm)
+        return jnp.concatenate([cw, ccw], axis=-1)
+
+    return jax.tree.map(hop, buf)
+
+
+def _after_comms(issued, *operands):
+    """``serial`` mode: thread compute operands through an optimization
+    barrier with the step's in-flight permute results, so XLA must complete
+    the transfers before any of the step's blocks run (the naive
+    ppermute-then-compute ordering the serial cost model prices).  Identity
+    on values — bitwise-neutral by construction."""
+    if not issued:
+        return operands
+    out = lax.optimization_barrier(tuple(operands) + tuple(issued))
+    return out[: len(operands)]
+
+
+# --------------------------------------------------------------------------
 # forward program (Algorithm 2 structure)
 # --------------------------------------------------------------------------
 
@@ -230,31 +289,43 @@ def _fwd_program(q, k, v, cfg: MeshAttentionConfig, kv_transform=None, seg=None)
     # leading sends over fully-pruned rows are absent; re-base the counter
     nsend = (a - 1) - sum(1 for c in sched.comm_ops() if c == S.SEND_O)
 
+    mode = cfg.comm_overlap
     for step in sched.steps:
-        # issue this step's communication first so XLA's latency-hiding
-        # scheduler can overlap it with the compute below
+        # phase 1 — ISSUE: emit this step's ring permutes ahead of its
+        # blocks.  Under the schedule semantics a transfer issued at step t
+        # delivers at the END of t and feeds compute at t+1+ (double-buffered
+        # slots), so in overlap/bidir mode the permute pair below rides the
+        # wire WHILE the blocks of phase 2 run — XLA's async collectives see
+        # no data dependency between them.
         recv_updates = []
+        issued: list = []
         for comm in step.comms:
             if comm == S.RECV_Q:
-                nxt = jax.tree.map(lambda x: lax.ppermute(x, cfg.axis_name, q_perm), qs[nq])
+                nxt = _ring_hop(qs[nq], cfg.axis_name, q_perm, mode)
                 recv_updates.append(("q", nxt))
+                issued += [x for x in jax.tree.leaves(nxt)]
             elif comm == S.RECV_KV:
-                nxt = jax.tree.map(lambda x: lax.ppermute(x, cfg.axis_name, kv_perm), kvs[nkv])
+                nxt = _ring_hop(kvs[nkv], cfg.axis_name, kv_perm, mode)
                 recv_updates.append(("kv", nxt))
+                issued += [x for x in jax.tree.leaves(nxt)]
             elif comm == S.SEND_O:
                 src = nsend + 1  # completed row being forwarded
                 dst = (nsend + 2) % a  # row whose partial arrives (Table 1)
-                o_s, l_s = o_acc[src]
-                o_r = lax.ppermute(o_s, cfg.axis_name, q_perm)
-                l_r = lax.ppermute(l_s, cfg.axis_name, q_perm)
+                o_r, l_r = _ring_hop(o_acc[src], cfg.axis_name, q_perm, mode)
                 o_acc[dst] = _merge(o_acc[dst], o_r, l_r)
+                issued += [o_r, l_r]
                 nsend += 1
             else:  # pragma: no cover
                 raise ValueError(comm)
+        # phase 2 — COMPUTE this step's blocks from previously-delivered
+        # slots.  serial mode barriers each block's operands on the issued
+        # transfers, pinning comm ahead of compute on the critical path.
         for (u, vv) in step.compute:
             band, sq, skv = _band_for_block(cfg, i, u, vv, q.shape[1], k.shape[1])
             q_u, s_q = qs[u]
             kk, vv_t, s_kv = kv_at(vv)
+            if mode == "serial":
+                q_u, kk, vv_t = _after_comms(issued, q_u, kk, vv_t)
             o_b, l_b = ops.block_attention(
                 q_u, kk, vv_t, band,
                 scale=scale, stride_q=sq, stride_kv=skv,
@@ -262,6 +333,8 @@ def _fwd_program(q, k, v, cfg: MeshAttentionConfig, kv_transform=None, seg=None)
                 seg_q=s_q, seg_kv=s_kv,
             )
             o_acc[u] = _merge(o_acc[u], o_b, l_b)
+        # phase 3 — COMMIT: the in-flight transfers land in the next slots
+        # (the buffer swap of the double buffer), visible from step t+1 on.
         for kind, buf in recv_updates:
             if kind == "q":
                 nq += 1
@@ -315,24 +388,34 @@ def _bwd_program(cfg: MeshAttentionConfig, q, k, v, o, lse, do, seg=None):
         new = new.astype(jnp.float32)
         return new if cur is None else cur + new
 
+    mode = cfg.comm_overlap
     for step in sched.steps:
+        # same issue/compute/commit pipeline as the forward executor; the
+        # dq/dkv accumulation chains are plain float sums whose association
+        # order is fixed by the schedule, so the bidir half-payload pairs
+        # (each half summed element-wise on the same route) stay bitwise
         recv_updates = []
+        issued: list = []
         for comm in step.comms:
             if comm == S.RECV_ODOQ:
-                nxt = jax.tree.map(lambda x: lax.ppermute(x, cfg.axis_name, q_perm), qb[nq])
+                nxt = _ring_hop(qb[nq], cfg.axis_name, q_perm, mode)
                 recv_updates.append(("q", nxt))
+                issued += [x for x in jax.tree.leaves(nxt)]
             elif comm == S.RECV_KV:
-                nxt = jax.tree.map(lambda x: lax.ppermute(x, cfg.axis_name, kv_perm), kvs[nkv])
+                nxt = _ring_hop(kvs[nkv], cfg.axis_name, kv_perm, mode)
                 recv_updates.append(("kv", nxt))
+                issued += [x for x in jax.tree.leaves(nxt)]
             elif comm == S.SEND_DQ:
                 src, dst = ndq + 1, (ndq + 2) % a
-                got = lax.ppermute(dq_acc[src], cfg.axis_name, q_perm)
+                got = _ring_hop(dq_acc[src], cfg.axis_name, q_perm, mode)
                 dq_acc[dst] = _add(dq_acc[dst], got)
+                issued.append(got)
                 ndq += 1
             elif comm == S.SEND_DKV:
                 src, dst = ndkv + 1, (ndkv + 2) % b
-                got = lax.ppermute(dkv_acc[src], cfg.axis_name, kv_perm)
+                got = _ring_hop(dkv_acc[src], cfg.axis_name, kv_perm, mode)
                 dkv_acc[dst] = _add(dkv_acc[dst], got)
+                issued.append(got)
                 ndkv += 1
             else:  # pragma: no cover
                 raise ValueError(comm)
@@ -340,8 +423,11 @@ def _bwd_program(cfg: MeshAttentionConfig, q, k, v, o, lse, do, seg=None):
             band, sq, skv = _band_for_block(cfg, i, u, vv, q.shape[1], k.shape[1])
             bu = qb[u]
             kv_buf, s_kv = kvs[vv]
+            q_u, do_u, kv_u = bu["q"], bu["do"], kv_buf
+            if mode == "serial":
+                q_u, do_u, kv_u = _after_comms(issued, q_u, do_u, kv_u)
             dq_b, dk_b, dv_b = ops.block_attention_bwd(
-                bu["q"], kv_buf[0], kv_buf[1], bu.get("o"), bu["lse"], bu["do"], band,
+                q_u, kv_u[0], kv_u[1], bu.get("o"), bu["lse"], do_u, band,
                 scale=scale, stride_q=sq, stride_kv=skv,
                 block_q=cfg.block_q, block_kv=cfg.block_kv, delta=bu["delta"],
                 seg_q=bu.get("seg"), seg_kv=s_kv,

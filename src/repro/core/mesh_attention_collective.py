@@ -33,6 +33,7 @@ from typing import Optional
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import schedule as S
 from repro.kernels import ops
 from repro.kernels.ref import BAND_INF, NEG_INF
 
@@ -54,7 +55,14 @@ def mesh_attention_collective(
     block_kv: int = 128,
     mask=None,  # Optional[MaskSpec]; supersedes causal/window
     seg: Optional[jnp.ndarray] = None,  # [m] int32 local segment-id chunk
+    comm_overlap: str = "overlap",  # schedule.COMM_OVERLAP_MODES; collective
+    # mode has no step pipeline, so the knob maps onto the gathers: serial
+    # barriers compute on every gather, bidir splits each all-gather into a
+    # half-payload pair (both ring directions of the axis).  Reductions
+    # (psum_scatter, the lse all-gather feeding one) are never split — only
+    # pure transport is, which keeps all three modes bitwise-equal.
 ) -> jnp.ndarray:
+    S.validate_comm_overlap(comm_overlap)
     a = lax.psum(1, q_axis)
     b = lax.psum(1, kv_axis)
     n = a * b
@@ -69,15 +77,30 @@ def mesh_attention_collective(
         if mask.needs_segments and seg is None:
             raise ValueError(f"mask kind {mask.kind!r} needs a segment-id operand")
 
+    def gather(x, axis):
+        if comm_overlap != "bidir" or x.ndim == 0 or x.shape[-1] < 2:
+            return lax.all_gather(x, axis)
+        h = x.shape[-1] // 2
+        lo = lax.all_gather(x[..., :h], axis)
+        hi_half = lax.all_gather(x[..., h:], axis)
+        return jnp.concatenate([lo, hi_half], axis=-1)
+
     # Algorithm 1 lines 1-2: group all-gathers
-    qs = lax.all_gather(q, q_axis)  # [a, B, m, H, D]
-    ks = lax.all_gather(k, kv_axis)  # [b, B, m, Hkv, D]
-    vs = lax.all_gather(v, kv_axis)
+    qs = gather(q, q_axis)  # [a, B, m, H, D]
+    ks = gather(k, kv_axis)  # [b, B, m, Hkv, D]
+    vs = gather(v, kv_axis)
     seg_qs = seg_ks = None
     if seg is not None:
         seg = jnp.asarray(seg, jnp.int32)
-        seg_qs = lax.all_gather(seg, q_axis)  # [a, m]
-        seg_ks = lax.all_gather(seg, kv_axis)  # [b, m]
+        seg_qs = gather(seg, q_axis)  # [a, m]
+        seg_ks = gather(seg, kv_axis)  # [b, m]
+    if comm_overlap == "serial":
+        # pin the gathers ahead of the blockwise compute (identity on values)
+        gathered = (qs, ks, vs) + ((seg_qs, seg_ks) if seg is not None else ())
+        barr = lax.optimization_barrier(gathered)
+        qs, ks, vs = barr[0], barr[1], barr[2]
+        if seg is not None:
+            seg_qs, seg_ks = barr[3], barr[4]
 
     hi = (window - 1) if (causal and window) else BAND_INF
 

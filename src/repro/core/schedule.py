@@ -40,6 +40,8 @@ import math
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 __all__ = [
+    "COMM_OVERLAP_MODES",
+    "validate_comm_overlap",
     "Profile",
     "Step",
     "Schedule",
@@ -54,6 +56,32 @@ __all__ = [
 ]
 
 Block = Tuple[int, int]
+
+# How the executor orders each step's ring permutes against its compute
+# blocks, threaded from ParallelCtx/AttentionPlanConfig down to the ring
+# programs and the simulator's step-cost model:
+#   serial  - every permute completes before the step's blocks run (an
+#             optimization barrier pins it on the critical path): the naive
+#             ppermute-then-compute baseline, cost = comm + compute per step.
+#   overlap - permutes issued at step start stay in flight during the step's
+#             blocks and deliver at step end (double-buffered slots), cost =
+#             max(comm, compute) + the exposed launch residual.
+#   bidir   - overlap, plus every hop's payload is split into a half-payload
+#             ppermute pair so both ring directions of the link carry traffic
+#             (TokenRing, PAPERS.md): same bytes, per-direction bandwidth.
+# All three modes execute the SAME schedule and are bitwise-equal: only the
+# transport routing and the modeled step cost differ.
+COMM_OVERLAP_MODES = ("serial", "overlap", "bidir")
+
+
+def validate_comm_overlap(mode: str) -> str:
+    if mode not in COMM_OVERLAP_MODES:
+        raise ValueError(
+            f"unknown comm_overlap {mode!r}; expected "
+            + " | ".join(COMM_OVERLAP_MODES)
+        )
+    return mode
+
 
 # communication op kinds
 RECV_Q = "recv_q"

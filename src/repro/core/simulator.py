@@ -2,11 +2,22 @@
 
 Because every device in Mesh-Attention executes the identical lock-step
 schedule (paper §3.2: the wrap-around mesh is fully symmetric), simulating a
-single device's timeline yields the system's timeline.  A step's duration is
-``max(comm, compute)`` — communication issued at step start runs concurrently
-with the step's compute blocks (this models NCCL-stream / XLA
-async-collective overlap); ops on different rings within one step also run
-concurrently (per-ICI-dimension links).
+single device's timeline yields the system's timeline.  The step cost is
+``comm_overlap``-aware (the executor's knob, ``schedule.COMM_OVERLAP_MODES``):
+
+  serial    step = comm + compute (every byte on the critical path, the
+            ppermute-then-compute baseline), exposed = comm;
+  overlap   step = max(payload, compute) + launch residual — communication
+            issued at step start runs concurrently with the step's compute
+            blocks (NCCL-stream / XLA async-collective overlap), only the
+            per-step launch cost α can never hide;
+  bidir     as overlap, with each hop split across both ring directions, so
+            the payload moves at per-direction link bandwidth (half the
+            transfer time for the same bytes; ``make_cost_model`` bakes the
+            halving into ``t_chunk``).
+
+Ops on different rings within one step always run concurrently
+(per-ICI-dimension links).
 
 The simulator powers:
   * the (a, b) autotuner (`core/autotune.py`),
@@ -42,8 +53,9 @@ class CostModel:
     """Seconds per compute block and per chunk transfer."""
 
     t_block: float
-    t_chunk: Dict[str, float]  # comm-op kind -> seconds
+    t_chunk: Dict[str, float]  # comm-op kind -> seconds (launch cost included)
     block_flops: float
+    t_launch: float = 0.0  # per-step comm issue cost (α) — never hidden
 
     def profile(self) -> S.Profile:
         """Convert to the scheduler's c_* constants (blocks per transfer)."""
@@ -79,6 +91,7 @@ def make_cost_model(
     causal: bool = False,
     backward: bool = False,
     mask=None,  # Optional[MaskSpec]: supersedes the causal flag
+    comm_overlap: str = "overlap",
 ) -> CostModel:
     """α-β cost model for one (N, d, n) attention call.
 
@@ -88,7 +101,13 @@ def make_cost_model(
     visible fraction (0.5 for plain causal; striping balances the saving
     across all blocks — paper §3.7; the Pallas kernels skip fully-masked
     sub-blocks with ``pl.when``, recovering it block-wise).
+
+    ``comm_overlap="bidir"`` halves the per-hop transfer time: the executor
+    ships each chunk as a half-payload ppermute pair over both ring
+    directions, so each half moves at full per-direction link bandwidth
+    concurrently (the pair shares one launch).  Total bytes are unchanged.
     """
+    S.validate_comm_overlap(comm_overlap)
     m = comm.batch * comm.seq / comm.n
     flops = 4.0 * m * m * comm.hidden
     if backward:
@@ -98,7 +117,8 @@ def make_cost_model(
     elif causal:
         flops *= 0.5
     t_block = flops / (hw.peak_flops * hw.attn_efficiency)
-    t = lambda kind: hw.latency + comm.chunk_bytes(kind) / hw.link_bw
+    eff_bw = hw.link_bw * (2.0 if comm_overlap == "bidir" else 1.0)
+    t = lambda kind: hw.latency + comm.chunk_bytes(kind) / eff_bw
     t_chunk = {
         S.RECV_Q: t("q"),
         S.RECV_KV: t("kv"),
@@ -107,7 +127,9 @@ def make_cost_model(
         S.SEND_DQ: t("dq"),
         S.SEND_DKV: t("dkv"),
     }
-    return CostModel(t_block=t_block, t_chunk=t_chunk, block_flops=flops)
+    return CostModel(
+        t_block=t_block, t_chunk=t_chunk, block_flops=flops, t_launch=hw.latency
+    )
 
 
 _KIND_TO_CHUNK = {
@@ -120,8 +142,21 @@ _KIND_TO_CHUNK = {
 }
 
 
-def simulate(sched: S.Schedule, cost: CostModel, comm: Optional[CommModel] = None) -> SimResult:
-    """Walk the lock-step schedule: step time = max(slowest ring op, compute)."""
+def simulate(
+    sched: S.Schedule,
+    cost: CostModel,
+    comm: Optional[CommModel] = None,
+    comm_overlap: str = "overlap",
+) -> SimResult:
+    """Walk the lock-step schedule with the mode-dependent step cost.
+
+    ``serial``: step = comm + compute, every transfer fully exposed.
+    ``overlap``/``bidir``: step = max(payload, compute) + launch residual;
+    exposed = the payload time compute could not cover, plus the residual.
+    (``bidir`` also needs a ``make_cost_model(comm_overlap="bidir")`` cost so
+    ``t_chunk`` reflects per-direction bandwidth.)
+    """
+    S.validate_comm_overlap(comm_overlap)
     total = 0.0
     compute_time = 0.0
     comm_time = 0.0
@@ -130,10 +165,16 @@ def simulate(sched: S.Schedule, cost: CostModel, comm: Optional[CommModel] = Non
     for step in sched.steps:
         t_comm = max((cost.t_chunk[c] for c in step.comms), default=0.0)
         t_comp = len(step.compute) * cost.t_block
-        total += max(t_comm, t_comp)
+        if comm_overlap == "serial":
+            total += t_comm + t_comp
+            exposed += t_comm
+        else:
+            resid = min(cost.t_launch, t_comm) if step.comms else 0.0
+            payload = t_comm - resid
+            total += max(payload, t_comp) + resid
+            exposed += max(0.0, payload - t_comp) + resid
         compute_time += t_comp
         comm_time += sum(cost.t_chunk[c] for c in step.comms)
-        exposed += max(0.0, t_comm - t_comp)
         if comm is not None:
             comm_bytes += sum(comm.chunk_bytes(_KIND_TO_CHUNK[c]) for c in step.comms)
     return SimResult(

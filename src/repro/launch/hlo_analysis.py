@@ -13,6 +13,14 @@ converted to per-device wire bytes with ring-algorithm conventions:
 
 g = collective group size parsed from replica_groups.  Hardware constants
 (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s per ICI link.
+
+Each op kind also gets an ``<op>-count`` entry (number of HLO ops of that
+kind).  Under ``comm_overlap="bidir"`` the mesh executors ship every logical
+ring hop as a PAIR of half-payload collective-permutes: the pair's bytes sum
+to exactly one hop's traffic (so the byte totals here stay mode-invariant and
+comparable to theory), but the raw op count doubles — collapse it with
+``core.am.logical_ppermute_steps`` before comparing against schedule step
+counts, so a pair is one logical step, not two.
 """
 
 from __future__ import annotations
@@ -62,8 +70,9 @@ def _group_size(line: str) -> int:
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, float]:
-    """Per-device wire bytes by op kind (+ 'total')."""
+    """Per-device wire bytes by op kind (+ 'total', + '<op>-count' op tallies)."""
     out: Dict[str, float] = {op: 0.0 for op in _OPS}
+    counts: Dict[str, int] = {op: 0 for op in _OPS}
     for line in hlo_text.splitlines():
         stripped = line.strip()
         if " = " not in stripped:
@@ -97,7 +106,10 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
         else:  # collective-permute: payload crosses one link
             wire = payload
         out[op] += wire
+        counts[op] += 1
     out["total"] = sum(out[op] for op in _OPS)
+    for op in _OPS:
+        out[f"{op}-count"] = counts[op]
     return out
 
 

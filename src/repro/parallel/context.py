@@ -30,6 +30,9 @@ class ParallelCtx:
     mesh_a: Optional[int] = None  # tile height; None -> divisor closest to sqrt(n)
     allow_concurrent_rings: bool = False
     bwd_wire: str = "qdod"
+    comm_overlap: str = "overlap"  # ring transport: serial (permutes barriered
+    # ahead of the blocks) | overlap (in flight during them, default) | bidir
+    # (half-payload ppermute pairs over both ring directions); bitwise-equal
     block_q: int = 128
     block_kv: int = 128
     attn_autotune: bool = False  # pick (a, b) + schedules via the simulator

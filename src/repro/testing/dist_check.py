@@ -945,6 +945,105 @@ def dataclasses_replace_schedules(cfg):
     )
 
 
+def check_overlap_exact():
+    """comm_overlap modes are BITWISE-equal transports: on the 8-fake-device
+    (2, 4) mesh, serial vs overlap vs bidir produce identical forward outputs
+    AND identical gradients — for the plain causal striped ring, for a
+    mask-PRUNED contiguous document schedule (seg tuples on the wire,
+    paper-wire odoq backward), and for the Algorithm-1 collective mode."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core import schedule as Sch
+    from repro.core.masking import MaskSpec
+    from repro.core.mesh_attention import MeshAttentionConfig, mesh_attention
+    from repro.core.mesh_attention_collective import mesh_attention_collective
+
+    n = 4
+    mesh = jax.make_mesh((2, 4), ("data", "sp"))
+    B, S, H, Hkv, D = 2, 64, 4, 2, 8
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(57), 3)
+    q = jax.random.normal(kq, (B, S, H, D))
+    k = jax.random.normal(kk, (B, S, Hkv, D))
+    v = jax.random.normal(kv, (B, S, Hkv, D))
+    spec = MaskSpec.document((32, 32))
+    seg = jnp.asarray(spec.segment_array(S))
+
+    cases = {
+        "causal_striped": (
+            MeshAttentionConfig(axis_name="sp", n=n, a=2, causal=True,
+                                layout="striped", block_q=8, block_kv=8),
+            None,
+        ),
+        "doc_pruned_odoq": (
+            MeshAttentionConfig(axis_name="sp", n=n, a=2, mask=spec,
+                                layout="contiguous", bwd_wire="odoq",
+                                block_q=8, block_kv=8),
+            seg,
+        ),
+    }
+    # the pruned case must actually exercise a pruned schedule
+    fwd_sched, _ = cases["doc_pruned_odoq"][0].schedules(S)
+    assert fwd_sched.skip, "document mask should prune blocks"
+
+    detail = {}
+    for name, (cfg, seg_in) in cases.items():
+        outs, grads = {}, {}
+        for mode in Sch.COMM_OVERLAP_MODES:
+            c = dataclasses.replace(cfg, comm_overlap=mode)
+            if seg_in is None:
+                f = shard_map(
+                    lambda q, k, v, c=c: mesh_attention(q, k, v, c),
+                    mesh=mesh, in_specs=(P("data", "sp"),) * 3,
+                    out_specs=P("data", "sp"), check_vma=False,
+                )
+                outs[mode] = jax.jit(f)(q, k, v)
+                loss = lambda q, k, v, f=f: jnp.sum(jnp.sin(f(q, k, v)))
+                grads[mode] = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))(q, k, v)
+            else:
+                f = shard_map(
+                    lambda q, k, v, s, c=c: mesh_attention(q, k, v, c, seg=s),
+                    mesh=mesh, in_specs=(P("data", "sp"),) * 3 + (P("sp"),),
+                    out_specs=P("data", "sp"), check_vma=False,
+                )
+                outs[mode] = jax.jit(f)(q, k, v, seg_in)
+                loss = lambda q, k, v, f=f: jnp.sum(jnp.sin(f(q, k, v, seg_in)))
+                grads[mode] = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))(q, k, v)
+        for mode in ("overlap", "bidir"):
+            assert (np.asarray(outs[mode]) == np.asarray(outs["serial"])).all(), (
+                f"{name}: {mode} fwd != serial bitwise"
+            )
+            for g_m, g_s in zip(grads[mode], grads["serial"]):
+                assert (np.asarray(g_m) == np.asarray(g_s)).all(), (
+                    f"{name}: {mode} grad != serial bitwise"
+                )
+        detail[name] = {"modes": list(Sch.COMM_OVERLAP_MODES), "bitwise": True}
+
+    # Algorithm-1 collective mode: the knob maps onto the group all-gathers
+    mesh2d = jax.make_mesh((2, 4), ("aq", "akv"))
+    col_outs = {}
+    for mode in Sch.COMM_OVERLAP_MODES:
+        fcol = shard_map(
+            lambda q, k, v, m=mode: mesh_attention_collective(
+                q, k, v, "aq", "akv", causal=True, block_q=8, block_kv=8,
+                comm_overlap=m,
+            ),
+            mesh=mesh2d, in_specs=(P(None, ("aq", "akv")),) * 3,
+            out_specs=P(None, ("aq", "akv")), check_vma=False,
+        )
+        col_outs[mode] = jax.jit(fcol)(q, k, v)
+    for mode in ("overlap", "bidir"):
+        assert (np.asarray(col_outs[mode]) == np.asarray(col_outs["serial"])).all(), (
+            f"collective: {mode} != serial bitwise"
+        )
+    detail["collective"] = {"modes": list(Sch.COMM_OVERLAP_MODES), "bitwise": True}
+    return detail
+
+
 def check_packed_prefill():
     """Packed serve prefill on a (2, 4) mesh: several same-tick prompts share
     ONE prefill row under a document mask, each document's K/V scattered into
@@ -1180,6 +1279,7 @@ CHECKS = {
     "pipeline": check_pipeline_parallel,
     "dispatch": check_dispatch_seam,
     "mask_prune": check_mask_prune,
+    "overlap_exact": check_overlap_exact,
     "packed_prefill": check_packed_prefill,
     "paged_serve": check_paged_serve,
     "continuous_prefill": check_continuous_prefill,

@@ -83,6 +83,13 @@ def test_mask_pruning_and_packed_prefill():
     _run_checks("mask_prune", "packed_prefill")
 
 
+def test_overlap_modes_bitwise_exact():
+    """comm_overlap = serial | overlap | bidir are bitwise-equal transports
+    on the (2,4) mesh — fwd AND grads, masked/pruned schedules and the
+    Algorithm-1 collective mode included."""
+    _run_checks("overlap_exact")
+
+
 def test_paged_serve():
     """Paged KV cache on a (2,4) mesh: block-table decode/update must be
     token-for-token identical to the dense engine on the streaming trace,

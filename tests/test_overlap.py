@@ -1,0 +1,179 @@
+"""comm_overlap (serial | overlap | bidir) cost-model + accounting properties.
+
+The bitwise equality of the three transports is checked on fake devices in
+``repro.testing.dist_check overlap_exact`` (tests/test_distributed.py); here
+we pin the single-process contracts:
+
+  * overlapped step cost <= serial step cost, with equality exactly when the
+    step's communication payload or its compute is zero;
+  * bidir prices transfers at per-direction bandwidth (same bytes, smaller
+    transfer time -> smaller scheduler Profile constants);
+  * the three modes never share a plan-cache entry;
+  * HLO collective-permute accounting: a bidirectional half-payload pair is
+    one logical step's traffic (bytes summed, steps not double-counted).
+"""
+
+import dataclasses
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import am
+from repro.core import schedule as S
+from repro.core.dispatch import AttentionPlanConfig, _plan_key
+from repro.core.mesh_attention import MeshAttentionConfig
+from repro.core.simulator import CostModel, HardwareModel, make_cost_model, simulate
+from repro.launch.hlo_analysis import collective_bytes
+
+
+def _geom(n, a, seq_mult, hidden):
+    comm = am.CommModel(seq=n * seq_mult, hidden=hidden, n=n, kv_hidden=hidden // 2)
+    sched = S.greedy_forward_schedule(a, n // a)
+    return comm, sched
+
+
+@given(
+    st.sampled_from([(4, 1), (4, 2), (8, 2), (8, 4), (16, 4)]),
+    st.integers(1, 64),
+    st.sampled_from([64, 256, 1024]),
+)
+@settings(max_examples=60, deadline=None)
+def test_overlap_cost_never_exceeds_serial(na, seq_mult, hidden):
+    """Per step, serial - overlap = min(payload, compute) >= 0; summed over
+    the schedule the overlapped total can never exceed the serial total."""
+    n, a = na
+    comm, sched = _geom(n, a, seq_mult, hidden)
+    hw = HardwareModel()
+    cost = make_cost_model(comm, hw, comm_overlap="overlap")
+    r_serial = simulate(sched, cost, comm, comm_overlap="serial")
+    r_overlap = simulate(sched, cost, comm, comm_overlap="overlap")
+    assert r_overlap.total <= r_serial.total + 1e-15
+    assert r_overlap.exposed_comm <= r_serial.exposed_comm + 1e-15
+    # same schedule, same cost model -> identical bytes and compute
+    assert r_overlap.comm_bytes == r_serial.comm_bytes == comm.fwd_bytes(a)
+    assert r_overlap.compute == r_serial.compute
+
+    # bidir: same bytes move at per-direction bandwidth -> <= overlap
+    cost_bi = make_cost_model(comm, hw, comm_overlap="bidir")
+    r_bidir = simulate(sched, cost_bi, comm, comm_overlap="bidir")
+    assert r_bidir.total <= r_overlap.total + 1e-15
+    assert r_bidir.comm_bytes == r_overlap.comm_bytes
+
+
+def test_overlap_equals_serial_iff_comm_or_compute_zero():
+    """Equality holds exactly when every step's payload or compute is zero."""
+    sched = S.greedy_forward_schedule(2, 2)
+    zero_comm = {k: 0.0 for k in
+                 (S.RECV_Q, S.RECV_KV, S.SEND_O, S.RECV_ODOQ, S.SEND_DQ, S.SEND_DKV)}
+
+    # no communication time at all -> both modes are pure compute
+    c = CostModel(t_block=1.0, t_chunk=zero_comm, block_flops=1.0, t_launch=0.0)
+    assert (simulate(sched, c, comm_overlap="overlap").total
+            == simulate(sched, c, comm_overlap="serial").total)
+
+    # no compute time -> nothing can hide the payload, totals equal
+    some_comm = {k: 2.0 for k in zero_comm}
+    c = CostModel(t_block=0.0, t_chunk=some_comm, block_flops=0.0, t_launch=0.0)
+    assert (simulate(sched, c, comm_overlap="overlap").total
+            == simulate(sched, c, comm_overlap="serial").total)
+
+    # both nonzero on at least one step -> overlap is STRICTLY cheaper
+    c = CostModel(t_block=1.0, t_chunk=some_comm, block_flops=1.0, t_launch=0.0)
+    assert any(s.comms and s.compute for s in sched.steps)
+    assert (simulate(sched, c, comm_overlap="overlap").total
+            < simulate(sched, c, comm_overlap="serial").total)
+
+
+def test_launch_residual_is_never_hidden():
+    """The per-step issue cost alpha stays on the critical path even when
+    compute fully covers the payload."""
+    sched = S.greedy_forward_schedule(2, 2)
+    comm_steps = sum(1 for s in sched.steps if s.comms)
+    t_chunk = {k: 0.5 for k in
+               (S.RECV_Q, S.RECV_KV, S.SEND_O, S.RECV_ODOQ, S.SEND_DQ, S.SEND_DKV)}
+    alpha = 0.25
+    c = CostModel(t_block=100.0, t_chunk=t_chunk, block_flops=1.0, t_launch=alpha)
+    r = simulate(sched, c, comm_overlap="overlap")
+    # compute dominates every step; only the residual is exposed
+    assert r.exposed_comm == pytest.approx(alpha * comm_steps)
+    assert r.total == pytest.approx(r.compute + alpha * comm_steps)
+
+
+def test_bidir_shrinks_profile_constants():
+    """Per-direction bandwidth halves transfer time -> every scheduler
+    Profile constant strictly shrinks (the greedy generator then co-schedules
+    fewer blocks per transfer)."""
+    comm = am.CommModel(seq=4096, hidden=512, n=8)
+    hw = HardwareModel()
+    p_over = make_cost_model(comm, hw, comm_overlap="overlap").profile()
+    p_bi = make_cost_model(comm, hw, comm_overlap="bidir").profile()
+    for f in dataclasses.fields(p_over):
+        assert getattr(p_bi, f.name) < getattr(p_over, f.name)
+
+
+def test_plan_cache_key_distinct_per_mode():
+    """The three modes price steps differently, so tuned plans must never
+    share a cache entry."""
+    comm = am.CommModel(seq=4096, hidden=512, n=8)
+    hw = HardwareModel()
+    keys, descs = {}, {}
+    for mode in S.COMM_OVERLAP_MODES:
+        cfg = AttentionPlanConfig(backend="mesh", axis_name="sp", n=8, a=2,
+                                  comm_overlap=mode)
+        keys[mode], descs[mode] = _plan_key(cfg, comm, hw)
+        assert descs[mode]["v"] == 4
+        assert descs[mode]["comm_overlap"] == mode
+    assert len(set(keys.values())) == 3
+
+
+def test_invalid_mode_rejected_everywhere():
+    comm = am.CommModel(seq=64, hidden=8, n=4)
+    sched = S.greedy_forward_schedule(2, 2)
+    cost = make_cost_model(comm)
+    with pytest.raises(ValueError, match="comm_overlap"):
+        S.validate_comm_overlap("sideways")
+    with pytest.raises(ValueError, match="comm_overlap"):
+        MeshAttentionConfig(axis_name="sp", n=4, a=2, comm_overlap="sideways")
+    with pytest.raises(ValueError, match="comm_overlap"):
+        AttentionPlanConfig(comm_overlap="sideways")
+    with pytest.raises(ValueError, match="comm_overlap"):
+        make_cost_model(comm, comm_overlap="sideways")
+    with pytest.raises(ValueError, match="comm_overlap"):
+        simulate(sched, cost, comm_overlap="sideways")
+
+
+# --------------------------------------------------------------------------
+# collective-permute accounting (satellite: pair = one logical step)
+# --------------------------------------------------------------------------
+
+
+def test_ppermute_pair_factor():
+    assert am.ppermute_pair_factor("serial") == 1
+    assert am.ppermute_pair_factor("overlap") == 1
+    assert am.ppermute_pair_factor("bidir") == 2
+    with pytest.raises(ValueError):
+        am.ppermute_pair_factor("sideways")
+
+
+def test_logical_ppermute_steps_collapses_pairs():
+    assert am.logical_ppermute_steps(6, "overlap") == 6
+    assert am.logical_ppermute_steps(6, "bidir") == 3
+    with pytest.raises(ValueError, match="half-payload pairs"):
+        am.logical_ppermute_steps(5, "bidir")
+
+
+def test_collective_bytes_counts_and_pair_bytes_sum():
+    """A bidir half-payload pair doubles the op count but its bytes sum to
+    exactly one full hop; collapsing the count recovers the logical steps."""
+    full = "  %p = f32[2,64,4,8]{3,2,1,0} collective-permute(%x), source_target_pairs={{0,1}}\n"
+    half = ("  %pa = f32[2,64,4,4]{3,2,1,0} collective-permute(%x1), source_target_pairs={{0,1}}\n"
+            "  %pb = f32[2,64,4,4]{3,2,1,0} collective-permute(%x2), source_target_pairs={{0,1}}\n")
+    uni = collective_bytes("HloModule m\n" + full * 3)
+    bi = collective_bytes("HloModule m\n" + half * 3)
+    assert uni["collective-permute-count"] == 3
+    assert bi["collective-permute-count"] == 6
+    assert uni["collective-permute"] == bi["collective-permute"]  # bytes summed
+    assert (am.logical_ppermute_steps(uni["collective-permute-count"], "overlap")
+            == am.logical_ppermute_steps(bi["collective-permute-count"], "bidir")
+            == 3)
