@@ -9,7 +9,7 @@ measurement on accelerators) and writes JSON next to the table-2 results in
 ``benchmarks/results/serve_bench.json`` so the perf trajectory accumulates
 per commit (same convention as ``table2_comm_volume.json``).
 
-Three comparison sections ride along in the payload:
+Four comparison sections ride along in the payload:
 
   * ``pack_planner`` — the same bursty trace under the greedy vs the
     bin-packing ``Scheduler.pack_groups`` planner: padded prefill tokens and
@@ -25,6 +25,11 @@ Three comparison sections ride along in the payload:
     short requests, reported as multiples of a quiet (no-burst) trace.
     ``--check-bursty-p95 MULT`` exits nonzero if the chunked bursty p95
     exceeds MULT x the quiet p95 — the CI latency-bound gate.
+  * ``speculative`` — spec_k ∈ {0, 2, 4} on a repetitive trace (greedy
+    decode loops, prompt-lookup drafts accepted: tokens/s multiplies) and a
+    random trace (drafts rejected, per-slot drafting suspends via
+    ``spec_max_misses``: tokens/s stays ~baseline), with inter-token
+    percentiles and acceptance/rollback counters per cell.
 """
 
 from __future__ import annotations
@@ -84,11 +89,16 @@ def _ttft(reqs, tick_s):
     return {"p50": _pct(vals, 50), "p95": _pct(vals, 95)}
 
 
-def _replay_ticks(eng, prompts, arrivals, new_tokens):
+def _replay_ticks(eng, prompts, arrivals, new_tokens, waves=1):
     """Like ``_replay`` but records per-tick wall times so inter-token
     latency can be measured rather than averaged.  Returns
     (requests, walls, base_tick): ``walls[i]`` is the wall time of absolute
-    tick ``base_tick + i``."""
+    tick ``base_tick + i``.
+
+    ``waves > 1`` replays the identical trace that many times after warmup
+    and keeps the fastest replay (smallest total wall): each wave is the
+    same deterministic workload, so min-wall filters scheduler stalls and
+    CPU-frequency dips that would otherwise make single-wave cells noisy."""
     import time
 
     def submit():
@@ -100,14 +110,19 @@ def _replay_ticks(eng, prompts, arrivals, new_tokens):
 
     submit()
     eng.run()  # warmup: compiles every launch shape the timed pass hits
-    base = eng._tick
-    rids = submit()
-    walls = []
-    while eng.has_work:
-        t0 = time.perf_counter()
-        eng.step()
-        walls.append(time.perf_counter() - t0)
-    return [eng._finished[r] for r in rids], walls, base
+    best = None
+    for _ in range(max(1, waves)):
+        base = eng._tick
+        rids = submit()
+        walls = []
+        while eng.has_work:
+            t0 = time.perf_counter()
+            eng.step()
+            walls.append(time.perf_counter() - t0)
+        run = ([eng._finished[r] for r in rids], walls, base)
+        if best is None or sum(walls) < sum(best[1]):
+            best = run
+    return best
 
 
 def _inter_token_gaps(reqs, walls, base):
@@ -191,6 +206,99 @@ def bench_continuous_prefill(
         out[name]["inter_token_p95_vs_quiet"] = (
             (out[name]["inter_token_s"]["p95"] or 0.0) / quiet_p95
         )
+    return out
+
+
+def bench_speculative(
+    cfg, *, weight_seed=5, seed=0, slots=4, new_tokens=256, max_seq=320,
+    spec_ks=(0, 2, 4),
+):
+    """Speculative decode grid: spec_k x {repetitive, random} traces on the
+    PAGED engine (so page-level rollback is exercised and counted).
+
+      * ``repetitive`` — every prompt is a constant token run, and the
+        reduced model's greedy decode settles into short verbatim loops that
+        prompt-lookup drafting predicts: the high-acceptance regime.  Runs
+        with ``spec_max_misses=None`` (the trace never goes permanently
+        cold, so suspension would only cut the win).
+      * ``random``     — i.i.d. random prompts: the low-acceptance regime.
+        Runs with the default miss cap so per-slot drafting suspends after
+        a few dry verify ticks and throughput degrades to ~baseline
+        instead of paying a verify launch every tick.
+
+    Weights come from a section-local seed: acceptance on a RANDOM-INIT
+    reduced model depends on which weight draw's greedy decode happens to
+    loop, and this section measures the engine's commit win at a given
+    acceptance rate, not model quality — so it pins a draw whose decode is
+    sustainably repetitive (~0.7 acceptance at spec_k=4).
+
+    Per cell: decode tokens/s, inter-token p50/p95 (multi-token commits land
+    same-tick, so accepted tokens show a 0-gap), acceptance + rollback
+    counters; per trace: tokens/s as a multiple of that trace's spec_k=0
+    baseline.
+
+    Timing protocol: each trace's cells run in ROUNDS — one timed replay
+    per spec_k, round-robin, repeated ``rounds`` times on long-lived
+    engines — and the headline ratio is the MEDIAN of the per-round
+    ``tokens/s(k) / tokens/s(k0)``.  Host-load drift on a shared CPU moves
+    whole rounds, not single cells, so ratios taken within a round are
+    stable where a once-per-cell measurement can swing tens of percent."""
+    import jax
+    import numpy as np
+
+    from repro.models import transformer as tfm
+    from repro.serve.config import ServeConfig
+    from repro.serve.engine import ServeEngine
+
+    rounds = 5
+    params = tfm.init_params(cfg, jax.random.PRNGKey(weight_seed))
+    rng = np.random.default_rng(seed)
+    traces = {
+        "repetitive": ([np.full(32, 7, np.int32) for _ in range(slots)], None),
+        "random": ([rng.integers(1, cfg.vocab_size, (32,), dtype=np.int32)
+                    for _ in range(slots)], 4),
+    }
+    out = {"spec_ks": list(spec_ks), "new_tokens": new_tokens, "rounds": rounds}
+    for trace, (prompts, max_misses) in traces.items():
+        section = {"spec_max_misses": max_misses}
+        engines = {
+            k: ServeEngine(cfg, params, serve=ServeConfig(
+                max_seq=max_seq, num_slots=slots, paged=True,
+                spec_k=k, spec_max_misses=max_misses,
+            ))
+            for k in spec_ks
+        }
+        runs = {k: [] for k in spec_ks}  # per round: (tps, reqs, walls, base)
+        for _ in range(rounds):
+            for k in spec_ks:
+                reqs, walls, base = _replay_ticks(
+                    engines[k], prompts, [0] * len(prompts), new_tokens
+                )
+                tokens = sum(len(r.generated) for r in reqs)
+                runs[k].append((tokens / max(sum(walls), 1e-9), reqs, walls, base))
+        for k in spec_ks:
+            tps, reqs, walls, base = max(runs[k], key=lambda r: r[0])
+            gaps = _inter_token_gaps(reqs, walls, base)
+            stats = engines[k].kv_cache_stats()
+            section[f"k{k}"] = {
+                "ticks": len(walls),
+                "wall_s": sum(walls),
+                "tokens_per_s": tps,
+                "inter_token_s": {"p50": _pct(gaps, 50), "p95": _pct(gaps, 95)},
+                "spec_accept_rate": stats["spec_accept_rate"],
+                "spec_proposed": stats["spec_proposed"],
+                "spec_accepted": stats["spec_accepted"],
+                "spec_rolled_back_pages": stats["spec_rolled_back_pages"],
+                "verify_launches": stats["verify_launches"],
+            }
+        k0 = spec_ks[0]
+        for k in spec_ks[1:]:
+            ratios = sorted(
+                sk[0] / max(s0[0], 1e-9)
+                for sk, s0 in zip(runs[k], runs[k0])
+            )
+            section[f"k{k}"]["tokens_per_s_vs_k0"] = ratios[len(ratios) // 2]
+        out[trace] = section
     return out
 
 
@@ -391,6 +499,7 @@ def run_bench(
             cfg, params, seed=seed, long_len=long_len,
             chunk=prefill_chunk, budget=tick_token_budget,
         )
+        payload["speculative"] = bench_speculative(cfg, seed=seed)
     return payload
 
 
@@ -433,6 +542,17 @@ def main(argv=None) -> int:
         summary["bursty_p95_vs_quiet"] = {
             "one_shot": cp["one_shot"]["inter_token_p95_vs_quiet"],
             "chunked": cp["chunked"]["inter_token_p95_vs_quiet"],
+        }
+    if "speculative" in payload:
+        sp = payload["speculative"]
+        summary["spec_tokens_per_s_vs_k0"] = {
+            trace: {f"k{k}": round(sp[trace][f"k{k}"]["tokens_per_s_vs_k0"], 3)
+                    for k in sp["spec_ks"][1:]}
+            for trace in ("repetitive", "random")
+        }
+        summary["spec_accept_rate_k4"] = {
+            trace: sp[trace]["k4"]["spec_accept_rate"]
+            for trace in ("repetitive", "random")
         }
     print(json.dumps(summary))
     if args.check_bursty_p95 is not None:

@@ -62,6 +62,17 @@ def main():
     ap.add_argument("--tick-token-budget", type=int, default=None,
                     help="cap decode+prefill-chunk tokens per tick "
                          "(requires --prefill-chunk)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decode: verify up to this many tokens "
+                         "per slot per tick (0 disables; needs >= 2)")
+    ap.add_argument("--spec-draft", default="ngram", choices=("ngram", "off"),
+                    help="draft proposer for speculative decode")
+    ap.add_argument("--spec-max-misses", type=int, default=4,
+                    help="suspend a slot's drafting after this many "
+                         "consecutive zero-accept verify ticks (0 = never)")
+    ap.add_argument("--check-spec-identical", action="store_true",
+                    help="replay the --stream trace again with spec_k=0 and "
+                         "exit nonzero unless every token stream matches")
     args = ap.parse_args()
 
     if args.fake_devices:
@@ -90,29 +101,44 @@ def main():
     else:
         ctx = ParallelCtx()
     params = tfm.init_params(cfg, jax.random.PRNGKey(0), ctx=ctx)
-    serve = ServeConfig(
-        max_seq=args.max_seq, num_slots=args.slots, paged=args.paged,
-        page_size=args.page_size, num_pages=args.num_pages,
-        decode_kernel=args.decode_kernel, prefill_chunk=args.prefill_chunk,
-        tick_token_budget=args.tick_token_budget,
-    )
-    eng = ServeEngine(cfg, params, ctx=ctx, serve=serve)
+    def make_serve(spec_k):
+        return ServeConfig(
+            max_seq=args.max_seq, num_slots=args.slots, paged=args.paged,
+            page_size=args.page_size, num_pages=args.num_pages,
+            decode_kernel=args.decode_kernel, prefill_chunk=args.prefill_chunk,
+            tick_token_budget=args.tick_token_budget,
+            spec_k=spec_k, spec_draft=args.spec_draft,
+            spec_max_misses=args.spec_max_misses or None,
+        )
+
+    eng = ServeEngine(cfg, params, ctx=ctx, serve=make_serve(args.spec_k))
     rng = np.random.default_rng(0)
 
     if args.stream:
         trace = _parse_trace(args.trace)
-        for ln, tick in trace:
-            prompt = rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32)
-            eng.submit(prompt, max_new_tokens=args.new_tokens, arrival_tick=tick)
-        ticks = 0
-        while eng.has_work:
-            for req in eng.step():
-                print(
-                    f"rid={req.rid} len={len(req.prompt)} slot={req.slot} "
-                    f"arrived@{req.arrival_tick} admitted@{req.admit_tick} "
-                    f"finished@{req.finish_tick}: {req.generated}"
-                )
-            ticks += 1
+        prompts = [
+            rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32)
+            for ln, _ in trace
+        ]
+
+        def replay(engine, quiet=False):
+            rids = [
+                engine.submit(p, max_new_tokens=args.new_tokens, arrival_tick=tick)
+                for p, (_, tick) in zip(prompts, trace)
+            ]
+            ticks = 0
+            while engine.has_work:
+                for req in engine.step():
+                    if not quiet:
+                        print(
+                            f"rid={req.rid} len={len(req.prompt)} slot={req.slot} "
+                            f"arrived@{req.arrival_tick} admitted@{req.admit_tick} "
+                            f"finished@{req.finish_tick}: {req.generated}"
+                        )
+                ticks += 1
+            return rids, ticks
+
+        rids, ticks = replay(eng)
         summary = {
             "requests": len(trace),
             "ticks": ticks,
@@ -125,9 +151,37 @@ def main():
             summary["chunk_launches"] = eng.chunk_launches
             summary["prefill_tokens"] = int(sum(stats["prefill_tokens"]))
             summary["decode_tokens"] = int(sum(stats["decode_tokens"]))
+        if eng._spec_on:
+            kv = eng.kv_cache_stats()
+            summary["speculative"] = {
+                "spec_k": args.spec_k,
+                "verify_launches": eng.verify_launches,
+                "spec_proposed": eng.spec_proposed,
+                "spec_accepted": eng.spec_accepted,
+                "spec_accept_rate": kv["spec_accept_rate"],
+                "spec_rolled_back_pages": kv.get("spec_rolled_back_pages", 0.0),
+            }
         if args.paged:
             summary["kv_cache"] = eng.kv_cache_stats()
         print(json.dumps(summary))
+        if args.check_spec_identical:
+            # gate: the speculative run above must be token-identical to a
+            # vanilla greedy replay of the exact same trace
+            if not eng._spec_on:
+                print("check-spec-identical needs --spec-k >= 2", file=sys.stderr)
+                return 1
+            ref = ServeEngine(cfg, params, ctx=ctx, serve=make_serve(0))
+            ref_rids, _ = replay(ref, quiet=True)
+            for rid, ref_rid in zip(rids, ref_rids):
+                got = eng._finished[rid].generated
+                want = ref._finished[ref_rid].generated
+                if got != want:
+                    print(
+                        f"check-spec-identical: rid={rid} speculative stream "
+                        f"{got} != vanilla {want}", file=sys.stderr,
+                    )
+                    return 1
+            print(f"check-spec-identical: {len(rids)} streams match vanilla greedy")
         return 0
 
     prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32)

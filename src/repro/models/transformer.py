@@ -44,6 +44,7 @@ __all__ = [
     "prefill_packed",
     "prefill_chunk",
     "decode_step",
+    "verify_step",
     "param_count",
 ]
 
@@ -463,14 +464,38 @@ def prefill_chunk(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache
     attention-only decoder archs (no SSM state, no cross-attention, no
     frontend) — the same restriction packed/paged prefill already has.
     """
+    tokens = batch["tokens"]
+    lens = jnp.asarray(batch["lens"], jnp.int32)
+    pos_set = jnp.asarray(batch["pos_set"], jnp.int32)
+    C = tokens.shape[1]
+    x, new_layer_cache, bt = _chunk_forward(
+        params, cfg, ctx, tokens, batch["starts"], lens, batch["write_starts"],
+        cache,
+    )
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    last = jnp.clip(lens - 1, 0, C - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)  # [B, 1, D]
+    logits = x_last[:, 0] @ head.astype(x.dtype)  # [B, V]
+    new_cache = dict(cache)
+    new_cache.update(new_layer_cache)
+    new_cache["pos"] = jnp.where(pos_set >= 0, pos_set, cache["pos"])
+    if bt is not None:
+        new_cache["bt"] = bt
+    return logits, new_cache
+
+
+def _chunk_forward(params, cfg: ModelConfig, ctx: ParallelCtx, tokens, starts,
+                   lens, write_starts, cache):
+    """Shared core of ``prefill_chunk`` and ``verify_step``: append a
+    [B, C] chunk batch into the live cache through the banded multi-row
+    attention path and return the final-norm hidden states for EVERY chunk
+    position.  Returns ``(x [B, C, D], new_layer_cache, bt)``."""
     if cfg.ssm is not None or cfg.encoder_layers or cfg.frontend is not None:
         raise ValueError("chunked prefill serves attention-only decoder archs")
-    tokens = batch["tokens"]
-    starts = jnp.asarray(batch["starts"], jnp.int32)
-    lens = jnp.asarray(batch["lens"], jnp.int32)
-    write_starts = jnp.asarray(batch["write_starts"], jnp.int32)
-    pos_set = jnp.asarray(batch["pos_set"], jnp.int32)
-    B, C = tokens.shape
+    starts = jnp.asarray(starts, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    write_starts = jnp.asarray(write_starts, jnp.int32)
+    C = tokens.shape[1]
     positions = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     bt = cache.get("bt")  # paged K/V: block table, shared by every layer
     x = jnp.take(params["embed"], tokens, axis=0)
@@ -500,16 +525,65 @@ def prefill_chunk(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache
 
     x, new_layer_cache = _stack_scan(body, x, (params["layers"], layer_cache), ctx)
     x = _final_norm(x, params, cfg)
+    return x, new_layer_cache, bt
+
+
+def verify_step(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
+    """Speculative verify: score K candidate tokens per slot in ONE banded
+    chunk launch and commit the longest accepted prefix in-graph.
+
+    ``batch`` carries fixed-shape [B(=num_slots), K] operands (one jit trace
+    serves every tick):
+
+      * ``tokens`` [B, K] int32 — column 0 is the row's CURRENT token
+        (exactly what vanilla decode would feed this tick), columns
+        ``1 .. K-1`` the proposer's draft
+      * ``starts`` [B] int32 — each row's current cache position (the
+        current token's K/V is written there, as in plain decode)
+      * ``lens``   [B] int32 — 0: inactive row (nothing written, ``pos``
+        unchanged); 1: a plain one-token decode tick; ``k``: verify a
+        ``k-1``-token draft
+      * ``write_starts`` [B] int32 — forwarded to the chunk scatter
+        (normally == starts)
+
+    Greedy longest-accepted-prefix: with ``y[i] = argmax`` of the logits at
+    chunk position i, draft token ``tokens[i+1]`` is ACCEPTED while it
+    equals ``y[i]`` — each accepted position's context is by then fully
+    committed tokens, so ``y[i]`` is bitwise what vanilla decode would have
+    produced at that step.  The committed tokens are ``y[0 .. commit-1]``
+    with ``commit = accepted + 1`` (the output at the last accepted
+    position is always kept: it is vanilla decode's next token whether or
+    not any draft survived).  K/V for positions past the committed prefix
+    is stale speculative data — invisible behind the band (reads stop at
+    ``pos``) and rewritten before ``pos`` ever reaches it; the paged engine
+    additionally frees now-unneeded tail pages (allocator rollback).
+
+    Returns ``(y [B, K] int32, commit [B] int32, new cache)`` with
+    ``pos = starts + commit`` for active rows."""
+    tokens = batch["tokens"]
+    starts = jnp.asarray(batch["starts"], jnp.int32)
+    lens = jnp.asarray(batch["lens"], jnp.int32)
+    B, K = tokens.shape
+    x, new_layer_cache, bt = _chunk_forward(
+        params, cfg, ctx, tokens, starts, lens, batch["write_starts"], cache
+    )
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    last = jnp.clip(lens - 1, 0, C - 1)
-    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)  # [B, 1, D]
-    logits = x_last[:, 0] @ head.astype(x.dtype)  # [B, V]
+    logits = x @ head.astype(x.dtype)  # [B, K, V]
+    y = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B, K]
+    if K > 1:
+        match = (tokens[:, 1:] == y[:, :-1]) & (
+            jnp.arange(1, K, dtype=jnp.int32)[None, :] < lens[:, None]
+        )
+        accepted = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    else:
+        accepted = jnp.zeros((B,), jnp.int32)
+    commit = jnp.where(lens > 0, jnp.minimum(accepted + 1, lens), 0)
     new_cache = dict(cache)
     new_cache.update(new_layer_cache)
-    new_cache["pos"] = jnp.where(pos_set >= 0, pos_set, cache["pos"])
+    new_cache["pos"] = jnp.where(lens > 0, starts + commit, cache["pos"])
     if bt is not None:
         new_cache["bt"] = bt
-    return logits, new_cache
+    return y, commit, new_cache
 
 
 def _cache_scatter_indices(cfg: ModelConfig, S: int, cap: int, n: int):

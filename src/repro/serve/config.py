@@ -29,6 +29,29 @@ The two fields new in this PR drive continuous prefill:
   head-of-line chunk is always granted so prefill cannot starve.  This is
   the TTFT / inter-token-latency bound: no tick's launch size scales with
   the longest pending prompt, only with the budget.
+
+Speculative decode (this PR) adds three more:
+
+* ``spec_k`` — verify up to ``spec_k`` tokens per slot per tick in ONE
+  banded chunk launch (the current token + up to ``spec_k - 1`` drafted
+  tokens).  ``0`` (default) keeps plain one-token decode; ``>= 2`` enables
+  speculation.  Greedy accept/reject commits the longest accepted prefix,
+  so the generated tokens are IDENTICAL to vanilla greedy decode — only
+  how many land per tick changes.
+* ``spec_draft`` — the draft proposer.  ``"ngram"`` (default) is
+  self-speculative prompt-lookup: the longest suffix n-gram of the
+  request's own prompt + generated history is matched against its earlier
+  occurrences and the continuation is the draft — no second model.
+  ``"off"`` disables proposing (every tick degenerates to plain decode).
+* ``spec_max_misses`` — after this many CONSECUTIVE missed verify ticks
+  (any drafted token rejected) a slot suspends drafting for a cooldown of
+  ``16 * spec_max_misses`` ticks, then re-probes with one draft — so
+  low-acceptance traffic degrades to ~baseline cost instead of paying a
+  batch-wide verify launch forever, while a workload that turns repetitive
+  later is re-detected.  Cooldown wake-ups align to a global tick phase so
+  concurrent suspended slots probe in ONE shared launch.  ``None`` never
+  suspends.  The counter resets on a fully-accepted verify tick and at
+  admission.
 """
 
 from __future__ import annotations
@@ -42,6 +65,7 @@ __all__ = ["ServeConfig"]
 
 _DECODE_KERNELS = ("auto", "native", "gather", "band")
 _PACK_PLANS = ("greedy", "binpack")
+_SPEC_DRAFTS = ("ngram", "off")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +86,10 @@ class ServeConfig:
     decode_kernel: str = "auto"  # auto | native | gather | band
     prefill_chunk: Optional[int] = None  # continuous prefill: chunk size
     tick_token_budget: Optional[int] = None  # cap decode+chunk tokens per tick
+    spec_k: int = 0  # speculative decode: tokens verified per slot per tick
+    spec_draft: str = "ngram"  # ngram (prompt-lookup) | off
+    spec_max_misses: Optional[int] = 4  # consecutive missed verify ticks
+    # before a slot's drafting suspends for a cooldown (None = never)
 
     def __post_init__(self):
         if self.max_seq < 1:
@@ -102,6 +130,19 @@ class ServeConfig:
                 raise ValueError(
                     f"tick_token_budget must be >= 1, got {self.tick_token_budget}"
                 )
+        if self.spec_k < 0 or self.spec_k == 1:
+            raise ValueError(
+                f"spec_k must be 0 (off) or >= 2 (current token + drafts), "
+                f"got {self.spec_k}"
+            )
+        if self.spec_draft not in _SPEC_DRAFTS:
+            raise ValueError(
+                f"spec_draft must be one of {_SPEC_DRAFTS}, got {self.spec_draft!r}"
+            )
+        if self.spec_max_misses is not None and self.spec_max_misses < 1:
+            raise ValueError(
+                f"spec_max_misses must be >= 1 or None, got {self.spec_max_misses}"
+            )
 
     @classmethod
     def from_legacy_kwargs(cls, kwargs: dict) -> "ServeConfig":

@@ -42,6 +42,7 @@ from repro.parallel.context import ParallelCtx
 from repro.serve.config import ServeConfig
 from repro.serve.kv_pool import PageAllocator, PagedLayout
 from repro.serve.scheduler import Request, RequestResult, Scheduler, default_buckets
+from repro.serve.speculative import propose_ngram
 
 __all__ = ["ServeEngine"]
 
@@ -128,6 +129,20 @@ class ServeEngine:
                 "continuous prefill serves attention-only decoder archs "
                 "(SSM state / encoder / frontend inputs have no chunk-append)"
             )
+        # speculative decode: verify spec_k tokens per slot per tick through
+        # the chunk-attention machinery; greedy accept/reject keeps tokens
+        # identical to vanilla decode, only the per-tick commit count changes
+        self.spec_k = serve.spec_k
+        self.spec_draft = serve.spec_draft
+        self.spec_max_misses = serve.spec_max_misses
+        self._spec_on = serve.spec_k >= 2 and serve.spec_draft != "off"
+        if self._spec_on and (
+            cfg.ssm is not None or cfg.encoder_layers or cfg.frontend is not None
+        ):
+            raise ValueError(
+                "speculative decode rides the chunk-attention verify path: "
+                "attention-only decoder archs (no SSM / encoder / frontend)"
+            )
         # paged KV: slot rows virtualize over a refcounted physical page pool
         # (serve/kv_pool.py) — memory follows allocated pages, and identical
         # prompt prefixes share pages across requests
@@ -182,6 +197,9 @@ class ServeEngine:
         )
         self._cur = np.zeros((self.num_slots, 1), np.int32)  # last token per slot
         self._depth = np.zeros((self.num_slots,), np.int64)  # host view of pos
+        # per-slot consecutive zero-accept verify ticks (speculative decode:
+        # at spec_max_misses the slot stops drafting; reset on accept/admit)
+        self._spec_misses = np.zeros((self.num_slots,), np.int64)
         self._shared_len = np.zeros((self.num_slots,), np.int64)  # paged prefix
         self._bt_version = -1  # device block table staleness marker
         self.bt_uploads = 0  # device block-table uploads (version-gated:
@@ -194,12 +212,18 @@ class ServeEngine:
         self.prefill_trace_counts: Dict[int, int] = {}
         self.decode_trace_count = 0
         self.chunk_trace_count = 0
+        self.verify_trace_count = 0
         # launch accounting (every call, not just traces): the pack planner's
         # padded-prefill cost is launches x bucket tokens
         self.prefill_launches = 0
         self.prefill_launch_tokens = 0
         self.chunk_launches = 0
         self.chunk_launch_tokens = 0
+        # speculative decode accounting (engine-wide; per-request twins live
+        # on Request/RequestResult)
+        self.verify_launches = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
         # per-tick token series: PROMPT tokens ingested vs tokens GENERATED
         # (kept separate so a prefill-heavy tick cannot inflate decode
         # tokens/s — serve_bench reports both)
@@ -208,6 +232,7 @@ class ServeEngine:
         self._decode = jax.jit(self._decode_traced)
         self._copy_pages = jax.jit(self._copy_pages_traced)
         self._chunk_step = jax.jit(self._chunk_traced)
+        self._verify = jax.jit(self._verify_traced)
 
     # -- jitted paths -------------------------------------------------------
 
@@ -229,6 +254,23 @@ class ServeEngine:
         }
         logits, cache = tfm.prefill_chunk(params, self.cfg, self.ctx, batch, cache)
         return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B]
+
+    def _verify_traced(self, params, cache, tokens, starts, lens):
+        """Speculative verify: ONE fixed-shape [num_slots, spec_k] banded
+        chunk launch scores every row's current token + draft, commits the
+        longest accepted prefix in-graph (pos advances by the commit count),
+        and returns the per-position greedy outputs.  lens=1 rows are
+        exactly a vanilla one-token decode tick riding the same launch;
+        lens=0 rows write nothing and keep their pos."""
+        self.verify_trace_count += 1  # python side effect: trace-time only
+        batch = {
+            "tokens": tokens,
+            "starts": starts,
+            "lens": lens,
+            # verify appends everything it scores: write start == band start
+            "write_starts": starts,
+        }
+        return tfm.verify_step(params, self.cfg, self.ctx, batch, cache)
 
     def _copy_pages_traced(self, cache, src, dst):
         """Copy-on-write: physical page src[i] -> dst[i] in every layer's
@@ -559,6 +601,182 @@ class ServeEngine:
             self._record_first_token(slot, req, int(first_np[slot]), finished)
         return total, len(finishing)
 
+    def _apply_copies(self, copies) -> None:
+        """Run queued CoW page copies through the jitted scatter (fixed
+        [num_slots] operand shape; pad rows carry dst == num_pages which the
+        scatter drops).  Batches of more than num_slots copies launch in
+        waves."""
+        if not copies:
+            return
+        npages = self.allocator.layout.num_pages
+        for off in range(0, len(copies), self.num_slots):
+            wave = copies[off : off + self.num_slots]
+            src = np.zeros((self.num_slots,), np.int32)
+            dst = np.full((self.num_slots,), npages, np.int32)  # dropped
+            for i, (s, d) in enumerate(wave):
+                src[i], dst[i] = s, d
+            self._cache = self._copy_pages(
+                self._cache, jnp.asarray(src), jnp.asarray(dst)
+            )
+
+    def _vanilla_decode_tick(self, decodable, finished) -> int:
+        """One plain decode launch over every decodable slot; returns tokens
+        generated this tick."""
+        if self.paged:
+            # make every decodable slot's write position appendable:
+            # allocate tail pages on chunk boundaries, CoW shared tails
+            copies = []
+            for slot in decodable:
+                cp = self.allocator.ensure_append(slot, int(self._depth[slot]))
+                if cp is not None:
+                    copies.append(cp)
+            self._apply_copies(copies)
+            self._sync_block_table()
+        nxt, self._cache, _ = self._decode(
+            self.params, self._cache, jnp.asarray(self._cur)
+        )
+        nxt_np = np.asarray(nxt)
+        tokens = 0
+        for slot in decodable:
+            self._depth[slot] += 1
+            req = self.scheduler.slots[slot]
+            tok = int(nxt_np[slot, 0])
+            req.generated.append(tok)
+            req.token_ticks.append(self._tick)
+            tokens += 1
+            self._cur[slot, 0] = tok
+            if self._req_done(req, tok):
+                finished.append(self._finish(slot))
+        return tokens
+
+    def _spec_decode_tick(self, decodable, finished, prefill_tokens) -> int:
+        """Speculative tick: draft per slot (prompt-lookup n-gram), verify
+        every decodable row's current token + granted draft in ONE
+        [num_slots, spec_k] banded launch, commit the longest accepted
+        prefix.  Token stream is identical to vanilla greedy decode; only
+        the commit count per tick changes.  Falls back to the plain decode
+        launch when no slot has a granted draft (cold history, drafting
+        suspended after ``spec_max_misses`` dry ticks, or no leftover tick
+        budget) — so low-acceptance traffic degrades to baseline, not
+        below it.  Returns tokens generated this tick."""
+        drafts = {}
+        for slot in decodable:
+            if self.spec_max_misses is not None:
+                m = self._spec_misses[slot]
+                period = 16 * self.spec_max_misses
+                if m >= self.spec_max_misses:
+                    # tripped: suspend drafting until the next global probe
+                    # boundary (negative counter counts the cooldown down).
+                    # Aligning every slot's wake-up to tick % period == 0
+                    # batches probes into ONE shared verify launch — a verify
+                    # tick costs the whole batch, so staggered per-slot
+                    # probes would each bill a full launch for one row.
+                    self._spec_misses[slot] = -(period - self._tick % period)
+                    continue
+                if m < 0:
+                    # cooldown lands on max_misses-1: ONE missed probe
+                    # re-trips immediately, a fully-accepted probe
+                    # re-enables drafting outright
+                    self._spec_misses[slot] = (
+                        self.spec_max_misses - 1 if m == -1 else m + 1
+                    )
+                    continue
+            req = self.scheduler.slots[slot]
+            # cap so the furthest write position stays inside the slot's
+            # reserved capacity: at most max_new_tokens positions past prompt
+            rem = req.max_new_tokens - len(req.generated)
+            k_cap = min(self.spec_k, rem)
+            if k_cap < 2:
+                continue
+            d = propose_ngram(req.prompt, req.generated, k_cap - 1)
+            if d:
+                drafts[slot] = d
+        # draft tokens only spend LEFTOVER tick budget: decode rows and chunk
+        # tokens were planned first, so the PR6 TTFT bound is untouched
+        granted = self.scheduler.plan_spec(drafts, len(decodable), prefill_tokens)
+        granted = {s: d for s, d in granted.items() if d}
+        if not granted:
+            return self._vanilla_decode_tick(decodable, finished)
+        K = self.spec_k
+        B = self.num_slots
+        tokens = np.zeros((B, K), np.int32)
+        starts = np.zeros((B,), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for slot in decodable:
+            d = granted.get(slot, [])
+            tokens[slot, 0] = self._cur[slot, 0]
+            tokens[slot, 1 : 1 + len(d)] = d
+            starts[slot] = self._depth[slot]
+            lens[slot] = 1 + len(d)
+            if d:
+                req = self.scheduler.slots[slot]
+                req.spec_proposed += len(d)
+                self.spec_proposed += len(d)
+        if self.paged:
+            copies = []
+            for slot in decodable:
+                copies.extend(
+                    self.allocator.ensure_span(
+                        slot, int(self._depth[slot]), int(lens[slot])
+                    )
+                )
+            self._apply_copies(copies)
+            self._sync_block_table()
+        self.verify_launches += 1
+        y, commit, self._cache = self._verify(
+            self.params,
+            self._cache,
+            jnp.asarray(tokens),
+            jnp.asarray(starts),
+            jnp.asarray(lens),
+        )
+        y_np = np.asarray(y)
+        commit_np = np.asarray(commit)
+        generated = 0
+        for slot in decodable:
+            req = self.scheduler.slots[slot]
+            committed = int(commit_np[slot])
+            drafted = int(lens[slot]) - 1
+            if drafted:
+                accepted = committed - 1  # draft tokens that matched greedy
+                req.spec_accepted += accepted
+                self.spec_accepted += accepted
+                # a MISS is any verify tick with a rejection: the accept
+                # distribution is bimodal (a live loop verifies fully, a
+                # cold history verifies ~nothing), so full-accept cleanly
+                # splits the regimes — and partial-accept ticks barely pay
+                # for the batch-wide verify launch anyway
+                if accepted == drafted:
+                    self._spec_misses[slot] = 0
+                else:
+                    self._spec_misses[slot] += 1
+            self._depth[slot] += committed
+            done = False
+            for i in range(committed):
+                tok = int(y_np[slot, i])
+                req.generated.append(tok)
+                req.token_ticks.append(self._tick)  # same tick: all one launch
+                generated += 1
+                self._cur[slot, 0] = tok
+                if self._req_done(req, tok):
+                    # EOS (or cap) mid-commit: later accepted tokens are
+                    # discarded; their cache writes sit past the final depth
+                    # and are band-invisible / freed by the rollback below
+                    self._depth[slot] -= committed - (i + 1)
+                    done = True
+                    finished.append(self._finish(slot))
+                    break
+            if done:
+                continue
+            if self.paged and drafted:
+                # free pages the verify wrote past the accepted prefix —
+                # sharers never see them (append pages are never registered
+                # for prefix sharing), but held rejected pages would leak
+                # capacity until retirement.  No device sync here: every
+                # launch site re-syncs the block table before launching.
+                self.allocator.rollback(slot, int(self._depth[slot]))
+        return generated
+
     def step(self) -> List[RequestResult]:
         """One engine tick: admission, prompt ingestion, then one jitted
         decode over every decodable slot.  Returns requests finished this
@@ -575,6 +793,8 @@ class ServeEngine:
         decode_tokens = 0
         # 1. admission + prompt ingestion
         assigned = self.scheduler.admit(self._tick)
+        for slot, _ in assigned:
+            self._spec_misses[slot] = 0  # fresh request: drafting re-enabled
         if self.prefill_chunk is not None:
             for slot, req in assigned:
                 shared = self._alloc_pages(slot, req) if self.paged else 0
@@ -628,40 +848,16 @@ class ServeEngine:
                     self._record_first_token(slot, req, tok, finished)
             decodable = self.scheduler.active_slots()
         # 2. one decode step over every decodable slot (mixed depths via
-        # pos: [B]; mid-prefill rows ride along parked, writes dropped)
+        # pos: [B]; mid-prefill rows ride along parked, writes dropped).
+        # Speculative mode turns the decode launch into a [slots, spec_k]
+        # verify launch whenever any slot has a granted draft.
         if decodable:
-            if self.paged:
-                # make every decodable slot's write position appendable:
-                # allocate tail pages on chunk boundaries, CoW shared tails
-                copies = []
-                for slot in decodable:
-                    cp = self.allocator.ensure_append(slot, int(self._depth[slot]))
-                    if cp is not None:
-                        copies.append(cp)
-                if copies:
-                    npages = self.allocator.layout.num_pages
-                    src = np.zeros((self.num_slots,), np.int32)
-                    dst = np.full((self.num_slots,), npages, np.int32)  # dropped
-                    for i, (s, d) in enumerate(copies):
-                        src[i], dst[i] = s, d
-                    self._cache = self._copy_pages(
-                        self._cache, jnp.asarray(src), jnp.asarray(dst)
-                    )
-                self._sync_block_table()
-            nxt, self._cache, _ = self._decode(
-                self.params, self._cache, jnp.asarray(self._cur)
-            )
-            nxt_np = np.asarray(nxt)
-            for slot in decodable:
-                self._depth[slot] += 1
-                req = self.scheduler.slots[slot]
-                tok = int(nxt_np[slot, 0])
-                req.generated.append(tok)
-                req.token_ticks.append(self._tick)
-                decode_tokens += 1
-                self._cur[slot, 0] = tok
-                if self._req_done(req, tok):
-                    finished.append(self._finish(slot))
+            if self._spec_on:
+                decode_tokens += self._spec_decode_tick(
+                    decodable, finished, prefill_tokens
+                )
+            else:
+                decode_tokens += self._vanilla_decode_tick(decodable, finished)
         self.tick_prefill_tokens.append(prefill_tokens)
         self.tick_decode_tokens.append(decode_tokens)
         self._tick += 1
@@ -689,8 +885,16 @@ class ServeEngine:
         bytes follow the allocator's peak page usage, and the allocator's
         sharing/CoW counters ride along."""
         cfg = self.cfg
+        spec = {
+            "spec_proposed": float(self.spec_proposed),
+            "spec_accepted": float(self.spec_accepted),
+            "spec_accept_rate": (
+                self.spec_accepted / self.spec_proposed if self.spec_proposed else 0.0
+            ),
+            "verify_launches": float(self.verify_launches),
+        }
         if cfg.family == "ssm":
-            return {"cache_bytes": 0.0}
+            return {"cache_bytes": 0.0, **spec}
         L = cfg.num_layers
         itemsize = jnp.dtype(self.cache_dtype).itemsize
         hkv = self._cache["k"].shape[-2]
@@ -700,6 +904,10 @@ class ServeEngine:
             return {
                 "paged": 0,
                 "cache_bytes": float(self.num_slots * self.max_seq * per_tok),
+                # dense rollback frees nothing: rejected positions are simply
+                # band-invisible and get rewritten in place
+                "spec_rolled_back_pages": 0.0,
+                **spec,
             }
         lay = self.allocator.layout
         stats = self.allocator.stats()
@@ -714,6 +922,7 @@ class ServeEngine:
             "peak_page_bytes": float(stats["peak_in_use"] * lay.chunk * per_tok),
             "bt_uploads": float(self.bt_uploads),
             **{k: float(v) for k, v in stats.items()},
+            **spec,
         }
 
     # -- legacy static-batch API --------------------------------------------

@@ -140,6 +140,7 @@ class PageAllocator:
         self.fresh_allocs = 0  # pages taken off the free list, ever
         self.shared_hits = 0  # pages admitted by prefix match instead
         self.cow_copies = 0
+        self.spec_rolled_back = 0  # pages freed by speculative rollback
         self.peak_in_use = 0
         # bumped on every block-table mutation: the engine re-uploads the
         # device table only when this moved since the last sync
@@ -273,6 +274,46 @@ class PageAllocator:
             return (pid, dst)
         return None
 
+    def ensure_span(self, slot: int, start: int, count: int) -> List[Tuple[int, int]]:
+        """Make positions ``start .. start + count - 1`` writable for ``slot``
+        — the multi-token (speculative verify) analogue of ``ensure_append``:
+        walk the span's logical pages in order, allocating tail pages and
+        CoW-ing shared ones.  Returns every ``(src, dst)`` physical copy the
+        engine must apply before the write."""
+        copies: List[Tuple[int, int]] = []
+        if count <= 0:
+            return copies
+        chunk = self.layout.chunk
+        for lp in range(start // chunk, (start + count - 1) // chunk + 1):
+            if lp >= self.layout.max_pages:
+                break  # past virtual capacity: those writes mask off anyway
+            cp = self.ensure_append(slot, max(start, lp * chunk))
+            if cp is not None:
+                copies.append(cp)
+        return copies
+
+    def rollback(self, slot: int, keep_len: int) -> int:
+        """Free every page of ``slot`` beyond what ``keep_len`` committed
+        positions need — rejected speculative tokens become page frees, not
+        cache rewrites.  Stale K/V inside the kept tail page is harmless:
+        the band never reads past ``pos``, and every position is rewritten
+        before ``pos`` reaches it.  Speculative pages are never in the
+        prefix registry (only ``alloc_slot`` registers, and only full prompt
+        chunks), so sharers can never have mapped what is freed here.
+        Returns the number of pages freed."""
+        held = self._slot_pages.get(slot, 0)
+        target = self.layout.pages_for(keep_len)
+        freed = 0
+        for lp in range(held - 1, target - 1, -1):
+            self._release_page(int(self.block_table[slot, lp]))
+            self.block_table[slot, lp] = self.FREE
+            freed += 1
+        if freed:
+            self._slot_pages[slot] = target
+            self.spec_rolled_back += freed
+            self.version += 1
+        return freed
+
     def free_slot(self, slot: int):
         """Retire a slot: drop its references; pages survive while shared."""
         held = self._slot_pages.pop(slot, 0)
@@ -299,6 +340,7 @@ class PageAllocator:
             "fresh_allocs": self.fresh_allocs,
             "shared_hits": self.shared_hits,
             "cow_copies": self.cow_copies,
+            "spec_rolled_back_pages": self.spec_rolled_back,
         }
 
 

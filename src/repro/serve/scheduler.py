@@ -17,7 +17,7 @@ distinct prompt lengths instead).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -58,6 +58,10 @@ class Request:
     prefill_pos: int = 0
     chunks: int = 0
     first_chunk_tick: Optional[int] = None
+    # speculative decode: draft tokens sent to verify / accepted for this
+    # request (acceptance rate = accepted / proposed)
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
     @property
     def done(self) -> bool:
@@ -87,6 +91,8 @@ class RequestResult:
     slot: int
     chunks: int  # prefill launches (1 = one-shot)
     first_chunk_tick: int  # tick the first prompt chunk landed
+    spec_proposed: int = 0  # draft tokens verified for this request
+    spec_accepted: int = 0  # ... of which matched greedy decode
 
     @property
     def generated(self) -> List[int]:
@@ -119,6 +125,8 @@ class RequestResult:
             first_chunk_tick=(
                 req.first_chunk_tick if req.first_chunk_tick is not None else req.admit_tick
             ),
+            spec_proposed=req.spec_proposed,
+            spec_accepted=req.spec_accepted,
         )
 
 
@@ -331,6 +339,34 @@ class Scheduler:
             plan.append((slot, r, r.prefill_pos, take))
             spent += take
         return plan
+
+    def plan_spec(
+        self, drafts: Dict[int, List[int]], decode_slots: int, chunk_tokens: int
+    ) -> Dict[int, List[int]]:
+        """Grant speculative draft tokens under the tick token budget.
+
+        Draft tokens are EXTRA decode-side work on top of what this tick
+        already spent: one token per decodable slot plus the prefill-chunk
+        tokens ``plan_chunks`` granted (``chunk_tokens``).  Only the LEFTOVER
+        budget is handed to drafts, oldest request first (admission order,
+        like chunks), so speculation can never displace a prefill chunk or a
+        decodable slot's guaranteed token — the PR 6 TTFT / inter-token
+        bound is unchanged.  A draft may be granted partially (truncated to
+        the remaining budget).  No budget configured = grant everything."""
+        if not drafts:
+            return {}
+        if self.tick_token_budget is None:
+            return dict(drafts)
+        left = max(self.tick_token_budget - decode_slots - chunk_tokens, 0)
+        granted: Dict[int, List[int]] = {}
+        order = sorted((self.slots[s].admit_tick, self.slots[s].rid, s) for s in drafts)
+        for _, _, slot in order:
+            if left <= 0:
+                break
+            take = drafts[slot][:left]
+            granted[slot] = take
+            left -= len(take)
+        return granted
 
     def retire(self, slot: int, tick: int) -> Request:
         req = self.slots[slot]

@@ -1262,6 +1262,80 @@ def check_continuous_prefill():
     }
 
 
+def check_spec_decode():
+    """Speculative multi-token decode on a (2, 4) mesh: an engine verifying
+    prompt-lookup drafts through the banded [slots, spec_k] chunk launch
+    must be token-for-token identical to the vanilla one-token-per-tick
+    engine AND to sequential single-device generation — dense and paged
+    (page-level rollback included, pool draining to zero) — while tracing
+    exactly one verify step.  This is the acceptance gate for the
+    speculative verify/commit path composing with the striped
+    sequence-parallel decode stack and the refcounted page pool."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import transformer as tfm
+    from repro.parallel.context import ParallelCtx
+    from repro.serve.config import ServeConfig
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config("granite-8b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(3)
+    # repetitive prompts drive acceptance through the drafting path; the
+    # random prompt keeps rejection + fallback ticks in the same run
+    prompts = [
+        np.tile(np.array([7, 11, 13, 7], np.int32), 6),
+        rng.integers(0, cfg.vocab_size, (32,), dtype=np.int32),
+        np.full((16,), 5, np.int32),
+    ]
+    arrivals = [0, 1, 2]
+    new_tokens = 12
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    ctx = ParallelCtx(mesh=mesh, batch_axes=("data",), sp_axis="model",
+                      block_q=8, block_kv=8)
+
+    def run_engine(**kw):
+        serve = ServeConfig(max_seq=128, num_slots=3, **kw)
+        eng = ServeEngine(cfg, params, ctx=ctx, serve=serve)
+        rids = [
+            eng.submit(p, max_new_tokens=new_tokens, arrival_tick=t)
+            for p, t in zip(prompts, arrivals)
+        ]
+        fin = eng.run()
+        return [fin[r].generated for r in rids], eng
+
+    vanilla_toks, _ = run_engine()
+    spec_toks, spec_eng = run_engine(spec_k=4, spec_max_misses=None)
+    assert spec_toks == vanilla_toks, (spec_toks, vanilla_toks)
+    assert spec_eng.verify_trace_count == 1, spec_eng.verify_trace_count
+    assert spec_eng.spec_accepted > 0, "repetitive trace drove no accepts"
+
+    paged_toks, paged_eng = run_engine(
+        spec_k=4, spec_max_misses=None, paged=True, page_size=4
+    )
+    assert paged_toks == vanilla_toks, (paged_toks, vanilla_toks)
+    assert paged_eng.allocator.pages_in_use == 0
+    stats = paged_eng.allocator.stats()
+
+    # sequential single-device oracle
+    oracle = ServeEngine(cfg, params, serve=ServeConfig(max_seq=128, num_slots=1))
+    for toks, p in zip(spec_toks, prompts):
+        ref_out = oracle.generate(p[None, :], max_new_tokens=new_tokens)
+        assert toks == ref_out[0].tolist(), (toks, ref_out[0].tolist())
+
+    return {
+        "tokens": {i: t for i, t in enumerate(spec_toks)},
+        "verify_launches": spec_eng.verify_launches,
+        "spec_proposed": spec_eng.spec_proposed,
+        "spec_accepted": spec_eng.spec_accepted,
+        "paged_equals_dense": True,
+        "spec_rolled_back_pages": stats["spec_rolled_back_pages"],
+    }
+
+
 CHECKS = {
     "mesh_fwd": check_mesh_attention_forward,
     "mesh_bwd": check_mesh_attention_backward,
@@ -1283,6 +1357,7 @@ CHECKS = {
     "packed_prefill": check_packed_prefill,
     "paged_serve": check_paged_serve,
     "continuous_prefill": check_continuous_prefill,
+    "spec_decode": check_spec_decode,
 }
 
 

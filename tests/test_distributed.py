@@ -103,3 +103,11 @@ def test_continuous_prefill():
     token-for-token, dense and paged (shared prefixes included), with one
     chunk trace and the per-tick budget respected."""
     _run_checks("continuous_prefill")
+
+
+def test_spec_decode():
+    """Speculative multi-token decode on a (2,4) mesh: drafts verified
+    through the banded [slots, spec_k] chunk launch commit tokens identical
+    to vanilla greedy decode and to single-device generation, dense and
+    paged (rollback draining the pool to zero), in one verify trace."""
+    _run_checks("spec_decode")

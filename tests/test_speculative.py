@@ -1,0 +1,297 @@
+"""Speculative multi-token decode: spec engine == vanilla greedy, exactly.
+
+The whole design contract of ``ServeConfig.spec_k`` is that speculation is a
+THROUGHPUT knob, never a sampling change: greedy accept/reject commits the
+longest drafted prefix that matches the model's own argmax, so every token
+stream must be byte-identical to the one-token-per-tick engine — dense and
+paged, with page-level rollback reclaiming rejected pages and prefix sharers
+never observing uncommitted speculative writes.  This file pins that
+property (hypothesis over prompts/lengths), the proposer, the allocator's
+``ensure_span``/``rollback`` surface, zero page leaks, the per-request
+accounting (``spec_proposed``/``spec_accepted``/multi-token ``token_ticks``)
+and the ``ServeConfig`` validation rows this PR adds.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+
+from repro.configs import get_config
+from repro.models import transformer as tfm
+from repro.serve.config import ServeConfig
+from repro.serve.engine import ServeEngine
+from repro.serve.kv_pool import PageAllocator, PagedLayout
+from repro.serve.speculative import propose_ngram
+
+MAX_SEQ = 64
+BUCKET = 32  # every prompt pads to one prefill shape: one compile per engine
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = get_config("granite-8b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    serve = ServeConfig(
+        max_seq=MAX_SEQ, num_slots=2, prefill_buckets=(BUCKET,), **kw
+    )
+    return ServeEngine(cfg, params, serve=serve)
+
+
+@pytest.fixture(scope="module")
+def engines(granite):
+    """Long-lived engines reused across hypothesis examples: a fresh
+    ServeEngine re-jits every launch (~seconds each), and all launches here
+    are fixed-shape, so reuse is free and sound."""
+    cfg, params = granite
+    return {
+        "vanilla": _engine(cfg, params),
+        "spec": _engine(cfg, params, spec_k=4, spec_max_misses=None),
+        "spec_paged": _engine(
+            cfg, params, spec_k=4, spec_max_misses=None, paged=True, page_size=4
+        ),
+    }
+
+
+def _run(eng, prompts, mnt):
+    rids = [eng.submit(np.asarray(p, np.int32), max_new_tokens=mnt) for p in prompts]
+    fin = eng.run()
+    return [fin[r] for r in rids]
+
+
+# ---------------------------------------------------------------------------
+# proposer
+
+
+def test_propose_ngram_predicts_loop():
+    # history ends ... 1 2 3 1 2 3; suffix trigram (1,2,3) recurs -> the
+    # continuation after the most recent match predicts the loop (clipped
+    # at history end, never padded)
+    assert propose_ngram([9, 1, 2, 3, 1, 2], [3], 4) == [1, 2, 3]
+
+
+def test_propose_ngram_recency_wins():
+    # (5,) occurs twice with different continuations; the most recent one
+    # (-> 8) must win over the stale prompt match (-> 7)
+    assert propose_ngram([5, 7, 5, 8], [5], 1) == [8]
+
+
+def test_propose_ngram_no_repeat_is_empty():
+    assert propose_ngram([1, 2, 3, 4, 5], [6], 4) == []
+
+
+def test_propose_ngram_degenerate():
+    assert propose_ngram([1, 2, 1], [], 0) == []
+    assert propose_ngram([7], [], 4) == []  # size-1 history: nothing earlier
+
+
+def test_propose_ngram_truncates_at_history_end():
+    # match lands 2 tokens before the end: draft is clipped, not padded
+    assert propose_ngram([1, 2, 9, 9, 1], [2], 8) == [9, 9, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# config validation
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        {"spec_k": 1},
+        {"spec_k": -1},
+        {"spec_k": 4, "spec_draft": "medusa"},
+        {"spec_k": 4, "spec_max_misses": 0},
+    ],
+)
+def test_serve_config_rejects_bad_spec_knobs(kw):
+    with pytest.raises(ValueError):
+        ServeConfig(max_seq=32, **kw)
+
+
+def test_spec_requires_attention_only_arch(granite):
+    cfg, params = granite
+    import dataclasses
+
+    ssm_cfg = dataclasses.replace(cfg, ssm=object())
+    with pytest.raises(ValueError, match="attention-only"):
+        ServeEngine(
+            ssm_cfg, params, serve=ServeConfig(max_seq=32, spec_k=4)
+        )
+
+
+# ---------------------------------------------------------------------------
+# allocator: ensure_span + rollback
+
+
+def _layout():
+    # chunk == page_size (n=1): 4 tokens per logical page, 12-page pool
+    return PagedLayout(num_pages=12, page_size=4, max_pages=6, n=1)
+
+
+def test_ensure_span_allocates_every_page_in_span():
+    alloc = PageAllocator(_layout())
+    alloc.alloc_slot(0, np.arange(5, dtype=np.int32), 16)
+    base = alloc.slot_pages(0)
+    alloc.ensure_span(0, 5, 8)  # positions 5..12 -> pages up through idx 3
+    assert alloc.slot_pages(0) == max(base, alloc.layout.pages_for(13))
+    alloc.free_slot(0)
+    assert alloc.pages_in_use == 0
+
+
+def test_rollback_frees_only_past_keep_len():
+    alloc = PageAllocator(_layout())
+    alloc.alloc_slot(0, np.arange(4, dtype=np.int32), 20)
+    alloc.ensure_span(0, 4, 12)  # grow to cover positions through 15
+    grown = alloc.slot_pages(0)
+    assert grown == alloc.layout.pages_for(16)
+    freed = alloc.rollback(0, 6)  # keep 6 tokens -> 2 pages
+    assert freed == grown - alloc.layout.pages_for(6)
+    assert alloc.slot_pages(0) == alloc.layout.pages_for(6)
+    assert alloc.stats()["spec_rolled_back_pages"] == freed
+    # rollback inside the kept page is a no-op
+    assert alloc.rollback(0, 5) == 0
+    alloc.free_slot(0)
+    assert alloc.pages_in_use == 0
+
+
+def test_rollback_never_touches_shared_prefix_pages():
+    alloc = PageAllocator(_layout())
+    prompt = np.arange(8, dtype=np.int32)
+    alloc.alloc_slot(0, prompt, 8)
+    shared = alloc.alloc_slot(1, prompt, 8).shared_len
+    assert shared == 8 and alloc.shared_hits > 0
+    donor_prompt_pages = list(alloc.block_table[0, : alloc.layout.pages_for(8)])
+    alloc.ensure_span(0, 8, 8)  # donor speculates past its prompt
+    alloc.rollback(0, 8)  # ...then rejects everything
+    # the sharer still maps the same physical prompt pages, untouched
+    assert list(alloc.block_table[1, : alloc.layout.pages_for(8)]) == donor_prompt_pages
+    alloc.free_slot(0)
+    alloc.free_slot(1)
+    assert alloc.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# engine: speculative == vanilla, token for token
+
+
+def _make_trace(base, reps, p1, mnt):
+    """Two prompts + a length; p0 skewed toward repetition so drafts
+    actually get accepted, p1 random so rejection paths run too."""
+    p0 = (base * (reps + 1))[: BUCKET - 1]
+    return [p0, p1], mnt
+
+
+_trace = st.builds(
+    _make_trace,
+    st.lists(st.integers(0, 5), min_size=2, max_size=6),
+    st.integers(1, 4),
+    st.lists(st.integers(0, 400), min_size=4, max_size=BUCKET - 1),
+    st.integers(4, 20),
+)
+
+
+@given(_trace)
+@settings(max_examples=10, deadline=None)
+def test_spec_identical_to_vanilla_dense_and_paged(engines, trace):
+    prompts, mnt = trace
+    ref = [r.generated for r in _run(engines["vanilla"], prompts, mnt)]
+    for name in ("spec", "spec_paged"):
+        out = _run(engines[name], prompts, mnt)
+        assert [r.generated for r in out] == ref, name
+    # rollback never leaks: the pool drains fully between examples
+    assert engines["spec_paged"].allocator.pages_in_use == 0
+
+
+def test_spec_identical_under_miss_suspension(granite):
+    """spec_max_misses is a COST policy: suspending/probing drafting must
+    not change a single token, even at the most aggressive setting."""
+    cfg, params = granite
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 400, (24,), dtype=np.int32) for _ in range(2)]
+    ref = [r.generated for r in _run(_engine(cfg, params), prompts, 24)]
+    eng = _engine(cfg, params, spec_k=4, spec_max_misses=1)
+    assert [r.generated for r in _run(eng, prompts, 24)] == ref
+
+
+def test_spec_eos_mid_commit(granite):
+    """EOS can land in the middle of a multi-token commit: the stream must
+    truncate exactly where vanilla decode truncates, and later drafted
+    tokens must be discarded."""
+    cfg, params = granite
+    prompt = np.full((12,), 7, np.int32)
+    probe = _run(_engine(cfg, params), [prompt], 12)[0].generated
+    eos = probe[len(probe) // 2]  # a token vanilla actually emits mid-stream
+    ref = _run(_engine(cfg, params, eos_id=eos), [prompt], 12)[0].generated
+    eng = _engine(cfg, params, spec_k=4, spec_max_misses=None, eos_id=eos)
+    assert _run(eng, [prompt], 12)[0].generated == ref
+
+
+# ---------------------------------------------------------------------------
+# accounting: counters, stats, multi-token ticks
+
+
+def test_spec_counters_and_multi_token_ticks(granite):
+    """A looping prompt must actually accept drafts: >1 token in some tick,
+    with token_ticks stamped per token (len match, non-decreasing) and the
+    per-request / engine-wide counters agreeing."""
+    cfg, params = granite
+    eng = _engine(cfg, params, spec_k=4, spec_max_misses=None, paged=True,
+                  page_size=4)
+    res = _run(eng, [np.full((16,), 7, np.int32)], 16)[0]
+    assert len(res.token_ticks) == len(res.generated) == 16
+    assert list(res.token_ticks) == sorted(res.token_ticks)
+    ticks, counts = np.unique(res.token_ticks, return_counts=True)
+    assert counts.max() > 1, "no tick committed multiple tokens"
+    assert res.spec_proposed > 0
+    assert 0 < res.spec_accepted <= res.spec_proposed
+    assert eng.spec_proposed == res.spec_proposed
+    assert eng.spec_accepted == res.spec_accepted
+    assert eng.verify_trace_count == 1  # ONE fixed-shape verify compile
+    stats = eng.kv_cache_stats()
+    assert stats["spec_proposed"] == float(res.spec_proposed)
+    assert stats["spec_accepted"] == float(res.spec_accepted)
+    assert stats["spec_accept_rate"] == pytest.approx(
+        res.spec_accepted / res.spec_proposed
+    )
+    assert stats["verify_launches"] >= 1.0
+    assert "spec_rolled_back_pages" in stats
+    assert eng.allocator.pages_in_use == 0
+
+
+def test_vanilla_stats_report_zero_spec(granite):
+    cfg, params = granite
+    eng = _engine(cfg, params)
+    _run(eng, [np.arange(8, dtype=np.int32)], 4)
+    stats = eng.kv_cache_stats()
+    assert stats["spec_proposed"] == 0.0
+    assert stats["spec_accept_rate"] == 0.0
+    assert stats["verify_launches"] == 0.0
+
+
+def test_shared_prefix_sharer_never_sees_speculative_pages(granite):
+    """A prefix sharer admitted WHILE its donor is speculating must decode
+    from committed state only: same tokens as a solo run, and its shared
+    pages must be exactly the donor's prompt pages (never a rolled-back
+    speculative page)."""
+    cfg, params = granite
+    prompt = np.full((16,), 7, np.int32)  # loops -> donor speculates hard
+    solo = _run(
+        _engine(cfg, params, paged=True, page_size=4), [prompt], 12
+    )[0].generated
+
+    eng = _engine(cfg, params, spec_k=4, spec_max_misses=None, paged=True,
+                  page_size=4)
+    r0 = eng.submit(prompt, max_new_tokens=12, arrival_tick=0)
+    r1 = eng.submit(prompt, max_new_tokens=12, arrival_tick=3)  # mid-spec
+    fin = eng.run()
+    assert fin[r0].generated == solo
+    assert fin[r1].generated == solo
+    assert eng.allocator.shared_hits > 0, "sharer did not share the prefix"
+    assert eng.spec_accepted > 0, "donor never speculated"
+    assert eng.allocator.pages_in_use == 0
