@@ -24,8 +24,14 @@ Two quantities per scenario:
     the JSON carries ``native_backend`` so trajectory readers can tell; the
     modeled bytes are the portable signal.
 
+Every cell also carries an ``int8`` twin: the same pool stored quantized
+(1-byte K/V elements + f32 per-(token, kv-head) scales, dequantized in-path)
+with its own modeled bytes/token, measured tokens/s, and max |Δoutput| vs
+the fp run — ``int8_native_bytes_ratio`` is the storage-traffic headline.
+
 With >= 8 devices a (2, 4)-mesh engine section rides along: the mixed
-16/32/64 serve trace, dense vs paged-gather vs paged-native tokens/s.
+16/32/64 serve trace, dense vs paged-gather vs paged-native (fp and int8)
+tokens/s plus the int8 engine's max per-token |Δlogit| vs the fp engine.
 Results accumulate per commit as ``BENCH_decode_bench_<sha>.json`` (CI).
 """
 
@@ -51,6 +57,9 @@ H, HKV, HD = 4, 2, 32
 PAGE_SIZE = 16
 MAX_SEQ = 256  # virtual capacity per slot
 DTYPE_BYTES = 4  # fp32 pools
+SCALE_BYTES = 4  # f32 per-(token, kv-head) scale entries (quantized pools)
+# storage bytes per K-or-V element by pool storage mode
+KV_DTYPE_BYTES = {"fp": DTYPE_BYTES, "int8": 1, "fp8": 1}
 
 SCENARIOS = [
     # (name, per-slot depths)
@@ -65,7 +74,9 @@ def pages_for(depth: int, page_size: int = PAGE_SIZE) -> int:
     return -(-depth // page_size)
 
 
-def modeled_hbm_bytes_per_token(kernel: str, depths, max_pages: int) -> float:
+def modeled_hbm_bytes_per_token(
+    kernel: str, depths, max_pages: int, kv_dtype: str = "fp"
+) -> float:
     """K/V bytes one decode tick must read per generated token.
 
     gather: every slot's FULL virtual capacity is materialized from the pool
@@ -76,8 +87,15 @@ def modeled_hbm_bytes_per_token(kernel: str, depths, max_pages: int) -> float:
     native: only allocated pages whose positions the band admits are DMA'd
     (pl.when-skipped pages keep a constant block index, so their fetches are
     elided) — depth-proportional.
+
+    ``kv_dtype`` sets the storage width: a quantized pool moves 1-byte K/V
+    elements plus one f32 scale per (token, kv-head) for each of K and V —
+    for HD=32 that is (2*32*1 + 2*4) / (2*32*4) = 72/256 ≈ 0.28x per page.
     """
-    per_page = PAGE_SIZE * HKV * (HD + HD) * DTYPE_BYTES  # K + V
+    elem = KV_DTYPE_BYTES[kv_dtype]
+    per_page = PAGE_SIZE * HKV * (HD + HD) * elem  # K + V
+    if kv_dtype != "fp":
+        per_page += PAGE_SIZE * HKV * 2 * SCALE_BYTES  # K + V scale entries
     if kernel == "gather":
         pages_read = len(depths) * max_pages
     else:
@@ -119,7 +137,7 @@ def bench_op_level(reps: int = 30, seed: int = 0):
     import jax
     import numpy as np
 
-    from repro.core import dispatch
+    from repro.core import dispatch, kv_quant
     from repro.parallel.context import ParallelCtx
 
     ctx = ParallelCtx()
@@ -128,12 +146,17 @@ def bench_op_level(reps: int = 30, seed: int = 0):
     for name, depths in SCENARIOS:
         for occupancy in OCCUPANCIES:
             operands, occ, max_pages = _build_case(rng, depths, occupancy)
+            q, k_new, v_new, k_pool, v_pool, pos, bt = operands
+            # int8 twin of the same pool: quantized storage + scale tables
+            qk_pool, k_scale = kv_quant.quantize(k_pool, "int8")
+            qv_pool, v_scale = kv_quant.quantize(v_pool, "int8")
             row = {
                 "scenario": name,
                 "depths": depths,
                 "occupancy": round(occ, 3),
                 "virtual_cap": MAX_SEQ,
             }
+            fp_out = {}
             for kernel in ("gather", "native"):
                 fn = jax.jit(
                     lambda q, kn, vn, kp, vp, pos, bt, _k=kernel:
@@ -149,11 +172,41 @@ def bench_op_level(reps: int = 30, seed: int = 0):
                     o, kp2, vp2 = fn(*operands)
                 o.block_until_ready()
                 wall = (time.perf_counter() - t0) / reps
+                fp_out[kernel] = np.asarray(o)
                 row[kernel] = {
                     "us_per_tick": wall * 1e6,
                     "tokens_per_s": len(depths) / wall,
                     "hbm_bytes_per_token": modeled_hbm_bytes_per_token(
                         kernel, depths, max_pages
+                    ),
+                }
+                # int8 cell for the same kernel: quantized pool + in-path
+                # dequant (in-kernel for native, gather-side for the ref)
+                fn_q = jax.jit(
+                    lambda q, kn, vn, kp, vp, pos, bt, ks, vs, _k=kernel:
+                    dispatch.decode_attention_step(
+                        q, kn, vn, kp, vp, pos, ctx,
+                        block_table=bt, decode_kernel=_k,
+                        k_scale=ks, v_scale=vs,
+                    )
+                )
+                ops_q = (q, k_new, v_new, qk_pool, qv_pool, pos, bt,
+                         k_scale, v_scale)
+                o_q = fn_q(*ops_q)[0]
+                o_q.block_until_ready()
+                t0 = time.perf_counter()
+                for _ in range(reps):
+                    o_q = fn_q(*ops_q)[0]
+                o_q.block_until_ready()
+                wall_q = (time.perf_counter() - t0) / reps
+                row[kernel + "_int8"] = {
+                    "us_per_tick": wall_q * 1e6,
+                    "tokens_per_s": len(depths) / wall_q,
+                    "hbm_bytes_per_token": modeled_hbm_bytes_per_token(
+                        kernel, depths, max_pages, kv_dtype="int8"
+                    ),
+                    "max_abs_err_vs_fp": float(
+                        np.max(np.abs(np.asarray(o_q) - fp_out[kernel]))
                     ),
                 }
             row["hbm_bytes_ratio"] = (
@@ -162,6 +215,11 @@ def bench_op_level(reps: int = 30, seed: int = 0):
             )
             row["tokens_per_s_ratio"] = (
                 row["native"]["tokens_per_s"] / row["gather"]["tokens_per_s"]
+            )
+            # the quantization headline: int8 native traffic vs fp native
+            row["int8_native_bytes_ratio"] = (
+                row["native_int8"]["hbm_bytes_per_token"]
+                / row["native"]["hbm_bytes_per_token"]
             )
             rows.append(row)
     return rows
@@ -191,12 +249,18 @@ def bench_engine_mesh(seed: int = 0, new_tokens: int = 6):
                       block_q=8, block_kv=8)
     out = {}
     tokens = {}
+    logits = {}
     for mode, kw in (
         ("dense", {}),
         ("paged_gather", dict(paged=True, page_size=4, decode_kernel="gather")),
         ("paged_native", dict(paged=True, page_size=4, decode_kernel="native")),
+        ("paged_native_int8", dict(paged=True, page_size=4,
+                                   decode_kernel="native", kv_dtype="int8")),
     ):
         eng = ServeEngine(cfg, params, ctx=ctx, max_seq=128, num_slots=3, **kw)
+        # capture per-token logits on the fp reference and the int8 engine so
+        # the quantization error lands in the per-commit JSON
+        eng.capture_logits = mode in ("dense", "paged_native_int8")
 
         def submit():
             base = eng._tick
@@ -208,6 +272,8 @@ def bench_engine_mesh(seed: int = 0, new_tokens: int = 6):
         rids = submit()
         eng.run()  # warm every (bucket, k) prefill + the decode trace
         tokens[mode] = [eng._finished[r].generated for r in rids]
+        if eng.capture_logits:
+            logits[mode] = [eng.debug_logits[r] for r in rids]
         base_tick = eng._tick
         submit()
         t0 = time.perf_counter()
@@ -222,6 +288,12 @@ def bench_engine_mesh(seed: int = 0, new_tokens: int = 6):
     out["native_equals_gather_equals_dense"] = (
         tokens["paged_native"] == tokens["paged_gather"] == tokens["dense"]
     )
+    out["int8_tokens_equal_fp"] = tokens["paged_native_int8"] == tokens["dense"]
+    out["int8_max_logit_err_vs_fp"] = max(
+        float(np.max(np.abs(a - b)))
+        for fp_rows, q_rows in zip(logits["dense"], logits["paged_native_int8"])
+        for a, b in zip(fp_rows, q_rows)
+    )
     return out
 
 
@@ -235,6 +307,7 @@ def run_bench(seed: int = 0, reps: int = 30):
             "heads": H, "kv_heads": HKV, "head_dim": HD,
             "page_size": PAGE_SIZE, "virtual_cap": MAX_SEQ,
             "dtype_bytes": DTYPE_BYTES,
+            "kv_dtype_bytes": KV_DTYPE_BYTES, "scale_bytes": SCALE_BYTES,
         },
         "op_level": rows,
         "native_backend": (
@@ -246,6 +319,14 @@ def run_bench(seed: int = 0, reps: int = 30):
         # follows depth while gather pays full virtual capacity per row
         "hbm_bytes_ratio_at_half_occupancy": (
             sum(r["hbm_bytes_ratio"] for r in half) / len(half) if half else None
+        ),
+        # quantization headline: int8 native storage traffic vs fp native —
+        # identical at every cell by construction (both scale with depth),
+        # reported per row too so CI can gate each occupancy cell
+        "int8_native_bytes_ratio": max(r["int8_native_bytes_ratio"] for r in rows),
+        "int8_max_abs_err": max(
+            r[k + "_int8"]["max_abs_err_vs_fp"]
+            for r in rows for k in ("gather", "native")
         ),
     }
     mesh_section = bench_engine_mesh(seed=seed)
@@ -265,6 +346,8 @@ def main(argv=None) -> int:
         json.dump(payload, f, indent=1)
     print(json.dumps({
         "hbm_bytes_ratio_at_half_occupancy": payload["hbm_bytes_ratio_at_half_occupancy"],
+        "int8_native_bytes_ratio": payload["int8_native_bytes_ratio"],
+        "int8_max_abs_err": payload["int8_max_abs_err"],
         "native_backend": payload["native_backend"],
         "mesh_engine": payload.get("mesh_engine"),
     }))

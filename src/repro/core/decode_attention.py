@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import kv_quant
 from repro.kernels import ops
 from repro.kernels import paged_decode as pk
 from repro.kernels.ref import BAND_INF, NEG_INF
@@ -273,6 +274,25 @@ def sharded_cache_decode(
 # --------------------------------------------------------------------------
 # paged cache: physical page pool + block table (serve/kv_pool.py allocator)
 # --------------------------------------------------------------------------
+#
+# Quantized pools: when the pool dtype is int8 / fp8-e4m3 a fp32 scale table
+# [num_pages, page_size, Hkv] rides next to each pool, indexed by the SAME
+# (page, offset) the pool scatter/gather uses.  Scales are per token per
+# kv-head (amax over D only — see core/kv_quant.py), so every write path
+# (decode append, chunk prefill, speculative verify) quantizes its new
+# tokens independently and never re-quantizes resident positions.  The
+# update entries quantize when handed scale tables; the gather oracle
+# dequantizes; the native kernel dequantizes in VMEM after each page's DMA.
+
+
+def _pool_kv_dtype(pool) -> str:
+    """Storage mode of a pool array, inferred from its dtype."""
+    if pool.dtype == jnp.int8:
+        return "int8"
+    f8 = kv_quant.fp8_dtype()
+    if f8 is not None and pool.dtype == jnp.dtype(f8):
+        return "fp8"
+    return "fp"
 
 
 def _page_coords(pos, i, n: int, page_size: int, max_pages: int, layout: str):
@@ -294,10 +314,15 @@ def paged_cache_update(
     axis_name: Optional[str],
     n: int,
     layout: str = "striped",
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    k_scale: Optional[jnp.ndarray] = None,  # [num_pages, page_size, Hkv] f32
+    v_scale: Optional[jnp.ndarray] = None,
+):
     """Scatter-by-block-table append: owner shard -> (page, offset).  Rows
     past virtual capacity or pointing at unallocated pages are dropped (the
-    allocator only hands live slots a writable tail page)."""
+    allocator only hands live slots a writable tail page).  With scale
+    tables the new token is quantized to the pool dtype and its per-(token,
+    head) scales scatter through the SAME coordinates; returns a 4-tuple
+    ``(k_pool, v_pool, k_scale, v_scale)`` in that case."""
     i = lax.axis_index(axis_name) if axis_name is not None else 0
     num_pages, page_size = k_pool.shape[0], k_pool.shape[1]
     max_pages = block_table.shape[1]
@@ -309,22 +334,36 @@ def paged_cache_update(
     write = write & (phys >= 0)
     # out-of-range page index -> scatter drops the row entirely
     page_idx = jnp.where(write, phys, num_pages)
+    quantized = k_scale is not None
+    kv_dtype = _pool_kv_dtype(k_pool)
     out = []
-    for pool, new in ((k_pool, k_new), (v_pool, v_new)):
-        out.append(pool.at[page_idx, off].set(new[:, 0].astype(pool.dtype), mode="drop"))
+    for pool, scales, new in ((k_pool, k_scale, k_new), (v_pool, v_scale, v_new)):
+        if quantized:
+            q, s = kv_quant.quantize(new[:, 0], kv_dtype)
+            out.append(pool.at[page_idx, off].set(q, mode="drop"))
+            out.append(scales.at[page_idx, off].set(s, mode="drop"))
+        else:
+            out.append(pool.at[page_idx, off].set(new[:, 0].astype(pool.dtype), mode="drop"))
+    if quantized:
+        return out[0], out[2], out[1], out[3]
     return out[0], out[1]
 
 
-def paged_cache_gather(k_pool, v_pool, block_table):
+def paged_cache_gather(k_pool, v_pool, block_table, k_scale=None, v_scale=None):
     """Materialize each row's dense local view from its pages: [B, m, Hkv, D]
     with m = max_pages * page_size, in the SAME local-position order as the
     dense cache slice (so the band math is shared verbatim).  Unallocated
-    pages clamp to page 0 — whatever is there is hidden behind the band."""
+    pages clamp to page 0 — whatever is there is hidden behind the band.
+    Quantized pools (scale tables passed) gather scales through the same
+    index and dequantize to fp32 — the reference path for REPRO_KERNELS=ref
+    and non-Pallas platforms."""
     num_pages, page_size = k_pool.shape[0], k_pool.shape[1]
     idx = jnp.clip(block_table, 0, num_pages - 1)  # [B, max_pages]
     out = []
-    for pool in (k_pool, v_pool):
+    for pool, scales in ((k_pool, k_scale), (v_pool, v_scale)):
         pages = pool[idx]  # [B, max_pages, page_size, Hkv, D]
+        if scales is not None:
+            pages = kv_quant.dequantize(pages, scales[idx])
         out.append(pages.reshape((idx.shape[0], -1) + pool.shape[2:]))
     return out[0], out[1]
 
@@ -343,12 +382,16 @@ def paged_cache_decode(
     scale: Optional[float] = None,
     prune: bool = True,
     kernel: str = "gather",  # gather | native (block table read in-kernel)
+    k_scale: Optional[jnp.ndarray] = None,  # [num_pages, page_size, Hkv] f32
+    v_scale: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Paged decode partial + psum combine.  ``kernel="gather"`` materializes
     each row's dense local view from its pages and runs the identical banded
     partial the dense path uses (the correctness oracle); ``"native"`` hands
     the pool and the block table straight to the split-K Pallas kernel — no
-    gathered intermediate, HBM traffic follows allocated depth."""
+    gathered intermediate, HBM traffic follows allocated depth.  Quantized
+    pools hand their scale tables along: the native kernel dequantizes in
+    VMEM after each page's DMA, the gather path dequantizes in the gather."""
     i = lax.axis_index(axis_name) if axis_name is not None else 0
     page_size, max_pages = k_pool.shape[1], block_table.shape[1]
     m = max_pages * page_size
@@ -360,11 +403,12 @@ def paged_cache_decode(
             return pk.paged_flash_decode(
                 q, k_pool, v_pool, block_table, pos, kv_off,
                 stride_kv=stride_kv, window=window, scale=scale,
+                k_scale=k_scale, v_scale=v_scale,
             )
 
         o, lse = _maybe_pruned(run, q, pos, i, n, m, layout, window, prune)
     else:
-        k_loc, v_loc = paged_cache_gather(k_pool, v_pool, block_table)
+        k_loc, v_loc = paged_cache_gather(k_pool, v_pool, block_table, k_scale, v_scale)
         o, lse = _maybe_pruned_partial(
             q, k_loc, v_loc, pos, i, n, m, layout, window, scale, prune
         )
@@ -488,11 +532,17 @@ def paged_cache_chunk_update(
     axis_name: Optional[str],
     n: int,
     layout: str = "striped",
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    k_scale: Optional[jnp.ndarray] = None,  # [num_pages, page_size, Hkv] f32
+    v_scale: Optional[jnp.ndarray] = None,
+):
     """Chunk append through the block table: the allocator pre-books every
     prompt page at admission, so a chunk never lands on an unallocated page;
     shared-prefix positions (below ``write_starts``) are skipped so CoW pages
-    are never touched mid-prefill."""
+    are never touched mid-prefill.  With scale tables (quantized pool) each
+    chunk token quantizes independently — per-(token, head) scales mean
+    resident positions are never re-quantized — and continuous prefill +
+    speculative verify write quantized exactly like decode.  Returns a
+    4-tuple ``(k_pool, v_pool, k_scale, v_scale)`` in that case."""
     i = lax.axis_index(axis_name) if axis_name is not None else 0
     num_pages, page_size = k_pool.shape[0], k_pool.shape[1]
     max_pages = block_table.shape[1]
@@ -507,9 +557,18 @@ def paged_cache_chunk_update(
     phys = block_table[b, lp]
     write = write & (phys >= 0)
     page_idx = jnp.where(write, phys, num_pages)
+    quantized = k_scale is not None
+    kv_dtype = _pool_kv_dtype(k_pool)
     out = []
-    for pool, new in ((k_pool, k_new), (v_pool, v_new)):
-        out.append(pool.at[page_idx, off].set(new.astype(pool.dtype), mode="drop"))
+    for pool, scales, new in ((k_pool, k_scale, k_new), (v_pool, v_scale, v_new)):
+        if quantized:
+            q, s = kv_quant.quantize(new, kv_dtype)
+            out.append(pool.at[page_idx, off].set(q, mode="drop"))
+            out.append(scales.at[page_idx, off].set(s, mode="drop"))
+        else:
+            out.append(pool.at[page_idx, off].set(new.astype(pool.dtype), mode="drop"))
+    if quantized:
+        return out[0], out[2], out[1], out[3]
     return out[0], out[1]
 
 
@@ -526,16 +585,19 @@ def paged_cache_chunk_decode(
     window: Optional[int] = None,
     scale: Optional[float] = None,
     prune: bool = True,
+    k_scale: Optional[jnp.ndarray] = None,  # [num_pages, page_size, Hkv] f32
+    v_scale: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Paged chunk attention: gather the row's pages into the dense local view
     and run the identical banded chunk partial (chunks are a prefill-side
-    path — the split-K decode kernel stays single-token)."""
+    path — the split-K decode kernel stays single-token).  Quantized pools
+    dequantize in the gather."""
     i = lax.axis_index(axis_name) if axis_name is not None else 0
     page_size, max_pages = k_pool.shape[1], block_table.shape[1]
     m = max_pages * page_size
     C = q.shape[1]
     starts = jnp.asarray(starts, jnp.int32)
-    k_loc, v_loc = paged_cache_gather(k_pool, v_pool, block_table)
+    k_loc, v_loc = paged_cache_gather(k_pool, v_pool, block_table, k_scale, v_scale)
     kv_off, stride_kv = _shard_geometry(i, n, m, layout)
     hi = (window - 1) if window else BAND_INF
 

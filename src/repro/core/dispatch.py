@@ -36,6 +36,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import autotune
+from repro.core import kv_quant
 from repro.core import schedule as S
 from repro.core.am import CommModel
 from repro.core.decode_attention import (
@@ -116,6 +117,10 @@ class AttentionPlanConfig:
     # paged cache wherever Pallas runs (TPU / REPRO_KERNELS=pallas), the
     # gather/band reference elsewhere; "native"/"gather" force either.
     decode_kernel: str = "auto"
+    # KV-pool storage precision (paged only): "fp" keeps the cache dtype;
+    # "int8"/"fp8" store pages quantized with fp32 per-(token, kv-head)
+    # scale tables dequantized in-kernel (core/kv_quant.py).
+    kv_dtype: str = "fp"
     # --- Figure-6 autotuning (simulator-planned tile + schedules) ---
     autotune: bool = False
     with_backward: bool = True
@@ -130,6 +135,16 @@ class AttentionPlanConfig:
             raise ValueError(
                 f"unknown decode_kernel {self.decode_kernel!r}; "
                 "expected auto | native | gather"
+            )
+        if self.kv_dtype not in kv_quant.KV_DTYPES:
+            raise ValueError(
+                f"unknown kv_dtype {self.kv_dtype!r}; expected "
+                + " | ".join(kv_quant.KV_DTYPES)
+            )
+        if self.kv_dtype != "fp" and not self.paged:
+            raise ValueError(
+                "kv_dtype quantization stores pages + scale tables; it "
+                "requires the paged cache (paged=True)"
             )
 
     def resolved_backend(self) -> str:
@@ -288,7 +303,7 @@ def _plan_key(cfg: AttentionPlanConfig, comm: CommModel, hw: HardwareModel) -> T
     the same (shape, dtype, n, hw) from ever colliding — mask structure
     changes both block cost and the pruned schedule."""
     desc = {
-        "v": 4,
+        "v": 5,
         "n": comm.n,
         "a": cfg.a,
         "seq": comm.seq,
@@ -304,6 +319,9 @@ def _plan_key(cfg: AttentionPlanConfig, comm: CommModel, hw: HardwareModel) -> T
         # gather and native decode kernels have different HBM traffic models,
         # so their plans must not collide either
         "decode_kernel": _resolve_decode_kernel(cfg.decode_kernel, cfg.paged),
+        # quantized pools change per-page HBM bytes (1-byte elements + scale
+        # tiles vs fp K/V) — fp and int8/fp8 plans must never collide
+        "kv_dtype": cfg.kv_dtype,
         "with_backward": cfg.with_backward,
         "allow_concurrent_rings": cfg.allow_concurrent_rings,
         # overlap modes price steps differently (serial: comm+compute;
@@ -470,20 +488,35 @@ def _local_flash_apply(q, k, v, cfg: AttentionPlanConfig, seg=None):
     )
 
 
-def _decode_step_local(q, k_new, v_new, k_cache, v_cache, pos, cfg: AttentionPlanConfig, bt=None):
+def _decode_step_local(
+    q, k_new, v_new, k_cache, v_cache, pos, cfg: AttentionPlanConfig,
+    bt=None, ks=None, vs=None,
+):
     """One decode tick over the local cache slice (inside shard_map).  With
     ``cfg.paged`` the caches are the physical page pool and ``bt`` is the
-    block table (owner shard -> (page, offset) instead of -> slot row)."""
+    block table (owner shard -> (page, offset) instead of -> slot row);
+    ``ks``/``vs`` are the quantized pool's local scale tables — present, the
+    new token quantizes on write and the step returns them updated (a
+    5-tuple instead of 3)."""
     if cfg.paged:
-        k_cache, v_cache = paged_cache_update(
-            k_cache, v_cache, k_new, v_new, bt, pos, cfg.axis_name, cfg.n,
-            layout=cfg.layout,
-        )
+        if ks is not None:
+            k_cache, v_cache, ks, vs = paged_cache_update(
+                k_cache, v_cache, k_new, v_new, bt, pos, cfg.axis_name, cfg.n,
+                layout=cfg.layout, k_scale=ks, v_scale=vs,
+            )
+        else:
+            k_cache, v_cache = paged_cache_update(
+                k_cache, v_cache, k_new, v_new, bt, pos, cfg.axis_name, cfg.n,
+                layout=cfg.layout,
+            )
         o = paged_cache_decode(
             q, k_cache, v_cache, bt, pos, cfg.axis_name, cfg.n,
             layout=cfg.layout, window=cfg.window, scale=cfg.scale,
             kernel=_resolve_decode_kernel(cfg.decode_kernel, paged=True),
+            k_scale=ks, v_scale=vs,
         )
+        if ks is not None:
+            return o, k_cache, v_cache, ks, vs
         return o, k_cache, v_cache
     k_cache, v_cache = sharded_cache_update(
         k_cache, v_cache, k_new, v_new, pos, cfg.axis_name, cfg.n, layout=cfg.layout
@@ -619,12 +652,20 @@ def decode_attention_step(
     scale: Optional[float] = None,
     block_table=None,  # int32 [B, max_pages]: switches to the paged cache
     decode_kernel: Optional[str] = None,  # None -> ctx.decode_kernel
+    k_scale=None,  # [L?, num_pages, n*page_size, Hkv] f32: quantized pool
+    v_scale=None,
 ):
     """One token of cache-based decode through the 'decode' backend.
 
     Returns (o, new_k_cache, new_v_cache).  n == 1 runs the dense local
     update + flash-decode; otherwise the sequence-sharded cache path.
     Vector ``pos`` serves mixed-depth slots in one step (continuous batching).
+
+    ``k_scale``/``v_scale`` (paged only) mark a QUANTIZED pool: pages hold
+    int8/fp8 elements, the fp32 scale tables share the pool's sharding and
+    page indexing, writes quantize, reads dequantize (in-kernel on the
+    native path), and the step returns ``(o, k_cache, v_cache, k_scale,
+    v_scale)``.
 
     ``block_table`` selects the PAGED cache: k/v are the physical page pool
     (middle axis sharded over the sequence axis exactly like the dense cap
@@ -641,10 +682,13 @@ def decode_attention_step(
     hi = (window - 1) if window else BAND_INF
     if decode_kernel is None:
         decode_kernel = getattr(ctx, "decode_kernel", "auto")
+    if k_scale is not None and block_table is None:
+        raise ValueError("k_scale/v_scale (quantized pool) require block_table")
     if block_table is not None:
         return _decode_attention_step_paged(
             q, k_new, v_new, k_cache, v_cache, pos, block_table, ctx,
             window=window, layout=layout, scale=scale, decode_kernel=decode_kernel,
+            k_scale=k_scale, v_scale=v_scale,
         )
     dense_kernel = _resolve_decode_kernel(decode_kernel, paged=False)
     if n == 1:
@@ -712,33 +756,59 @@ def decode_attention_step(
 
 def _decode_attention_step_paged(
     q, k_new, v_new, k_pool, v_pool, pos, block_table, ctx,
-    *, window, layout, scale, decode_kernel="auto",
+    *, window, layout, scale, decode_kernel="auto", k_scale=None, v_scale=None,
 ):
     """Paged decode step: the pool's page axis is unsharded, its position
     axis is sharded over the sequence axis; everything else is replicated
-    (see ``decode_attention_step``)."""
+    (see ``decode_attention_step``).  Quantized pools thread their scale
+    tables with the pool's sharding (the scale's position axis is the pool's
+    position axis) and get them back updated."""
     n = ctx.sp_size
     bt = jnp.asarray(block_table, jnp.int32)
     kernel = _resolve_decode_kernel(decode_kernel, paged=True)
+    quantized = k_scale is not None
     if n == 1:
-        k_pool, v_pool = paged_cache_update(
-            k_pool, v_pool, k_new, v_new, bt, pos, None, 1, layout=layout
-        )
+        if quantized:
+            k_pool, v_pool, k_scale, v_scale = paged_cache_update(
+                k_pool, v_pool, k_new, v_new, bt, pos, None, 1, layout=layout,
+                k_scale=k_scale, v_scale=v_scale,
+            )
+        else:
+            k_pool, v_pool = paged_cache_update(
+                k_pool, v_pool, k_new, v_new, bt, pos, None, 1, layout=layout
+            )
         o = paged_cache_decode(
             q, k_pool, v_pool, bt, pos, None, 1,
             layout=layout, window=window, scale=scale, kernel=kernel,
+            k_scale=k_scale, v_scale=v_scale,
         )
+        if quantized:
+            return o, k_pool, v_pool, k_scale, v_scale
         return o, k_pool, v_pool
 
     cfg = AttentionPlanConfig(
         backend="decode", axis_name=ctx.sp_axis, n=n,
         window=window, layout=layout, scale=scale, paged=True,
         decode_kernel=kernel,
+        kv_dtype=("int8" if k_pool.dtype == jnp.int8 else "fp8") if quantized else "fp",
     )
     step = get_backend("decode").step
     rep = P(None, None, None, None)
     pool_spec = P(None, ctx.sp_axis, None, None)
     pos_spec = P(None) if pos.ndim else P()
+    if quantized:
+        scale_spec = P(None, ctx.sp_axis, None)
+        f = shard_map(
+            lambda q, kn, vn, kp, vp, pos, bt, ks, vs: step(
+                q, kn, vn, kp, vp, pos, cfg, bt=bt, ks=ks, vs=vs
+            ),
+            mesh=ctx.shard_map_mesh(),
+            in_specs=(rep, rep, rep, pool_spec, pool_spec, pos_spec,
+                      P(None, None), scale_spec, scale_spec),
+            out_specs=(rep, pool_spec, pool_spec, scale_spec, scale_spec),
+            check_vma=False,
+        )
+        return f(q, k_new, v_new, k_pool, v_pool, pos, bt, k_scale, v_scale)
     f = shard_map(
         lambda q, kn, vn, kp, vp, pos, bt: step(q, kn, vn, kp, vp, pos, cfg, bt=bt),
         mesh=ctx.shard_map_mesh(),
@@ -751,20 +821,31 @@ def _decode_attention_step_paged(
 
 def _chunk_step_local(
     q, k_new, v_new, k_cache, v_cache, starts, lens, wstarts,
-    cfg: AttentionPlanConfig, bt=None,
+    cfg: AttentionPlanConfig, bt=None, ks=None, vs=None,
 ):
     """One prefill chunk over the local cache slice (inside shard_map):
     scatter the chunk's KV by absolute position, then prefix-causal chunk
-    attention over everything resident."""
+    attention over everything resident.  ``ks``/``vs`` carry a quantized
+    pool's scale tables (chunked prefill and speculative verify write
+    quantized exactly like decode); present, the step returns a 5-tuple."""
     if cfg.paged:
-        k_cache, v_cache = paged_cache_chunk_update(
-            k_cache, v_cache, k_new, v_new, bt, starts, lens, wstarts,
-            cfg.axis_name, cfg.n, layout=cfg.layout,
-        )
+        if ks is not None:
+            k_cache, v_cache, ks, vs = paged_cache_chunk_update(
+                k_cache, v_cache, k_new, v_new, bt, starts, lens, wstarts,
+                cfg.axis_name, cfg.n, layout=cfg.layout, k_scale=ks, v_scale=vs,
+            )
+        else:
+            k_cache, v_cache = paged_cache_chunk_update(
+                k_cache, v_cache, k_new, v_new, bt, starts, lens, wstarts,
+                cfg.axis_name, cfg.n, layout=cfg.layout,
+            )
         o = paged_cache_chunk_decode(
             q, k_cache, v_cache, bt, starts, cfg.axis_name, cfg.n,
             layout=cfg.layout, window=cfg.window, scale=cfg.scale,
+            k_scale=ks, v_scale=vs,
         )
+        if ks is not None:
+            return o, k_cache, v_cache, ks, vs
         return o, k_cache, v_cache
     k_cache, v_cache = sharded_cache_chunk_update(
         k_cache, v_cache, k_new, v_new, starts, lens, wstarts,
@@ -792,6 +873,8 @@ def chunk_attention_step(
     layout: str = "striped",
     scale: Optional[float] = None,
     block_table=None,  # int32 [B, max_pages]: switches to the paged cache
+    k_scale=None,  # f32 scale tables: quantized pool (paged only)
+    v_scale=None,
 ):
     """One continuous-prefill chunk: C tokens of row b land at global
     positions ``starts[b] .. starts[b]+lens[b]-1`` and attend prefix-causally
@@ -800,29 +883,61 @@ def chunk_attention_step(
     ``decode_attention_step`` — it is the same banded partial + lse psum with
     a multi-row q, so chunked prefill reproduces one-shot prefill bit-for-bit
     on the reference backend.  Chunks always run the band/gather path; the
-    split-K native kernel stays single-token."""
+    split-K native kernel stays single-token.  ``k_scale``/``v_scale``
+    (paged) quantize the chunk on write and extend the return to a 5-tuple,
+    exactly like ``decode_attention_step``."""
     n = ctx.sp_size
     starts = jnp.asarray(starts, jnp.int32)
     lens = jnp.asarray(lens, jnp.int32)
     write_starts = jnp.asarray(write_starts, jnp.int32)
+    if k_scale is not None and block_table is None:
+        raise ValueError("k_scale/v_scale (quantized pool) require block_table")
     if block_table is not None:
         bt = jnp.asarray(block_table, jnp.int32)
+        quantized = k_scale is not None
         if n == 1:
-            k_cache, v_cache = paged_cache_chunk_update(
-                k_cache, v_cache, k_new, v_new, bt, starts, lens, write_starts,
-                None, 1, layout=layout,
-            )
+            if quantized:
+                k_cache, v_cache, k_scale, v_scale = paged_cache_chunk_update(
+                    k_cache, v_cache, k_new, v_new, bt, starts, lens,
+                    write_starts, None, 1, layout=layout,
+                    k_scale=k_scale, v_scale=v_scale,
+                )
+            else:
+                k_cache, v_cache = paged_cache_chunk_update(
+                    k_cache, v_cache, k_new, v_new, bt, starts, lens,
+                    write_starts, None, 1, layout=layout,
+                )
             o = paged_cache_chunk_decode(
                 q, k_cache, v_cache, bt, starts, None, 1,
                 layout=layout, window=window, scale=scale,
+                k_scale=k_scale, v_scale=v_scale,
             )
+            if quantized:
+                return o, k_cache, v_cache, k_scale, v_scale
             return o, k_cache, v_cache
         cfg = AttentionPlanConfig(
             backend="decode", axis_name=ctx.sp_axis, n=n,
             window=window, layout=layout, scale=scale, paged=True,
+            kv_dtype=("int8" if k_cache.dtype == jnp.int8 else "fp8")
+            if quantized else "fp",
         )
         rep = P(None, None, None, None)
         pool_spec = P(None, ctx.sp_axis, None, None)
+        if quantized:
+            scale_spec = P(None, ctx.sp_axis, None)
+            f = shard_map(
+                lambda q, kn, vn, kp, vp, st, ln, ws, bt, ks, vs: _chunk_step_local(
+                    q, kn, vn, kp, vp, st, ln, ws, cfg, bt=bt, ks=ks, vs=vs
+                ),
+                mesh=ctx.shard_map_mesh(),
+                in_specs=(rep, rep, rep, pool_spec, pool_spec,
+                          P(None), P(None), P(None), P(None, None),
+                          scale_spec, scale_spec),
+                out_specs=(rep, pool_spec, pool_spec, scale_spec, scale_spec),
+                check_vma=False,
+            )
+            return f(q, k_new, v_new, k_cache, v_cache, starts, lens,
+                     write_starts, bt, k_scale, v_scale)
         f = shard_map(
             lambda q, kn, vn, kp, vp, st, ln, ws, bt: _chunk_step_local(
                 q, kn, vn, kp, vp, st, ln, ws, cfg, bt=bt

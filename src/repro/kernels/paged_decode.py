@@ -114,13 +114,9 @@ def _decode_kernel(
     q_ref,  # [1, H, D]
     k_ref,  # [1, page_size, Hkv, D] one physical page
     v_ref,
-    o_ref,  # [1, 1, H, D] fp32 split partial
-    lse_ref,  # [1, 1, H] fp32
-    # scratch
-    acc_ref,  # [H, D] fp32
-    m_ref,  # [H, 1] fp32
-    l_ref,  # [H, 1] fp32
-    *,
+    # quantized pools add two [1, page_size, Hkv] fp32 scale blocks here,
+    # then outputs o [1,1,H,D] / lse [1,1,H], then scratch acc/m/l
+    *rest,
     scale: float,
     stride_kv: int,
     page_size: int,
@@ -129,7 +125,13 @@ def _decode_kernel(
     hi: int,  # window - 1, or BAND_INF for no window
     group: int,  # H // Hkv (GQA)
     hkv: int,
+    quantized: bool,
 ):
+    if quantized:
+        ks_ref, vs_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
     b, s, p = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when(p == 0)
@@ -156,6 +158,13 @@ def _decode_kernel(
         q = q_ref[0].astype(jnp.float32)  # [H, D]
         k = k_ref[0].astype(jnp.float32)  # [page_size, Hkv, D]
         v = v_ref[0].astype(jnp.float32)
+        if quantized:
+            # dequantize IN VMEM, right after the page's DMA: the scale tile
+            # rode along as an extra prefetched operand through the same
+            # clamped index map, so HBM moved 1-byte elements + one fp32
+            # scale per (token, kv-head) instead of fp32 K/V
+            k = k * ks_ref[0][:, :, None].astype(jnp.float32)
+            v = v * vs_ref[0][:, :, None].astype(jnp.float32)
         s_rows = []
         for hk in range(hkv):  # GQA: per-kv-head [group, page_size] scores
             s_rows.append(jax.lax.dot_general(
@@ -206,10 +215,16 @@ def paged_flash_decode(
     scale: Optional[float] = None,
     num_splits: Optional[int] = None,
     interpret: Optional[bool] = None,
+    k_scale: Optional[jnp.ndarray] = None,  # [num_pages, page_size, Hkv] f32
+    v_scale: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """This shard's decode partial straight off the page pool: returns
     (o [B,1,H,D] in q.dtype, lse [B,H,1] fp32) — the same contract as the
-    gather path's banded partial, ready for the cross-shard psum combine."""
+    gather path's banded partial, ready for the cross-shard psum combine.
+
+    ``k_scale``/``v_scale`` mark a quantized pool (int8 / fp8 elements):
+    each page's scale tile is fetched through the same clamped index map and
+    K/V are dequantized in VMEM right after the DMA."""
     B, _, H, D = q.shape
     num_pages, page_size, hkv, _ = k_pool.shape
     max_pages = block_table.shape[1]
@@ -244,14 +259,28 @@ def paged_flash_decode(
         lp_eff = jnp.clip(lp, lp_lo, lp_hi)
         return (jnp.maximum(bt_ref[b, lp_eff], 0), 0, 0, 0)
 
+    def scale_index_map(b, s, p, bt_ref, pos_ref, off_ref):
+        # the scale tile rides the pool's physical-page resolution verbatim
+        return kv_index_map(b, s, p, bt_ref, pos_ref, off_ref)[:3]
+
+    quantized = k_scale is not None
+    in_specs = [
+        pl.BlockSpec((1, H, D), lambda b, s, p, *_: (b, 0, 0)),
+        pl.BlockSpec((1, page_size, hkv, D), kv_index_map),
+        pl.BlockSpec((1, page_size, hkv, D), kv_index_map),
+    ]
+    operands = [bt, pos, off, q[:, 0], k_pool, v_pool]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, page_size, hkv), scale_index_map),
+            pl.BlockSpec((1, page_size, hkv), scale_index_map),
+        ]
+        operands += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, num_splits, pages_per_split),
-        in_specs=[
-            pl.BlockSpec((1, H, D), lambda b, s, p, *_: (b, 0, 0)),
-            pl.BlockSpec((1, page_size, hkv, D), kv_index_map),
-            pl.BlockSpec((1, page_size, hkv, D), kv_index_map),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, H, D), lambda b, s, p, *_: (b, s, 0, 0)),
             pl.BlockSpec((1, 1, H), lambda b, s, p, *_: (b, s, 0)),
@@ -266,9 +295,9 @@ def paged_flash_decode(
         _decode_kernel,
         scale=float(scale), stride_kv=stride_kv, page_size=page_size,
         max_pages=max_pages, pages_per_split=pages_per_split, hi=hi,
-        group=group, hkv=hkv,
+        group=group, hkv=hkv, quantized=quantized,
     )
-    like = (q, k_pool, v_pool, bt, pos, off)
+    like = tuple(operands)
     o_parts, lse_parts = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -283,6 +312,6 @@ def paged_flash_decode(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         name="paged_flash_decode",
-    )(bt, pos, off, q[:, 0], k_pool, v_pool)
+    )(*operands)
     o, lse = combine_split_partials(o_parts, lse_parts)
     return o.astype(q.dtype), lse

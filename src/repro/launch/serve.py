@@ -56,6 +56,10 @@ def main():
                     choices=("auto", "native", "gather"),
                     help="flash-decode variant: auto (paged -> split-K "
                          "native kernel), native, or the gather oracle")
+    ap.add_argument("--kv-dtype", default="fp", choices=("fp", "int8", "fp8"),
+                    help="paged-pool storage: fp keeps cache_dtype; int8/fp8 "
+                         "store quantized pages + per-(token, kv-head) f32 "
+                         "scales, dequantized in-kernel (requires --paged)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="continuous prefill: ingest prompts in chunks of "
                          "this many tokens, interleaved with decode")
@@ -105,7 +109,8 @@ def main():
         return ServeConfig(
             max_seq=args.max_seq, num_slots=args.slots, paged=args.paged,
             page_size=args.page_size, num_pages=args.num_pages,
-            decode_kernel=args.decode_kernel, prefill_chunk=args.prefill_chunk,
+            decode_kernel=args.decode_kernel, kv_dtype=args.kv_dtype,
+            prefill_chunk=args.prefill_chunk,
             tick_token_budget=args.tick_token_budget,
             spec_k=spec_k, spec_draft=args.spec_draft,
             spec_max_misses=args.spec_max_misses or None,
@@ -163,6 +168,15 @@ def main():
             }
         if args.paged:
             summary["kv_cache"] = eng.kv_cache_stats()
+        if args.kv_dtype != "fp":
+            kv = eng.kv_cache_stats()
+            summary["quantized_kv"] = {
+                "kv_dtype": args.kv_dtype,
+                "quantized_pages": kv["quantized_pages"],
+                "scale_entries_in_use": kv["scale_entries_in_use"],
+                "scale_table_bytes": kv["scale_table_bytes"],
+                "dequant_fallbacks": kv["dequant_fallbacks"],
+            }
         print(json.dumps(summary))
         if args.check_spec_identical:
             # gate: the speculative run above must be token-identical to a

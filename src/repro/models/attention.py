@@ -73,14 +73,18 @@ def decode_attention_step(
     scale: Optional[float] = None,
     block_table: Optional[jnp.ndarray] = None,  # [B, max_pages]: paged cache
     decode_kernel: Optional[str] = None,  # None -> ctx.decode_kernel
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    k_scale: Optional[jnp.ndarray] = None,  # f32 scale tables: quantized pool
+    v_scale: Optional[jnp.ndarray] = None,
+):
     """Returns (o, new_k_cache, new_v_cache).  ``block_table`` is handed to
     the decode backend verbatim; with the native kernel variant it is read
-    in-kernel (scalar-prefetched), never gathered into a dense view."""
+    in-kernel (scalar-prefetched), never gathered into a dense view.  With
+    ``k_scale``/``v_scale`` (quantized paged pool) the return extends to
+    ``(o, k_cache, v_cache, k_scale, v_scale)``."""
     return dispatch.decode_attention_step(
         q, k_new, v_new, k_cache, v_cache, pos, ctx,
         window=window, layout=layout, scale=scale, block_table=block_table,
-        decode_kernel=decode_kernel,
+        decode_kernel=decode_kernel, k_scale=k_scale, v_scale=v_scale,
     )
 
 
@@ -99,12 +103,16 @@ def chunk_attention_step(
     layout: str = "striped",
     scale: Optional[float] = None,
     block_table: Optional[jnp.ndarray] = None,  # [B, max_pages]: paged cache
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    k_scale: Optional[jnp.ndarray] = None,  # f32 scale tables: quantized pool
+    v_scale: Optional[jnp.ndarray] = None,
+):
     """Continuous-prefill chunk append + prefix-causal attention; returns
-    (o, new_k_cache, new_v_cache) like ``decode_attention_step``."""
+    (o, new_k_cache, new_v_cache) like ``decode_attention_step`` (plus the
+    updated scale tables when a quantized pool passes them)."""
     return dispatch.chunk_attention_step(
         q, k_new, v_new, k_cache, v_cache, starts, lens, write_starts, ctx,
         window=window, layout=layout, scale=scale, block_table=block_table,
+        k_scale=k_scale, v_scale=v_scale,
     )
 
 

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.core import kv_quant
 from repro.kernels import ops as kops
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
@@ -257,7 +258,7 @@ def _attn_cache_dims(cfg: ModelConfig):
 
 
 def init_cache(cfg: ModelConfig, batch: int, cap: int, dtype=jnp.bfloat16, ctx=None,
-               paged=None):
+               paged=None, kv_dtype: str = "fp"):
     """Decode cache with a PER-SLOT position vector ``pos: [B]`` — each batch
     row (serving slot) may sit at a different depth, which is what lets the
     continuous-batching engine decode mixed-depth slots in one jitted step.
@@ -267,7 +268,12 @@ def init_cache(cfg: ModelConfig, batch: int, cap: int, dtype=jnp.bfloat16, ctx=N
     an int32 block table ``"bt": [batch, max_pages]`` (-1 = unallocated):
     memory scales with allocated pages, not ``batch x cap``, and identical
     prompt prefixes can share refcounted pages.  SSM / cross-attention state
-    stays per-slot dense (it is O(1) or encoder-sized per slot)."""
+    stays per-slot dense (it is O(1) or encoder-sized per slot).
+
+    ``kv_dtype`` ("fp" | "int8" | "fp8", paged only) stores the page pool
+    quantized with per-(token, kv-head) scales in side tables
+    ``"k_scale"/"v_scale": [L, num_pages, n*page_size, Hkv]`` f32 that share
+    the pool's physical indexing (same page ids, same columns)."""
     L = cfg.num_layers
     cache: Dict = {"pos": jnp.zeros((batch,), jnp.int32)}
     if cfg.family != "ssm":
@@ -283,10 +289,17 @@ def init_cache(cfg: ModelConfig, batch: int, cap: int, dtype=jnp.bfloat16, ctx=N
                 raise ValueError(
                     f"paged virtual capacity {paged.virtual_cap} < cap {cap}"
                 )
-            cache["k"] = jnp.zeros((L, paged.num_pages, paged.chunk, hkv, dk), dtype)
-            cache["v"] = jnp.zeros((L, paged.num_pages, paged.chunk, hkv, dv), dtype)
+            store = kv_quant.storage_dtype(kv_dtype, dtype)
+            cache["k"] = jnp.zeros((L, paged.num_pages, paged.chunk, hkv, dk), store)
+            cache["v"] = jnp.zeros((L, paged.num_pages, paged.chunk, hkv, dv), store)
             cache["bt"] = jnp.full((batch, paged.max_pages), -1, jnp.int32)
+            if kv_dtype != "fp":
+                shape = (L, paged.num_pages, paged.chunk, hkv)
+                cache["k_scale"] = jnp.zeros(shape, kv_quant.SCALE_DTYPE)
+                cache["v_scale"] = jnp.zeros(shape, kv_quant.SCALE_DTYPE)
         else:
+            if kv_dtype != "fp":
+                raise ValueError("quantized KV storage requires the paged cache")
             cache["k"] = jnp.zeros((L, batch, cap, hkv, dk), dtype)
             cache["v"] = jnp.zeros((L, batch, cap, hkv, dv), dtype)
     if cfg.ssm is not None:
@@ -368,10 +381,19 @@ def _decode_block(x, lp, cache_l, cfg: ModelConfig, ctx: ParallelCtx, pos, bt=No
     q, k_new, v_new, scale = _decode_qkv(h, lp["attn"], cfg, pos)
     # the decode cache is ALWAYS striped (even for contiguous-train archs):
     # prefill restripes K/V once; appends then stay load-balanced forever
-    o, ck, cv = attn.decode_attention_step(
-        q, k_new, v_new, cache_l["k"], cache_l["v"], pos, ctx,
-        window=cfg.window, layout="striped", scale=scale, block_table=bt,
-    )
+    ks, vs = cache_l.get("k_scale"), cache_l.get("v_scale")
+    if ks is not None:
+        o, ck, cv, ks, vs = attn.decode_attention_step(
+            q, k_new, v_new, cache_l["k"], cache_l["v"], pos, ctx,
+            window=cfg.window, layout="striped", scale=scale, block_table=bt,
+            k_scale=ks, v_scale=vs,
+        )
+        new_cache["k_scale"], new_cache["v_scale"] = ks, vs
+    else:
+        o, ck, cv = attn.decode_attention_step(
+            q, k_new, v_new, cache_l["k"], cache_l["v"], pos, ctx,
+            window=cfg.window, layout="striped", scale=scale, block_table=bt,
+        )
     new_cache["k"], new_cache["v"] = ck, cv
     y = _decode_attn_out(o, x, lp["attn"], cfg)
 
@@ -511,10 +533,20 @@ def _chunk_forward(params, cfg: ModelConfig, ctx: ParallelCtx, tokens, starts,
         q, k_new, v_new, scale = _decode_qkv(h, lp["attn"], cfg, positions)
         # the decode cache is ALWAYS striped; chunk rows scatter straight to
         # their owner shards exactly like single-token appends
-        o, ck, cv = attn.chunk_attention_step(
-            q, k_new, v_new, cl["k"], cl["v"], starts, lens, write_starts, ctx,
-            window=cfg.window, layout="striped", scale=scale, block_table=bt,
-        )
+        ks, vs = cl.get("k_scale"), cl.get("v_scale")
+        if ks is not None:
+            o, ck, cv, ks, vs = attn.chunk_attention_step(
+                q, k_new, v_new, cl["k"], cl["v"], starts, lens, write_starts,
+                ctx, window=cfg.window, layout="striped", scale=scale,
+                block_table=bt, k_scale=ks, v_scale=vs,
+            )
+            new_cl["k_scale"], new_cl["v_scale"] = ks, vs
+        else:
+            o, ck, cv = attn.chunk_attention_step(
+                q, k_new, v_new, cl["k"], cl["v"], starts, lens, write_starts,
+                ctx, window=cfg.window, layout="striped", scale=scale,
+                block_table=bt,
+            )
         new_cl["k"], new_cl["v"] = ck, cv
         y = _decode_attn_out(o, x, lp["attn"], cfg)
         if cfg.moe is not None:
@@ -528,7 +560,8 @@ def _chunk_forward(params, cfg: ModelConfig, ctx: ParallelCtx, tokens, starts,
     return x, new_layer_cache, bt
 
 
-def verify_step(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
+def verify_step(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache,
+                return_logits: bool = False):
     """Speculative verify: score K candidate tokens per slot in ONE banded
     chunk launch and commit the longest accepted prefix in-graph.
 
@@ -559,7 +592,8 @@ def verify_step(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
     additionally frees now-unneeded tail pages (allocator rollback).
 
     Returns ``(y [B, K] int32, commit [B] int32, new cache)`` with
-    ``pos = starts + commit`` for active rows."""
+    ``pos = starts + commit`` for active rows; ``return_logits`` appends the
+    raw per-position logits ``[B, K, V]`` (debug / error-bound checks)."""
     tokens = batch["tokens"]
     starts = jnp.asarray(batch["starts"], jnp.int32)
     lens = jnp.asarray(batch["lens"], jnp.int32)
@@ -583,6 +617,8 @@ def verify_step(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
     new_cache["pos"] = jnp.where(lens > 0, starts + commit, cache["pos"])
     if bt is not None:
         new_cache["bt"] = bt
+    if return_logits:
+        return y, commit, new_cache, logits
     return y, commit, new_cache
 
 
@@ -708,8 +744,16 @@ def prefill(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
     else:
         cap = cache["k"].shape[2] if has_attn else None
         g_idx = _cache_scatter_indices(cfg, S, cap, ctx.sp_size) if has_attn else None
-    keys = [k for k in ("k", "v", "ssm", "cross_k", "cross_v") if k in cache]
+    keys = [
+        k for k in ("k", "v", "k_scale", "v_scale", "ssm", "cross_k", "cross_v")
+        if k in cache
+    ]
     layer_cache = {k: cache[k] for k in keys}
+    # quantized pool: prefill quantizes at write time, exactly like appends
+    kv_dtype = (
+        ("int8" if cache["k"].dtype == jnp.int8 else "fp8")
+        if "k_scale" in cache else "fp"
+    )
 
     def _kv_for_cache(h, lp):
         return _project_kv_for_cache(h, lp, cfg, positions)
@@ -723,7 +767,18 @@ def prefill(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cache):
                 x, lp["attn"]["ln"], lp["attn"]["ln_b"]
             )
             kk, vv = _kv_for_cache(h, lp["attn"])
-            if paged:
+            if paged and kv_dtype != "fp":
+                qk, sk = kv_quant.quantize(kk[0], kv_dtype)
+                qv, sv = kv_quant.quantize(vv[0], kv_dtype)
+                new_cl["k"] = cl["k"].at[page_idx, col_idx].set(qk, mode="drop")
+                new_cl["v"] = cl["v"].at[page_idx, col_idx].set(qv, mode="drop")
+                new_cl["k_scale"] = cl["k_scale"].at[page_idx, col_idx].set(
+                    sk, mode="drop"
+                )
+                new_cl["v_scale"] = cl["v_scale"].at[page_idx, col_idx].set(
+                    sv, mode="drop"
+                )
+            elif paged:
                 new_cl["k"] = cl["k"].at[page_idx, col_idx].set(
                     kk[0].astype(cl["k"].dtype), mode="drop"
                 )
@@ -825,6 +880,11 @@ def prefill_packed(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cach
     k_docs = slots.shape[0]
     n = ctx.sp_size
     paged = "bt" in cache
+    # quantized pool: packed prefill quantizes at write time like appends
+    kv_dtype = (
+        ("int8" if cache["k"].dtype == jnp.int8 else "fp8")
+        if "k_scale" in cache else "fp"
+    )
 
     x = jnp.take(params["embed"], tokens, axis=0)
     x = ctx.constrain(x, "seq", None)
@@ -863,18 +923,33 @@ def prefill_packed(params, cfg: ModelConfig, ctx: ParallelCtx, batch: Dict, cach
             x, lp["attn"]["ln"], lp["attn"]["ln_b"]
         )
         kk, vv = _project_kv_for_cache(h, lp["attn"], cfg, positions)
-        new_cl["k"] = cl["k"].at[row_idx, g_idx].set(
-            kk[0].astype(cl["k"].dtype), mode="drop"
-        )
-        new_cl["v"] = cl["v"].at[row_idx, g_idx].set(
-            vv[0].astype(cl["v"].dtype), mode="drop"
-        )
+        if kv_dtype != "fp":
+            qk, sk = kv_quant.quantize(kk[0], kv_dtype)
+            qv, sv = kv_quant.quantize(vv[0], kv_dtype)
+            new_cl["k"] = cl["k"].at[row_idx, g_idx].set(qk, mode="drop")
+            new_cl["v"] = cl["v"].at[row_idx, g_idx].set(qv, mode="drop")
+            new_cl["k_scale"] = cl["k_scale"].at[row_idx, g_idx].set(
+                sk, mode="drop"
+            )
+            new_cl["v_scale"] = cl["v_scale"].at[row_idx, g_idx].set(
+                sv, mode="drop"
+            )
+        else:
+            new_cl["k"] = cl["k"].at[row_idx, g_idx].set(
+                kk[0].astype(cl["k"].dtype), mode="drop"
+            )
+            new_cl["v"] = cl["v"].at[row_idx, g_idx].set(
+                vv[0].astype(cl["v"].dtype), mode="drop"
+            )
         x, _ = _decoder_block(x, lp, cfg, ctx, positions, segments=segments)
         return x, new_cl
 
     if ctx.remat:
         body = jax.checkpoint(body, prevent_cse=False)
-    layer_cache = {key: cache[key] for key in ("k", "v")}
+    layer_cache = {
+        key: cache[key]
+        for key in ("k", "v", "k_scale", "v_scale") if key in cache
+    }
     x, new_layer_cache = _stack_scan(body, x, (params["layers"], layer_cache), ctx)
     x = _final_norm(x, params, cfg)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]

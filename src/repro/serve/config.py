@@ -52,6 +52,15 @@ Speculative decode (this PR) adds three more:
   concurrent suspended slots probe in ONE shared launch.  ``None`` never
   suspends.  The counter resets on a fully-accepted verify tick and at
   admission.
+
+Quantized KV (this PR) adds one:
+
+* ``kv_dtype`` — ``"fp"`` (default) stores pages in ``cache_dtype``;
+  ``"int8"`` / ``"fp8"`` store the paged pool quantized with
+  per-(token, kv-head) scales in a side table that shares the block
+  table's physical indexing, dequantized inside the decode kernel right
+  after each page's DMA.  Requires ``paged=True``; ``"fp8"`` additionally
+  requires runtime float8_e4m3fn support.
 """
 
 from __future__ import annotations
@@ -60,6 +69,8 @@ import dataclasses
 from typing import Any, Optional, Tuple
 
 import jax.numpy as jnp
+
+from repro.core import kv_quant
 
 __all__ = ["ServeConfig"]
 
@@ -84,6 +95,7 @@ class ServeConfig:
     page_size: Optional[int] = None  # per-shard tokens per page (paged)
     num_pages: Optional[int] = None  # physical pool size (paged)
     decode_kernel: str = "auto"  # auto | native | gather | band
+    kv_dtype: str = "fp"  # fp | int8 | fp8: paged-pool storage precision
     prefill_chunk: Optional[int] = None  # continuous prefill: chunk size
     tick_token_budget: Optional[int] = None  # cap decode+chunk tokens per tick
     spec_k: int = 0  # speculative decode: tokens verified per slot per tick
@@ -118,6 +130,19 @@ class ServeConfig:
             raise ValueError(f"page_size must be >= 1, got {self.page_size}")
         if self.num_pages is not None and self.num_pages < 1:
             raise ValueError(f"num_pages must be >= 1, got {self.num_pages}")
+        if self.kv_dtype not in kv_quant.KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be one of {kv_quant.KV_DTYPES}, "
+                f"got {self.kv_dtype!r}"
+            )
+        if self.kv_dtype != "fp":
+            if not self.paged:
+                raise ValueError("kv_dtype requires paged=True (pool storage)")
+            if self.kv_dtype == "fp8" and not kv_quant.fp8_supported():
+                raise ValueError(
+                    "kv_dtype='fp8' requires runtime float8_e4m3fn support; "
+                    "use 'int8'"
+                )
         if self.prefill_chunk is not None and self.prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
         if self.tick_token_budget is not None:

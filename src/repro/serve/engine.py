@@ -147,6 +147,17 @@ class ServeEngine:
         # (serve/kv_pool.py) — memory follows allocated pages, and identical
         # prompt prefixes share pages across requests
         self.paged = serve.paged
+        # quantized pool storage: int8/fp8 pages + per-(token, kv-head) scale
+        # side tables riding the block table's physical indexing
+        self.kv_dtype = serve.kv_dtype
+        self._quantized = serve.kv_dtype != "fp"
+        self.dequant_fallbacks = 0  # quantized ticks served by the gather ref
+        self._native_decode = (
+            dispatch._resolve_decode_kernel(
+                getattr(self.ctx, "decode_kernel", "auto"), paged=serve.paged
+            ) == "native"
+            if serve.paged else False
+        )
         self.allocator: Optional[PageAllocator] = None
         if serve.paged:
             if cfg.ssm is not None or cfg.encoder_layers:
@@ -158,7 +169,7 @@ class ServeEngine:
                 serve.max_seq, max(n, 1), serve.num_slots,
                 page_size=serve.page_size, num_pages=serve.num_pages,
             )
-            self.allocator = PageAllocator(layout)
+            self.allocator = PageAllocator(layout, quantized=self._quantized)
         # SSD's recurrent state has no pad-correction: prefill exactly
         exact = cfg.ssm is not None
         buckets = (
@@ -194,6 +205,7 @@ class ServeEngine:
         self._cache = tfm.init_cache(
             cfg, self.num_slots, self.max_seq, dtype=self.cache_dtype, ctx=self.ctx,
             paged=self.allocator.layout if self.allocator else None,
+            kv_dtype=serve.kv_dtype,
         )
         self._cur = np.zeros((self.num_slots, 1), np.int32)  # last token per slot
         self._depth = np.zeros((self.num_slots,), np.int64)  # host view of pos
@@ -229,6 +241,11 @@ class ServeEngine:
         # tokens/s — serve_bench reports both)
         self.tick_prefill_tokens: List[int] = []
         self.tick_decode_tokens: List[int] = []
+        # debug logit capture (set BEFORE the first tick; read at trace time):
+        # records every generated token's full logits row per rid so the
+        # distributed quant check can bound per-token error vs an fp engine
+        self.capture_logits = False
+        self.debug_logits: Dict[int, List[np.ndarray]] = {}
         self._decode = jax.jit(self._decode_traced)
         self._copy_pages = jax.jit(self._copy_pages_traced)
         self._chunk_step = jax.jit(self._chunk_traced)
@@ -253,7 +270,10 @@ class ServeEngine:
             "pos_set": pos_set,
         }
         logits, cache = tfm.prefill_chunk(params, self.cfg, self.ctx, batch, cache)
-        return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B]
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B]
+        if self.capture_logits:
+            return cache, first, logits
+        return cache, first
 
     def _verify_traced(self, params, cache, tokens, starts, lens):
         """Speculative verify: ONE fixed-shape [num_slots, spec_k] banded
@@ -270,15 +290,22 @@ class ServeEngine:
             # verify appends everything it scores: write start == band start
             "write_starts": starts,
         }
-        return tfm.verify_step(params, self.cfg, self.ctx, batch, cache)
+        return tfm.verify_step(
+            params, self.cfg, self.ctx, batch, cache,
+            return_logits=self.capture_logits,
+        )
 
     def _copy_pages_traced(self, cache, src, dst):
         """Copy-on-write: physical page src[i] -> dst[i] in every layer's
         pool.  Pad entries carry dst == num_pages, which the scatter drops;
         fixed [num_slots] operand shapes keep this a single trace."""
         out = dict(cache)
-        for key in ("k", "v"):
-            pool = cache[key]  # [L, num_pages, n*ps, Hkv, D]
+        # quantized pools copy the scale tables in lockstep with the pages:
+        # a CoW'd page with stale scales would dequantize garbage
+        for key in ("k", "v", "k_scale", "v_scale"):
+            if key not in cache:
+                continue
+            pool = cache[key]  # [L, num_pages, n*ps, Hkv, D] (scales: no D)
             out[key] = pool.at[:, dst].set(pool[:, src], mode="drop")
         return out
 
@@ -356,6 +383,8 @@ class ServeEngine:
                 batch["shared_len"] = shared_len
                 logits, cache = tfm.prefill(params, cfg, ctx, batch, cache)
                 first = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [1,1]
+                if self.capture_logits:
+                    return cache, first, logits[0, 0]
                 return cache, first
             row = tfm.init_cache(cfg, 1, self.max_seq, dtype=self.cache_dtype, ctx=ctx)
             logits, row = tfm.prefill(params, cfg, ctx, batch, row)
@@ -367,7 +396,10 @@ class ServeEngine:
                     big, small.astype(big.dtype), slot, axis=ax
                 )
 
-            return jax.tree.map(insert, cache, row), first
+            merged = jax.tree.map(insert, cache, row)
+            if self.capture_logits:
+                return merged, first, logits[0, 0]
+            return merged, first
 
         jitted = jax.jit(fn)
         self._prefill_fns[bucket] = jitted
@@ -431,7 +463,10 @@ class ServeEngine:
             if self.paged:
                 batch["shared_lens"] = shared_lens
             logits, cache = tfm.prefill_packed(params, cfg, ctx, batch, cache)
-            return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [k]
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [k]
+            if self.capture_logits:
+                return cache, first, logits
+            return cache, first
 
         jitted = jax.jit(fn)
         self._prefill_fns[key] = jitted
@@ -507,7 +542,7 @@ class ServeEngine:
         shared = self._alloc_pages(slot, req) if self.paged else 0
         self._sync_block_table()
         fn = self._get_prefill(bucket)
-        self._cache, first = fn(
+        out = fn(
             self.params,
             self._cache,
             jnp.asarray(toks),
@@ -515,6 +550,11 @@ class ServeEngine:
             jnp.asarray(slot, jnp.int32),
             jnp.asarray(shared, jnp.int32),
         )
+        if self.capture_logits:
+            self._cache, first, row = out
+            self.debug_logits.setdefault(req.rid, []).append(np.asarray(row))
+        else:
+            self._cache, first = out
         self._depth[slot] = len(req.prompt)
         return int(np.asarray(first)[0, 0])
 
@@ -537,7 +577,7 @@ class ServeEngine:
         ]
         self._sync_block_table()
         fn = self._get_prefill_packed(bucket, k)
-        self._cache, firsts = fn(
+        out = fn(
             self.params,
             self._cache,
             jnp.asarray(toks),
@@ -545,6 +585,13 @@ class ServeEngine:
             jnp.asarray([slot for slot, _ in group], jnp.int32),
             jnp.asarray(shared, jnp.int32),
         )
+        if self.capture_logits:
+            self._cache, firsts, rows = out
+            rows_np = np.asarray(rows)
+            for d, (_, req) in enumerate(group):
+                self.debug_logits.setdefault(req.rid, []).append(rows_np[d])
+        else:
+            self._cache, firsts = out
         for (slot, req), ln in zip(group, lens):
             self._depth[slot] = ln
         return [int(t) for t in np.asarray(firsts)]
@@ -591,13 +638,21 @@ class ServeEngine:
         self.chunk_launches += 1
         self.chunk_launch_tokens += B * C  # device tokens (incl. pad rows)
         self._sync_block_table()  # paged: admission allocated this plan's pages
-        self._cache, first = self._chunk_step(
+        out = self._chunk_step(
             self.params, self._cache, jnp.asarray(tokens), jnp.asarray(starts),
             jnp.asarray(lens), jnp.asarray(wstarts), jnp.asarray(pos_set),
         )
+        logits_np = None
+        if self.capture_logits:
+            self._cache, first, logits = out
+            logits_np = np.asarray(logits)
+        else:
+            self._cache, first = out
         first_np = np.asarray(first)
         for slot, req in finishing:
             self._depth[slot] = len(req.prompt)
+            if logits_np is not None:
+                self.debug_logits.setdefault(req.rid, []).append(logits_np[slot])
             self._record_first_token(slot, req, int(first_np[slot]), finished)
         return total, len(finishing)
 
@@ -632,15 +687,20 @@ class ServeEngine:
                     copies.append(cp)
             self._apply_copies(copies)
             self._sync_block_table()
-        nxt, self._cache, _ = self._decode(
+        if self._quantized and not self._native_decode:
+            self.dequant_fallbacks += 1  # gather-path dequant served this tick
+        nxt, self._cache, logits = self._decode(
             self.params, self._cache, jnp.asarray(self._cur)
         )
         nxt_np = np.asarray(nxt)
+        logits_np = np.asarray(logits) if self.capture_logits else None
         tokens = 0
         for slot in decodable:
             self._depth[slot] += 1
             req = self.scheduler.slots[slot]
             tok = int(nxt_np[slot, 0])
+            if logits_np is not None:
+                self.debug_logits.setdefault(req.rid, []).append(logits_np[slot, 0])
             req.generated.append(tok)
             req.token_ticks.append(self._tick)
             tokens += 1
@@ -723,13 +783,21 @@ class ServeEngine:
             self._apply_copies(copies)
             self._sync_block_table()
         self.verify_launches += 1
-        y, commit, self._cache = self._verify(
+        if self._quantized and not self._native_decode:
+            self.dequant_fallbacks += 1  # gather-path dequant served this tick
+        out = self._verify(
             self.params,
             self._cache,
             jnp.asarray(tokens),
             jnp.asarray(starts),
             jnp.asarray(lens),
         )
+        logits_np = None
+        if self.capture_logits:
+            y, commit, self._cache, v_logits = out
+            logits_np = np.asarray(v_logits)
+        else:
+            y, commit, self._cache = out
         y_np = np.asarray(y)
         commit_np = np.asarray(commit)
         generated = 0
@@ -754,6 +822,10 @@ class ServeEngine:
             done = False
             for i in range(committed):
                 tok = int(y_np[slot, i])
+                if logits_np is not None:
+                    self.debug_logits.setdefault(req.rid, []).append(
+                        logits_np[slot, i]
+                    )
                 req.generated.append(tok)
                 req.token_ticks.append(self._tick)  # same tick: all one launch
                 generated += 1
@@ -896,10 +968,17 @@ class ServeEngine:
         if cfg.family == "ssm":
             return {"cache_bytes": 0.0, **spec}
         L = cfg.num_layers
-        itemsize = jnp.dtype(self.cache_dtype).itemsize
+        # the POOL's storage width, not cache_dtype: a quantized pool stores
+        # int8/fp8 elements with f32 scales accounted separately below
+        itemsize = jnp.dtype(self._cache["k"].dtype).itemsize
         hkv = self._cache["k"].shape[-2]
         elem = self._cache["k"].shape[-1] + self._cache["v"].shape[-1]  # dk + dv
         per_tok = L * hkv * elem * itemsize
+        # per-(token, kv-head) scale entries: one f32 each for K and V
+        scale_per_tok = (
+            L * hkv * 2 * jnp.dtype(self._cache["k_scale"].dtype).itemsize
+            if "k_scale" in self._cache else 0
+        )
         if self.allocator is None:
             return {
                 "paged": 0,
@@ -921,6 +1000,9 @@ class ServeEngine:
             # ... vs what the workload actually touched
             "peak_page_bytes": float(stats["peak_in_use"] * lay.chunk * per_tok),
             "bt_uploads": float(self.bt_uploads),
+            # quantized pool: scale-table reservation + gather-ref fallbacks
+            "scale_table_bytes": float(lay.num_pages * lay.chunk * scale_per_tok),
+            "dequant_fallbacks": float(self.dequant_fallbacks),
             **{k: float(v) for k, v in stats.items()},
             **spec,
         }

@@ -124,8 +124,14 @@ class PageAllocator:
 
     FREE = -1
 
-    def __init__(self, layout: PagedLayout):
+    def __init__(self, layout: PagedLayout, quantized: bool = False):
         self.layout = layout
+        # quantized pools carry a scale tile per physical page (side table
+        # indexed by the same block table); its liveness is counted
+        # INDEPENDENTLY of the free list so "scales drain with pages" is a
+        # real invariant, not a tautology
+        self.quantized = bool(quantized)
+        self.scale_entries_in_use = 0
         self.block_table = np.full((0, layout.max_pages), self.FREE, np.int32)
         self.ref = np.zeros((layout.num_pages,), np.int32)
         self.gen = np.zeros((layout.num_pages,), np.int64)  # bumped on free
@@ -193,6 +199,8 @@ class PageAllocator:
         pid = self._free.pop()
         self.ref[pid] = 1
         self.fresh_allocs += 1
+        if self.quantized:
+            self.scale_entries_in_use += 1
         self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
         return pid
 
@@ -201,6 +209,8 @@ class PageAllocator:
         if self.ref[pid] == 0:
             self.gen[pid] += 1  # invalidate any prefix-registry entries
             self._free.append(pid)
+            if self.quantized:
+                self.scale_entries_in_use -= 1
         elif self.ref[pid] < 0:
             raise RuntimeError(f"double free of page {pid}")
 
@@ -341,6 +351,8 @@ class PageAllocator:
             "shared_hits": self.shared_hits,
             "cow_copies": self.cow_copies,
             "spec_rolled_back_pages": self.spec_rolled_back,
+            "quantized_pages": self.pages_in_use if self.quantized else 0,
+            "scale_entries_in_use": self.scale_entries_in_use,
         }
 
 

@@ -111,3 +111,15 @@ def test_spec_decode():
     to vanilla greedy decode and to single-device generation, dense and
     paged (rollback draining the pool to zero), in one verify trace."""
     _run_checks("spec_decode")
+
+
+def test_quant_kv():
+    """Quantized int8 paged KV pool on a (2,4) mesh: the quantized engine
+    replays the mixed streaming trace (prefix sharing + continuous prefill
+    + spec_k=4) with per-token logit error inside the documented bound vs
+    the fp paged engine (greedy flips only on explained near-ties) and
+    pages + scale entries draining to zero."""
+    report = _run_checks("quant_kv")
+    detail = report["quant_kv"]["detail"]
+    assert detail["max_logit_err"] <= detail["logit_bound"]
+    assert detail["bytes_per_token_ratio"] <= 0.55

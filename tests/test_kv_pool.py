@@ -1,11 +1,16 @@
 """Paged KV-cache pool: allocator lifecycle, refcounts, prefix sharing,
-copy-on-write, admission accounting, and the block-table gather oracle."""
+copy-on-write, admission accounting, the block-table gather oracle, and the
+quantized pool's scale bookkeeping (quantize round-trip bound, CoW scale
+copies, rollback draining scale entries with pages)."""
 
 import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+import jax.numpy as jnp
+
+from repro.core import kv_quant
 from repro.serve.kv_pool import PageAllocator, PagedLayout, gather_block_table
 from repro.serve.scheduler import Scheduler
 
@@ -174,3 +179,96 @@ def test_block_table_gather_matches_dense(depths, page_size, seed):
     got = gather_block_table(pool, a.device_table(len(depths)))
     for slot, d in enumerate(depths):
         np.testing.assert_array_equal(got[slot, :d], dense[slot, :d])
+
+
+# --------------------------------------------------------------------------
+# quantized pool: round-trip bound, scale bookkeeping, CoW, rollback
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    shape=st.sampled_from([(3, 2, 8), (1, 4), (5, 1, 1, 16)]),
+    scale_mag=st.floats(min_value=-6.0, max_value=6.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_quantize_dequantize_roundtrip_bound(shape, scale_mag, seed):
+    """Symmetric per-last-axis quantization: |x - dequant(quantize(x))| must
+    stay within REL_ERROR_BOUND * amax elementwise, across magnitudes from
+    1e-6 to 1e6 — and exact zeros must round-trip to exact zeros."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape).astype(np.float32) * (10.0 ** scale_mag)
+    x[..., 0] = 0.0  # exercise the zero lane alongside live values
+    q, s = kv_quant.quantize(jnp.asarray(x), "int8")
+    deq = np.asarray(kv_quant.dequantize(q, s))
+    amax = np.abs(x).max(axis=-1, keepdims=True)
+    bound = kv_quant.REL_ERROR_BOUND["int8"] * amax
+    assert (np.abs(x - deq) <= bound + 1e-30).all()
+    zero_rows = amax[..., 0] == 0
+    assert (np.asarray(s)[zero_rows] == 0).all()
+    assert (deq[np.broadcast_to(amax == 0, x.shape)] == 0).all()
+
+
+def test_quantized_allocator_tracks_scale_entries():
+    """scale_entries_in_use mirrors pages_in_use through the whole lifecycle
+    (alloc, shared-prefix admission, CoW, free) — counted independently of
+    the free list so drain-together is a real invariant, not a tautology."""
+    a = PageAllocator(PagedLayout(8, 4, 4, 1), quantized=True)
+    prompt = np.arange(6, dtype=np.int32)
+    a.alloc_slot(0, prompt, 2)
+    assert a.scale_entries_in_use == a.pages_in_use == 2
+    got = a.alloc_slot(1, prompt, 2)  # shares page 0: no new scale entry
+    assert got.shared_pages == 1
+    assert a.scale_entries_in_use == a.pages_in_use == 3
+    cp = a.ensure_append(1, 4)  # CoW off the shared page 1 (partial tail)
+    if cp is not None:  # the private copy claims its own scale entry
+        assert a.scale_entries_in_use == a.pages_in_use
+    a.free_slot(0)
+    a.free_slot(1)
+    assert a.scale_entries_in_use == 0 and a.pages_in_use == 0
+    stats = a.stats()
+    assert stats["quantized_pages"] == 0 and stats["scale_entries_in_use"] == 0
+
+
+def test_cow_copy_includes_scale_tables():
+    """The engine's CoW page copy must move the scale side tables in lockstep
+    with the pages: a copied int8 page read through stale scales dequantizes
+    garbage."""
+    from repro.serve.engine import ServeEngine
+
+    L, num_pages, cols, hkv, d = 2, 4, 4, 2, 8
+    rng = np.random.default_rng(7)
+    cache = {
+        "k": jnp.asarray(rng.integers(-127, 128, (L, num_pages, cols, hkv, d)), jnp.int8),
+        "v": jnp.asarray(rng.integers(-127, 128, (L, num_pages, cols, hkv, d)), jnp.int8),
+        "k_scale": jnp.asarray(rng.random((L, num_pages, cols, hkv)), jnp.float32),
+        "v_scale": jnp.asarray(rng.random((L, num_pages, cols, hkv)), jnp.float32),
+    }
+    src = jnp.asarray([1, 0], jnp.int32)
+    dst = jnp.asarray([3, num_pages], jnp.int32)  # second entry: pad, dropped
+    out = ServeEngine._copy_pages_traced(None, cache, src, dst)
+    for key in ("k", "v", "k_scale", "v_scale"):
+        np.testing.assert_array_equal(
+            np.asarray(out[key][:, 3]), np.asarray(cache[key][:, 1])
+        )
+        # untouched pages (incl. the dropped pad write) stay bitwise put
+        np.testing.assert_array_equal(
+            np.asarray(out[key][:, :3]), np.asarray(cache[key][:, :3])
+        )
+
+
+def test_rollback_frees_scale_entries_with_pages():
+    """Speculative rollback on a quantized allocator drops the rejected tail
+    pages AND their scale entries; retiring everything drains both counters
+    to zero together."""
+    a = PageAllocator(PagedLayout(8, 4, 4, 1), quantized=True)
+    a.alloc_slot(0, np.arange(4, dtype=np.int32), 12)
+    assert a.scale_entries_in_use == a.pages_in_use == 1
+    # a verify span crossing two page boundaries claims two append pages
+    copies = a.ensure_span(0, 4, 8)
+    assert copies == []
+    assert a.scale_entries_in_use == a.pages_in_use == 3
+    a.rollback(0, keep_len=5)  # reject back to one token past the prompt
+    assert a.scale_entries_in_use == a.pages_in_use == 2
+    a.free_slot(0)
+    assert a.scale_entries_in_use == 0 and a.pages_in_use == 0

@@ -122,7 +122,7 @@ def test_plan_cache_key_distinct_per_mode():
         cfg = AttentionPlanConfig(backend="mesh", axis_name="sp", n=8, a=2,
                                   comm_overlap=mode)
         keys[mode], descs[mode] = _plan_key(cfg, comm, hw)
-        assert descs[mode]["v"] == 4
+        assert descs[mode]["v"] == 5
         assert descs[mode]["comm_overlap"] == mode
     assert len(set(keys.values())) == 3
 

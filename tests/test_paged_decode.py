@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.core import decode_attention as da
 from repro.core import dispatch
+from repro.core import kv_quant
 from repro.core.am import CommModel
 from repro.kernels import ops
 from repro.kernels import paged_decode as pk
@@ -27,17 +28,35 @@ from repro.serve.kv_pool import PageAllocator, PagedLayout
 H, HKV, D = 4, 2, 8
 POISON = 1e4  # any leak of a masked/unallocated position is unmissable
 
+# native-vs-oracle tolerance per storage mode: both paths dequantize the SAME
+# stored values, so quantization noise cancels and only combine-order fp error
+# remains; quantized modes get a little headroom for the extra scale multiply
+_TOLS = {"fp": (2e-5, 1e-5), "int8": (5e-5, 2e-5), "fp8": (5e-5, 2e-5)}
 
-def _build_pool(rng, depths, page_size, max_pages, extra_pages=0):
+
+def _build_pool(rng, depths, page_size, max_pages, extra_pages=0, kv_dtype="fp"):
     """Allocator-backed local pool: slot rows at the given LOCAL depths, all
-    unwritten positions (page tails past depth, free pages) poisoned."""
+    unwritten positions (page tails past depth, free pages) poisoned.
+
+    ``kv_dtype != "fp"`` stores the pool quantized (scale side tables
+    returned last); the dense oracle copy then holds the DEQUANTIZED values,
+    so oracle comparisons check the read path, not quantization noise.
+    Quantized poison: saturated codes under a huge scale."""
     lay = PagedLayout(
         num_pages=len(depths) * max_pages + extra_pages,
         page_size=page_size, max_pages=max_pages, n=1,
     )
-    alloc = PageAllocator(lay)
-    k_pool = np.full((lay.num_pages, page_size, HKV, D), POISON, np.float32)
-    v_pool = np.full_like(k_pool, POISON)
+    alloc = PageAllocator(lay, quantized=kv_dtype != "fp")
+    if kv_dtype == "fp":
+        k_pool = np.full((lay.num_pages, page_size, HKV, D), POISON, np.float32)
+        v_pool = np.full_like(k_pool, POISON)
+        k_scale = v_scale = None
+    else:
+        store = np.dtype(kv_quant.storage_dtype(kv_dtype))
+        k_pool = np.full((lay.num_pages, page_size, HKV, D), 127, np.int8).astype(store)
+        v_pool = k_pool.copy()
+        k_scale = np.full((lay.num_pages, page_size, HKV), POISON, np.float32)
+        v_scale = k_scale.copy()
     dense_k = np.zeros((len(depths), max_pages * page_size, HKV, D), np.float32)
     dense_v = np.zeros_like(dense_k)
     for slot, d in enumerate(depths):
@@ -46,11 +65,22 @@ def _build_pool(rng, depths, page_size, max_pages, extra_pages=0):
         for p in range(d):
             kv = rng.normal(size=(2, HKV, D)).astype(np.float32)
             lp, off = p // page_size, p % page_size
-            k_pool[alloc.block_table[slot, lp], off] = kv[0]
-            v_pool[alloc.block_table[slot, lp], off] = kv[1]
-            dense_k[slot, p], dense_v[slot, p] = kv[0], kv[1]
+            pid = alloc.block_table[slot, lp]
+            if kv_dtype == "fp":
+                k_pool[pid, off], v_pool[pid, off] = kv[0], kv[1]
+                dense_k[slot, p], dense_v[slot, p] = kv[0], kv[1]
+            else:
+                qk, sk = kv_quant.quantize(jnp.asarray(kv[0]), kv_dtype)
+                qv, sv = kv_quant.quantize(jnp.asarray(kv[1]), kv_dtype)
+                k_pool[pid, off], k_scale[pid, off] = np.asarray(qk), np.asarray(sk)
+                v_pool[pid, off], v_scale[pid, off] = np.asarray(qv), np.asarray(sv)
+                dense_k[slot, p] = np.asarray(kv_quant.dequantize(qk, sk))
+                dense_v[slot, p] = np.asarray(kv_quant.dequantize(qv, sv))
     bt = jnp.asarray(alloc.device_table(len(depths)))
-    return alloc, jnp.asarray(k_pool), jnp.asarray(v_pool), bt, dense_k, dense_v
+    out = (alloc, jnp.asarray(k_pool), jnp.asarray(v_pool), bt, dense_k, dense_v)
+    if kv_dtype != "fp":
+        out += (jnp.asarray(k_scale), jnp.asarray(v_scale))
+    return out
 
 
 def _oracle_partial(q, dense_k, dense_v, pos, kv_off, stride, window):
@@ -74,15 +104,18 @@ def _oracle_partial(q, dense_k, dense_v, pos, kv_off, stride, window):
     stride=st.sampled_from([1, 2, 4]),
     window=st.sampled_from([None, 3, 8]),
     vector_pos=st.booleans(),
+    kv_dtype=st.sampled_from(["fp", "int8"]),
     seed=st.integers(min_value=0, max_value=2**31 - 1),
 )
-def test_native_matches_gather_oracle(depths, page_size, stride, window, vector_pos, seed):
+def test_native_matches_gather_oracle(
+    depths, page_size, stride, window, vector_pos, kv_dtype, seed
+):
     rng = np.random.default_rng(seed)
     max_pages = -(-max(depths) // page_size) + 1  # at least one never-written page
     shard = rng.integers(0, stride)  # striped shard geometry: kv_off = i
-    _, k_pool, v_pool, bt, dense_k, dense_v = _build_pool(
-        rng, depths, page_size, max_pages
-    )
+    built = _build_pool(rng, depths, page_size, max_pages, kv_dtype=kv_dtype)
+    _, k_pool, v_pool, bt, dense_k, dense_v = built[:6]
+    k_scale, v_scale = built[6:] if kv_dtype != "fp" else (None, None)
     q = jnp.asarray(rng.normal(size=(len(depths), 1, H, D)), jnp.float32)
     # global position whose last visible LOCAL slot is depth-1 on this shard
     pos = np.asarray([shard + stride * (d - 1) for d in depths], np.int32)
@@ -90,11 +123,12 @@ def test_native_matches_gather_oracle(depths, page_size, stride, window, vector_
         pos = pos.min()  # scalar pos: every row at the same (lowest) depth
     o_n, lse_n = pk.paged_flash_decode(
         q, k_pool, v_pool, bt, jnp.asarray(pos), shard,
-        stride_kv=stride, window=window,
+        stride_kv=stride, window=window, k_scale=k_scale, v_scale=v_scale,
     )
     o_g, lse_g = _oracle_partial(q, dense_k, dense_v, pos, shard, stride, window)
-    np.testing.assert_allclose(np.asarray(o_n), np.asarray(o_g), atol=2e-5, rtol=1e-5)
-    np.testing.assert_allclose(np.asarray(lse_n), np.asarray(lse_g), atol=2e-5, rtol=1e-5)
+    atol, rtol = _TOLS[kv_dtype]
+    np.testing.assert_allclose(np.asarray(o_n), np.asarray(o_g), atol=atol, rtol=rtol)
+    np.testing.assert_allclose(np.asarray(lse_n), np.asarray(lse_g), atol=atol, rtol=rtol)
 
 
 # --------------------------------------------------------------------------
@@ -231,7 +265,8 @@ def test_dense_split_k_matches_band(m, window):
 # --------------------------------------------------------------------------
 
 
-def test_decode_step_kernel_flag_paged_n1():
+@pytest.mark.parametrize("kv_dtype", ["fp", "int8"])
+def test_decode_step_kernel_flag_paged_n1(kv_dtype):
     # depths chosen so the append position sits inside an ALLOCATED page —
     # the engine guarantees this via ensure_append before every tick (an
     # unallocated append target is out of contract: the scatter drops the
@@ -240,7 +275,9 @@ def test_decode_step_kernel_flag_paged_n1():
     rng = np.random.default_rng(4)
     depths = [5, 3]
     page_size, max_pages = 2, 4
-    _, k_pool, v_pool, bt, _, _ = _build_pool(rng, depths, page_size, max_pages)
+    built = _build_pool(rng, depths, page_size, max_pages, kv_dtype=kv_dtype)
+    _, k_pool, v_pool, bt = built[:4]
+    scales = built[6:] if kv_dtype != "fp" else (None, None)
     ctx = ParallelCtx()
     q = jnp.asarray(rng.normal(size=(2, 1, H, D)), jnp.float32)
     kn = jnp.asarray(rng.normal(size=(2, 1, HKV, D)), jnp.float32)
@@ -248,14 +285,19 @@ def test_decode_step_kernel_flag_paged_n1():
     pos = jnp.asarray(depths, jnp.int32)  # append AT depth, attend <= pos
     outs, pools = {}, {}
     for kernel in ("gather", "native"):
-        o, kp, vp = dispatch.decode_attention_step(
+        out = dispatch.decode_attention_step(
             q, kn, vn, k_pool, v_pool, pos, ctx,
             block_table=bt, decode_kernel=kernel,
+            k_scale=scales[0], v_scale=scales[1],
         )
-        outs[kernel] = np.asarray(o)
-        pools[kernel] = (np.asarray(kp), np.asarray(vp))
-    np.testing.assert_allclose(outs["native"], outs["gather"], atol=2e-5, rtol=1e-5)
-    # the UPDATE is kernel-independent: bitwise-identical pool writes
+        outs[kernel] = np.asarray(out[0])
+        # quantized: the updated scale tables ride along and must match too
+        pools[kernel] = tuple(np.asarray(a) for a in out[1:])
+    atol, rtol = _TOLS[kv_dtype]
+    np.testing.assert_allclose(outs["native"], outs["gather"], atol=atol, rtol=rtol)
+    # the UPDATE is kernel-independent: bitwise-identical pool/scale writes
+    # (the fp path keeps its exact bitwise guarantee; quantize-on-write is
+    # deterministic, so the quantized path holds it too)
     for a, b in zip(pools["gather"], pools["native"]):
         np.testing.assert_array_equal(a, b)
 
