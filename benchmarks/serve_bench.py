@@ -30,6 +30,11 @@ Four comparison sections ride along in the payload:
     random trace (drafts rejected, per-slot drafting suspends via
     ``spec_max_misses``: tokens/s stays ~baseline), with inter-token
     percentiles and acceptance/rollback counters per cell.
+  * ``robustness`` — the bursty trace on a deliberately tight page pool at
+    ``oversubscribe`` ∈ {1.0, 1.5, 2.0}: tokens/s, completed-request
+    throughput, and preemption/recompute counts per cell.  Conservative
+    admission (1.0) serializes on worst-case reservations; oversubscribed
+    admission trades preempt-and-recompute work for occupancy.
 """
 
 from __future__ import annotations
@@ -407,6 +412,59 @@ def bench_paged_prefix(cfg, params, *, seed=0, requests=6, new_tokens=4, max_seq
     return out
 
 
+def bench_robustness(
+    cfg, params, *, seed=0, requests=8, new_tokens=8, max_seq=128,
+):
+    """Bursty trace on a deliberately TIGHT page pool at oversubscribe ∈
+    {1.0, 1.5, 2.0}.  At 1.0 admission books worst-case lifetime pages, so
+    the tight pool serializes the burst; above 1.0 admission books prompt
+    pages + margin and resolves mid-decode exhaustion by preempting and
+    recomputing — per cell: tokens/s, completed-requests/s, and the
+    preemption/recompute counters that price the trade."""
+    import numpy as np
+
+    from repro.serve.config import ServeConfig
+    from repro.serve.engine import ServeEngine
+
+    rng = np.random.default_rng(seed)
+    lengths = [int(rng.choice([32, 48, 64])) for _ in range(requests)]
+    prompts = [
+        rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32) for ln in lengths
+    ]
+    # bursty: everything lands within the first two ticks
+    arrivals = [i % 2 for i in range(requests)]
+    out = {}
+    for factor in (1.0, 1.5, 2.0):
+        eng = ServeEngine(
+            cfg, params,
+            serve=ServeConfig(
+                max_seq=max_seq, num_slots=4, paged=True, page_size=8,
+                num_pages=24, prefill_chunk=32, oversubscribe=factor,
+            ),
+        )
+        snap = {}
+
+        def before_timed():
+            snap["preemptions"] = eng.preemptions
+            snap["recompute_tokens"] = eng.recompute_tokens
+
+        reqs, ticks, wall = _replay(
+            eng, prompts, arrivals, new_tokens, before_timed=before_timed
+        )
+        done = [r for r in reqs if r.status == "ok"]
+        tokens = sum(len(r.generated) for r in done)
+        out[f"oversubscribe_{factor}"] = {
+            "tokens_per_s": tokens / max(wall, 1e-9),
+            "completed_requests": len(done),
+            "completed_per_s": len(done) / max(wall, 1e-9),
+            "ticks": ticks,
+            "preemptions": eng.preemptions - snap["preemptions"],
+            "recompute_tokens": eng.recompute_tokens - snap["recompute_tokens"],
+            "statuses": sorted(r.status for r in reqs),
+        }
+    return out
+
+
 def run_bench(
     arch: str = "granite-8b",
     *,
@@ -500,6 +558,9 @@ def run_bench(
             chunk=prefill_chunk, budget=tick_token_budget,
         )
         payload["speculative"] = bench_speculative(cfg, seed=seed)
+        payload["robustness"] = bench_robustness(
+            cfg, params, seed=seed, max_seq=max_seq
+        )
     return payload
 
 

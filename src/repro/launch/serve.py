@@ -13,6 +13,13 @@ batching over the slot-pool engine.
 different depths decode in a single jitted step per tick.  Add
 ``--prefill-chunk 64 [--tick-token-budget 128]`` to ingest prompts through
 the continuous-prefill path, interleaved with decode.
+
+Robustness knobs: ``--oversubscribe 1.5`` admits against 1.5x the physical
+page pool (preempt-and-recompute under pressure), ``--deadline-ticks`` /
+``--cancel idx:tick`` exercise the lifecycle paths, ``--chaos-seed N``
+replays a seeded fault trace (squeezes + NaN ticks + dropped grants), and
+``--check-deterministic`` reruns everything and exits 1 unless statuses,
+streams, and chaos events reproduce exactly — the CI chaos-smoke gate.
 """
 
 import argparse
@@ -77,6 +84,30 @@ def main():
     ap.add_argument("--check-spec-identical", action="store_true",
                     help="replay the --stream trace again with spec_k=0 and "
                          "exit nonzero unless every token stream matches")
+    ap.add_argument("--oversubscribe", type=float, default=1.0,
+                    help="admit against this multiple of the physical page "
+                         "pool; > 1.0 enables preempt-and-recompute under "
+                         "pressure (requires --paged and --prefill-chunk)")
+    ap.add_argument("--deadline-ticks", type=int, default=None,
+                    help="retire every request (status 'deadline', partial "
+                         "tokens kept) this many ticks after its arrival")
+    ap.add_argument("--health-every", type=int, default=0,
+                    help="run the engine.health() invariant sweep every N "
+                         "ticks (0 = only on demand)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="inject a seeded deterministic fault trace (pool "
+                         "squeezes + NaN ticks + dropped grants) from "
+                         "testing/chaos.py")
+    ap.add_argument("--chaos-ticks", type=int, default=24,
+                    help="horizon the chaos event schedule is drawn over")
+    ap.add_argument("--cancel", default=None,
+                    help="comma list of request_index:tick cancellations "
+                         "applied during the --stream replay")
+    ap.add_argument("--check-deterministic", action="store_true",
+                    help="replay the whole --stream run (same seed, fresh "
+                         "engine + fresh chaos injector) and exit nonzero "
+                         "unless statuses, token streams, and chaos events "
+                         "all match exactly")
     args = ap.parse_args()
 
     if args.fake_devices:
@@ -114,9 +145,20 @@ def main():
             tick_token_budget=args.tick_token_budget,
             spec_k=spec_k, spec_draft=args.spec_draft,
             spec_max_misses=args.spec_max_misses or None,
+            oversubscribe=args.oversubscribe,
+            health_every=args.health_every,
         )
 
-    eng = ServeEngine(cfg, params, ctx=ctx, serve=make_serve(args.spec_k))
+    def make_chaos():
+        if args.chaos_seed is None:
+            return None
+        from repro.testing.chaos import ChaosConfig, ChaosInjector
+        return ChaosInjector(ChaosConfig(seed=args.chaos_seed,
+                                         ticks=args.chaos_ticks))
+
+    chaos = make_chaos()
+    eng = ServeEngine(cfg, params, ctx=ctx, serve=make_serve(args.spec_k),
+                      chaos=chaos)
     rng = np.random.default_rng(0)
 
     if args.stream:
@@ -125,20 +167,30 @@ def main():
             rng.integers(0, cfg.vocab_size, (ln,), dtype=np.int32)
             for ln, _ in trace
         ]
+        cancels = {}
+        if args.cancel:
+            for part in args.cancel.split(","):
+                idx, t = part.split(":")
+                cancels.setdefault(int(t), []).append(int(idx))
 
         def replay(engine, quiet=False):
             rids = [
-                engine.submit(p, max_new_tokens=args.new_tokens, arrival_tick=tick)
+                engine.submit(p, max_new_tokens=args.new_tokens,
+                              arrival_tick=tick,
+                              deadline_ticks=args.deadline_ticks)
                 for p, (_, tick) in zip(prompts, trace)
             ]
             ticks = 0
             while engine.has_work:
+                for idx in cancels.get(engine._tick, []):
+                    engine.cancel(rids[idx])
                 for req in engine.step():
                     if not quiet:
                         print(
                             f"rid={req.rid} len={len(req.prompt)} slot={req.slot} "
                             f"arrived@{req.arrival_tick} admitted@{req.admit_tick} "
-                            f"finished@{req.finish_tick}: {req.generated}"
+                            f"finished@{req.finish_tick} status={req.status}: "
+                            f"{req.generated}"
                         )
                 ticks += 1
             return rids, ticks
@@ -177,7 +229,55 @@ def main():
                 "scale_table_bytes": kv["scale_table_bytes"],
                 "dequant_fallbacks": kv["dequant_fallbacks"],
             }
+        if (args.oversubscribe > 1.0 or args.chaos_seed is not None
+                or args.deadline_ticks is not None or args.cancel):
+            statuses = {}
+            for rid in rids:
+                s = eng._finished[rid].status
+                statuses[s] = statuses.get(s, 0) + 1
+            kv = eng.kv_cache_stats()
+            summary["robustness"] = {
+                "oversubscribe": args.oversubscribe,
+                "statuses": statuses,
+                "preemptions": kv["preemptions"],
+                "recompute_tokens": kv["recompute_tokens"],
+                "cancelled": kv["cancelled"],
+                "deadline_expired": kv["deadline_expired"],
+                "numeric_errors": kv["numeric_errors"],
+                "rejected_requests": kv["rejected_requests"],
+                "health_sweeps": kv["health_sweeps"],
+                "chaos_dropped_grants": kv["chaos_dropped_grants"],
+                "chaos_events": chaos.events if chaos is not None else [],
+            }
         print(json.dumps(summary))
+        if args.check_deterministic:
+            # gate: a fresh engine + fresh injector replaying the identical
+            # (seed, trace, faults) triple must reproduce every outcome
+            chaos2 = make_chaos()
+            ref = ServeEngine(cfg, params, ctx=ctx,
+                              serve=make_serve(args.spec_k), chaos=chaos2)
+            ref_rids, _ = replay(ref, quiet=True)
+            for rid, ref_rid in zip(rids, ref_rids):
+                a, b = eng._finished[rid], ref._finished[ref_rid]
+                if a.status != b.status or a.generated != b.generated:
+                    print(
+                        f"check-deterministic: rid={rid} run1 "
+                        f"({a.status}, {a.generated}) != run2 "
+                        f"({b.status}, {b.generated})", file=sys.stderr,
+                    )
+                    return 1
+            if chaos is not None and chaos.events != chaos2.events:
+                print(
+                    f"check-deterministic: chaos traces diverged:\n"
+                    f"  run1 {chaos.events}\n  run2 {chaos2.events}",
+                    file=sys.stderr,
+                )
+                return 1
+            print(
+                f"check-deterministic: {len(rids)} outcomes and "
+                f"{len(chaos.events) if chaos is not None else 0} chaos "
+                f"events reproduced exactly"
+            )
         if args.check_spec_identical:
             # gate: the speculative run above must be token-identical to a
             # vanilla greedy replay of the exact same trace

@@ -61,6 +61,31 @@ Quantized KV (this PR) adds one:
   table's physical indexing, dequantized inside the decode kernel right
   after each page's DMA.  Requires ``paged=True``; ``"fp8"`` additionally
   requires runtime float8_e4m3fn support.
+
+Robustness (this PR) adds three:
+
+* ``oversubscribe`` — admission accounting capacity as a multiple of the
+  physical page pool.  ``1.0`` (default) keeps the conservative lifetime
+  reservation: ``prompt + max_new_tokens`` pages are booked for a
+  request's whole life, so mid-decode exhaustion is impossible — and the
+  pool idles whenever requests finish early.  ``> 1.0`` books lifetime
+  reservations against ``floor(oversubscribe * num_pages)`` virtual pages
+  and only requires the PROMPT pages (+ one page of margin) to fit
+  physically at admission; when a decode append then finds the free list
+  empty, the engine preempts a victim slot (youngest first, prefix-shared
+  donors last), frees its pages, and re-queues it with its generated
+  tokens appended to the prompt so continuous prefill recomputes it —
+  the resumed stream is token-identical to an uninterrupted run.
+  Requires ``paged=True`` and ``prefill_chunk`` (recompute rides the
+  chunk machinery).
+* ``nan_guard`` — per-tick NaN/Inf logit guard (default on): every decode
+  / verify / final-chunk launch also returns an in-graph per-slot
+  finiteness bit; a non-finite slot is retired with
+  ``RequestResult.status == "numeric_error"`` while every other slot's
+  tokens commit bitwise-unchanged (decode is batch-row-independent).
+* ``health_every`` — run ``engine.health()`` (allocator refcount/free-list
+  /scale-lockstep invariant sweep + engine slot cross-checks) every N
+  ticks, raising on any violation.  ``0`` (default) = only on demand.
 """
 
 from __future__ import annotations
@@ -102,6 +127,10 @@ class ServeConfig:
     spec_draft: str = "ngram"  # ngram (prompt-lookup) | off
     spec_max_misses: Optional[int] = 4  # consecutive missed verify ticks
     # before a slot's drafting suspends for a cooldown (None = never)
+    oversubscribe: float = 1.0  # admission capacity multiple (paged); > 1.0
+    # trades lifetime reservation for preempt-and-recompute under pressure
+    nan_guard: bool = True  # retire (not propagate) non-finite-logit slots
+    health_every: int = 0  # invariant sweep every N ticks (0 = on demand)
 
     def __post_init__(self):
         if self.max_seq < 1:
@@ -167,6 +196,25 @@ class ServeConfig:
         if self.spec_max_misses is not None and self.spec_max_misses < 1:
             raise ValueError(
                 f"spec_max_misses must be >= 1 or None, got {self.spec_max_misses}"
+            )
+        if self.oversubscribe < 1.0:
+            raise ValueError(
+                f"oversubscribe must be >= 1.0, got {self.oversubscribe}"
+            )
+        if self.oversubscribe > 1.0:
+            if not self.paged:
+                raise ValueError(
+                    "oversubscribe > 1.0 requires paged=True (preemption "
+                    "frees pages, not slot rows)"
+                )
+            if self.prefill_chunk is None:
+                raise ValueError(
+                    "oversubscribe > 1.0 requires prefill_chunk: preempted "
+                    "requests recompute through continuous prefill"
+                )
+        if self.health_every < 0:
+            raise ValueError(
+                f"health_every must be >= 0, got {self.health_every}"
             )
 
     @classmethod

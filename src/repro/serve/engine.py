@@ -40,11 +40,38 @@ from repro.core.am import CommModel
 from repro.models import transformer as tfm
 from repro.parallel.context import ParallelCtx
 from repro.serve.config import ServeConfig
-from repro.serve.kv_pool import PageAllocator, PagedLayout
+from repro.serve.kv_pool import PageAllocator, PagedLayout, PoolExhausted
 from repro.serve.scheduler import Request, RequestResult, Scheduler, default_buckets
 from repro.serve.speculative import propose_ngram
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "select_victim"]
+
+
+def select_victim(slots, allocator, protect=()):
+    """Preemption policy: pick the slot to evict when the page pool runs dry
+    mid-decode.  Victims are ranked (1) slots whose pages nobody else maps
+    first — evicting a prefix DONOR strands nothing (refcounts keep shared
+    pages alive for the sharers) but frees fewer pages and forces the widest
+    recompute blast radius, so donors go last; (2) youngest admission first
+    (latest ``admit_tick``, then highest rid) — the oldest request always
+    makes progress, which is what bounds recompute work and guarantees
+    drain.  ``protect`` slots (the one being grown this tick) are exempt.
+    Returns the slot index, or None when nothing is evictable."""
+    cands = []
+    for slot, req in enumerate(slots):
+        if req is None or slot in protect:
+            continue
+        if allocator.slot_pages(slot) == 0:
+            continue  # nothing to reclaim
+        cands.append((
+            allocator.slot_shares_pages(slot),  # donors last
+            -(req.admit_tick if req.admit_tick is not None else -1),
+            -req.rid,
+            slot,
+        ))
+    if not cands:
+        return None
+    return min(cands)[3]
 
 # mid-prefill slots park their cache position past any capacity: the shared
 # decode step still ticks their row, but every write guard (pos < n*m) drops
@@ -82,6 +109,7 @@ class ServeEngine:
         ctx: Optional[ParallelCtx] = None,
         *,
         serve: Optional[ServeConfig] = None,
+        chaos=None,
         **legacy,
     ):
         if serve is not None and legacy:
@@ -169,7 +197,10 @@ class ServeEngine:
                 serve.max_seq, max(n, 1), serve.num_slots,
                 page_size=serve.page_size, num_pages=serve.num_pages,
             )
-            self.allocator = PageAllocator(layout, quantized=self._quantized)
+            self.allocator = PageAllocator(
+                layout, quantized=self._quantized,
+                oversubscribe=serve.oversubscribe,
+            )
         # SSD's recurrent state has no pad-correction: prefill exactly
         exact = cfg.ssm is not None
         buckets = (
@@ -246,6 +277,18 @@ class ServeEngine:
         # distributed quant check can bound per-token error vs an fp engine
         self.capture_logits = False
         self.debug_logits: Dict[int, List[np.ndarray]] = {}
+        # robustness: oversubscribed preemption + lifecycle + fault guards
+        self.nan_guard = serve.nan_guard
+        self.health_every = serve.health_every
+        self.chaos = chaos  # testing/chaos.py injector (None in production)
+        self.preemptions = 0  # mid-decode evictions (pool pressure)
+        self.recompute_tokens = 0  # tokens re-ingested for preempted requests
+        self.cancelled = 0
+        self.deadline_expired = 0
+        self.numeric_errors = 0
+        self.rejected_requests = 0
+        self.health_sweeps = 0
+        self.chaos_dropped_grants = 0
         self._decode = jax.jit(self._decode_traced)
         self._copy_pages = jax.jit(self._copy_pages_traced)
         self._chunk_step = jax.jit(self._chunk_traced)
@@ -255,7 +298,13 @@ class ServeEngine:
 
     def _decode_traced(self, params, cache, tokens):
         self.decode_trace_count += 1  # python side effect: trace-time only
-        return tfm.decode_step(params, cache, tokens, self.cfg, self.ctx)
+        nxt, cache, logits = tfm.decode_step(
+            params, cache, tokens, self.cfg, self.ctx
+        )
+        # per-slot finiteness bit for the NaN/Inf guard: reduced in-graph so
+        # the host transfer is [B] bools, not the full logits
+        ok = jnp.all(jnp.isfinite(logits), axis=(1, 2))
+        return nxt, cache, logits, ok
 
     def _chunk_traced(self, params, cache, tokens, starts, lens, wstarts, pos_set):
         """Continuous prefill: append one [num_slots, prefill_chunk] chunk
@@ -271,9 +320,10 @@ class ServeEngine:
         }
         logits, cache = tfm.prefill_chunk(params, self.cfg, self.ctx, batch, cache)
         first = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B]
+        ok = jnp.all(jnp.isfinite(logits), axis=1)  # NaN guard (final chunks)
         if self.capture_logits:
-            return cache, first, logits
-        return cache, first
+            return cache, first, logits, ok
+        return cache, first, ok
 
     def _verify_traced(self, params, cache, tokens, starts, lens):
         """Speculative verify: ONE fixed-shape [num_slots, spec_k] banded
@@ -290,10 +340,15 @@ class ServeEngine:
             # verify appends everything it scores: write start == band start
             "write_starts": starts,
         }
-        return tfm.verify_step(
-            params, self.cfg, self.ctx, batch, cache,
-            return_logits=self.capture_logits,
+        y, commit, cache, logits = tfm.verify_step(
+            params, self.cfg, self.ctx, batch, cache, return_logits=True,
         )
+        # finiteness over the whole [K, V] block; only the reduced [B] bit
+        # leaves the graph unless logits capture is on (XLA drops the rest)
+        ok = jnp.all(jnp.isfinite(logits), axis=(1, 2))
+        if self.capture_logits:
+            return y, commit, cache, logits, ok
+        return y, commit, cache, ok
 
     def _copy_pages_traced(self, cache, src, dst):
         """Copy-on-write: physical page src[i] -> dst[i] in every layer's
@@ -475,26 +530,205 @@ class ServeEngine:
     # -- streaming API ------------------------------------------------------
 
     def submit(
-        self, prompt: np.ndarray, max_new_tokens: int = 16, arrival_tick: int = 0
+        self, prompt: np.ndarray, max_new_tokens: int = 16, arrival_tick: int = 0,
+        *, deadline_ticks: Optional[int] = None, priority: int = 0,
     ) -> int:
         """Queue one request; returns its rid.  ``arrival_tick`` defers
-        admission until the engine clock reaches it (trace replay)."""
-        req = self.scheduler.submit(prompt, max_new_tokens, arrival_tick)
+        admission until the engine clock reaches it (trace replay).
+        ``deadline_ticks`` retires the request (status ``"deadline"``, partial
+        tokens kept) once that many ticks pass from arrival; higher
+        ``priority`` admits first (FIFO within a level)."""
+        req = self.scheduler.submit(
+            prompt, max_new_tokens, arrival_tick,
+            deadline_ticks=deadline_ticks, priority=priority,
+        )
         return req.rid
 
     @property
     def has_work(self) -> bool:
         return self.scheduler.has_work
 
-    def _finish(self, slot: int) -> RequestResult:
-        req = self.scheduler.retire(slot, self._tick)
+    def _finish(self, slot: int, status: str = "ok") -> RequestResult:
+        req = self.scheduler.retire(slot, self._tick, status=status)
+        freed: List[int] = []
         if self.allocator is not None:
             # drop the slot's page references; pages shared with live slots
             # survive until their last reader retires
-            self.allocator.free_slot(slot)
+            freed = self.allocator.free_slot(slot)
+        if status == "numeric_error":
+            self._scrub_numeric(slot, freed)
         result = RequestResult.from_request(req)
         self._finished[req.rid] = result
         return result
+
+    def _scrub_numeric(self, slot: int, freed: List[int]) -> None:
+        """Zero a numeric_error slot's K/V (quantized: also its scales)
+        before the data can be re-read.  Stale FINITE garbage in freed pages
+        is harmless — band-masked or overwritten before the band reaches it
+        — but non-finite garbage is not: additive ``-inf`` mask bias keeps
+        NaN NaN, so one retired slot's NaN could leak into other slots'
+        scores through FREE-entry clamped page reads.  Shared pages (ref
+        still > 0) are left alone: their content is live prefix data."""
+        self._cache = dict(self._cache)
+        keys = [k for k in ("k", "v", "k_scale", "v_scale") if k in self._cache]
+        if self.allocator is not None:
+            if not freed:
+                return
+            idx = jnp.asarray(freed, jnp.int32)
+            for key in keys:
+                self._cache[key] = self._cache[key].at[:, idx].set(0)
+        else:
+            for key in keys:
+                self._cache[key] = self._cache[key].at[:, slot].set(0)
+
+    def _finish_queued(self, req: Request) -> RequestResult:
+        """Terminal path for a request that never held a slot this time
+        around (cancelled / expired / rejected while queued).  A previously
+        preempted request may still carry generated tokens — they ride along
+        on the result."""
+        req.finish_tick = self._tick
+        result = RequestResult.from_request(req)
+        self._finished[req.rid] = result
+        return result
+
+    def cancel(self, rid: int) -> Optional[RequestResult]:
+        """Cancel a live request (queued or mid-flight).  Frees its slot and
+        pages immediately; partial tokens are kept on the result (status
+        ``"cancelled"``).  Returns the result, or None if the rid is not in
+        flight (already finished or unknown)."""
+        req = self.scheduler.cancel_queued(rid)
+        if req is not None:
+            self.cancelled += 1
+            return self._finish_queued(req)
+        req = self.scheduler.find(rid)
+        if req is None or req.slot is None:
+            return None
+        self.cancelled += 1
+        return self._finish(req.slot, status="cancelled")
+
+    # -- robustness: preemption, fault guards, health -----------------------
+
+    def _do_preempt(self, slot: int) -> List[int]:
+        """Evict ``slot`` back to the queue under pool pressure: free its
+        pages (refcounts keep prefix sharers' pages alive) and reset its
+        ingest cursor so admission recomputes prompt + generated through
+        continuous prefill.  Returns the physical pages whose refcount hit
+        zero (the caller scrubs pending CoW copies against them)."""
+        freed = self.allocator.free_slot(slot)
+        req = self.scheduler.preempt(slot)
+        req.preemptions += 1
+        req.recompute_tokens += req.context_len
+        self.preemptions += 1
+        self.recompute_tokens += req.context_len
+        self._shared_len[slot] = 0
+        # park the stale row: paged writes already drop through the FREE
+        # block-table row, parking additionally drops the pos-guard writes
+        # and mirrors the mid-prefill convention
+        self._cache = dict(self._cache)
+        self._cache["pos"] = self._cache["pos"].at[slot].set(_PARKED)
+        return freed
+
+    def _preempt_for(self, protect) -> Optional[List[int]]:
+        """Pick and evict one victim; None when nothing is evictable (the
+        caller re-raises the pool exhaustion)."""
+        if self.prefill_chunk is None:
+            return None  # recompute rides continuous prefill only
+        victim = select_victim(self.scheduler.slots, self.allocator, protect)
+        if victim is None:
+            return None
+        return self._do_preempt(victim)
+
+    def _ensure_append_robust(self, slot: int, pos: int, copies) -> None:
+        """``ensure_append`` with preempt-and-retry: on pool exhaustion evict
+        victims until the append fits (or nothing is left to evict).  Pending
+        CoW copies whose destination page was freed by a preemption are
+        scrubbed — the requester is gone, and the page may be re-issued
+        within this same ensure phase."""
+        while True:
+            try:
+                cp = self.allocator.ensure_append(slot, pos)
+                if cp is not None:
+                    copies.append(cp)
+                return
+            except PoolExhausted:
+                freed = self._preempt_for(protect={slot})
+                if freed is None:
+                    raise
+                drop = set(freed)
+                copies[:] = [(s, d) for (s, d) in copies if d not in drop]
+
+    def _ensure_span_robust(self, slot: int, start: int, count: int, copies) -> None:
+        """``ensure_span`` with preempt-and-retry (speculative verify)."""
+        chunk = self.allocator.layout.chunk
+        if count <= 0:
+            return
+        for lp in range(start // chunk, (start + count - 1) // chunk + 1):
+            if lp >= self.allocator.layout.max_pages:
+                break
+            self._ensure_append_robust(slot, max(start, lp * chunk), copies)
+
+    def poison_slot_cache(self, slot: int) -> None:
+        """Fault injection (testing/chaos.py): overwrite part of ``slot``'s
+        resident K with NaN so its next attention pass produces non-finite
+        logits — exercising the REAL in-graph guard path.  Batch rows are
+        independent, so only this slot's stream is affected.  Quantized
+        pools poison the f32 scale table (int8 codes cannot hold NaN)."""
+        self._cache = dict(self._cache)
+        if self.allocator is not None:
+            held = self.allocator.slot_pages(slot)
+            if held == 0:
+                return
+            pid = int(self.allocator.block_table[slot, 0])
+            key = "k_scale" if "k_scale" in self._cache else "k"
+            pool = self._cache[key]  # [L, num_pages, n*ps, ...]
+            self._cache[key] = pool.at[:, pid, 0].set(jnp.nan)
+        else:
+            key = "k_scale" if "k_scale" in self._cache else "k"
+            row = self._cache[key]  # [L, B, cap, ...]
+            self._cache[key] = row.at[:, slot, 0].set(jnp.nan)
+
+    def health(self) -> Dict[str, object]:
+        """Invariant sweep: allocator refcounts/free list/scale lockstep plus
+        engine-level slot cross-checks.  Raises on any violation; returns a
+        summary dict when healthy.  Runs automatically every
+        ``ServeConfig.health_every`` ticks."""
+        self.health_sweeps += 1
+        problems: List[str] = []
+        if self.allocator is not None:
+            problems += self.allocator.check_invariants()
+            # every page-holding allocator slot must be a live scheduler slot
+            for slot in self.allocator._slot_pages:
+                if not (0 <= slot < self.num_slots):
+                    problems.append(f"allocator holds pages for bad slot {slot}")
+                elif self.scheduler.slots[slot] is None:
+                    problems.append(
+                        f"orphaned slot {slot}: holds "
+                        f"{self.allocator.slot_pages(slot)} pages but no request"
+                    )
+            # ... and every ADMITTED paged request must hold pages (a request
+            # still queued holds none; mid-prefill and decoding both do)
+            for slot, req in enumerate(self.scheduler.slots):
+                if req is not None and self.allocator.slot_pages(slot) == 0:
+                    problems.append(
+                        f"slot {slot} (rid {req.rid}) active without pages"
+                    )
+        if problems:
+            raise RuntimeError(
+                "engine.health() invariant sweep failed:\n  " + "\n  ".join(problems)
+            )
+        out = {
+            "ok": True,
+            "tick": self._tick,
+            "active_slots": len(self.scheduler.active_slots()),
+            "queued": self.scheduler.pending,
+        }
+        if self.allocator is not None:
+            out.update(
+                pages_in_use=self.allocator.pages_in_use,
+                pages_reserved=self.allocator.pages_reserved,
+                scale_entries_in_use=self.allocator.scale_entries_in_use,
+            )
+        return out
 
     def _req_done(self, req: Request, tok: int) -> bool:
         if self.eos_id is not None and tok == self.eos_id:
@@ -503,10 +737,27 @@ class ServeEngine:
 
     def _alloc_pages(self, slot: int, req: Request) -> int:
         """Paged admission: claim (or prefix-share) the slot's pages and sync
-        the device block table BEFORE the prefill trace reads it.  Returns
-        the shared-prefix length the scatter must skip."""
-        alloc = self.allocator.alloc_slot(slot, req.prompt, req.max_new_tokens)
+        the device block table BEFORE the prefill trace reads it.  A resumed
+        (previously preempted) request allocates for its CONTEXT — prompt +
+        generated — and only its REMAINING token budget.  Returns the
+        shared-prefix length the scatter must skip."""
+        alloc = self.allocator.alloc_slot(
+            slot, req.context, req.remaining_new_tokens
+        )
         return alloc.shared_len
+
+    def _alloc_pages_robust(self, slot: int, req: Request) -> int:
+        """Admission alloc with preempt-and-retry: under oversubscription the
+        admission check only guaranteed PROMPT pages + margin, so a burst of
+        same-tick admissions (or a chaos squeeze) can still find the free
+        list short.  ``alloc_slot`` unwinds atomically on failure, so each
+        retry starts from a clean slate."""
+        while True:
+            try:
+                return self._alloc_pages(slot, req)
+            except PoolExhausted:
+                if self._preempt_for(protect={slot}) is None:
+                    raise
 
     def _resident_shared_len(self, slot: int, shared: int) -> int:
         """Shared-prefix tokens whose CONTENT is already resident.
@@ -525,9 +776,11 @@ class ServeEngine:
             int(p) for p in self.allocator.block_table[slot, : lay.pages_for(shared)]
         }
         for s2, r2 in enumerate(self.scheduler.slots):
-            if s2 == slot or r2 is None or r2.prefill_pos >= len(r2.prompt):
+            if s2 == slot or r2 is None or r2.prefill_pos >= r2.ingest_len:
                 continue
-            theirs = self.allocator.block_table[s2, : lay.pages_for(len(r2.prompt))]
+            if self.allocator.slot_pages(s2) == 0:
+                continue  # admitted this tick, pages not allocated yet
+            theirs = self.allocator.block_table[s2, : lay.pages_for(r2.ingest_len)]
             if mine & {int(p) for p in theirs}:
                 shared = min(shared, (r2.prefill_pos // lay.chunk) * lay.chunk)
         return shared
@@ -597,11 +850,14 @@ class ServeEngine:
         return [int(t) for t in np.asarray(firsts)]
 
     def _record_first_token(self, slot: int, req: Request, tok: int, finished) -> None:
-        """First generated token (from prefill logits, one-shot or final
-        chunk): same-tick bookkeeping shared by both ingestion modes."""
+        """First generated token off prefill logits (one-shot or final
+        chunk): same-tick bookkeeping shared by both ingestion modes.  For a
+        RESUMED (preempted) request this is the first token past the
+        recomputed context — TTFT keeps the original first-token tick."""
         req.generated.append(tok)
         req.token_ticks.append(self._tick)
-        req.first_token_tick = self._tick
+        if req.first_token_tick is None:
+            req.first_token_tick = self._tick
         self._cur[slot, 0] = tok
         if self._req_done(req, tok):
             finished.append(self._finish(slot))
@@ -623,7 +879,8 @@ class ServeEngine:
         finishing = []
         total = 0
         for slot, req, start, take in plan:
-            tokens[slot, :take] = req.prompt[start : start + take]
+            ctx_toks = req.context  # prompt + generated (recompute on resume)
+            tokens[slot, :take] = ctx_toks[start : start + take]
             starts[slot] = start
             lens[slot] = take
             wstarts[slot] = self._shared_len[slot]  # skip resident shared prefix
@@ -632,8 +889,8 @@ class ServeEngine:
             req.prefill_pos = start + take
             req.chunks += 1
             total += take
-            if req.prefill_pos >= len(req.prompt):
-                pos_set[slot] = len(req.prompt)
+            if req.prefill_pos >= req.ingest_len:
+                pos_set[slot] = req.ingest_len
                 finishing.append((slot, req))
         self.chunk_launches += 1
         self.chunk_launch_tokens += B * C  # device tokens (incl. pad rows)
@@ -644,17 +901,24 @@ class ServeEngine:
         )
         logits_np = None
         if self.capture_logits:
-            self._cache, first, logits = out
+            self._cache, first, logits, ok = out
             logits_np = np.asarray(logits)
         else:
-            self._cache, first = out
+            self._cache, first, ok = out
         first_np = np.asarray(first)
+        ok_np = np.asarray(ok)
+        n_first = 0
         for slot, req in finishing:
-            self._depth[slot] = len(req.prompt)
+            if self.nan_guard and not bool(ok_np[slot]):
+                self.numeric_errors += 1
+                finished.append(self._finish(slot, status="numeric_error"))
+                continue
+            self._depth[slot] = req.ingest_len
             if logits_np is not None:
                 self.debug_logits.setdefault(req.rid, []).append(logits_np[slot])
             self._record_first_token(slot, req, int(first_np[slot]), finished)
-        return total, len(finishing)
+            n_first += 1
+        return total, n_first
 
     def _apply_copies(self, copies) -> None:
         """Run queued CoW page copies through the jitted scatter (fixed
@@ -679,25 +943,39 @@ class ServeEngine:
         generated this tick."""
         if self.paged:
             # make every decodable slot's write position appendable:
-            # allocate tail pages on chunk boundaries, CoW shared tails
+            # allocate tail pages on chunk boundaries, CoW shared tails.
+            # Under oversubscription (or a chaos squeeze) an allocation may
+            # find the pool dry — preempt victims and retry; a preempted
+            # slot drops out of this tick's decodable set
             copies = []
             for slot in decodable:
-                cp = self.allocator.ensure_append(slot, int(self._depth[slot]))
-                if cp is not None:
-                    copies.append(cp)
+                if self.scheduler.slots[slot] is None:
+                    continue  # preempted by an earlier slot's ensure
+                self._ensure_append_robust(slot, int(self._depth[slot]), copies)
+            decodable = [s for s in decodable if self.scheduler.slots[s] is not None]
             self._apply_copies(copies)
             self._sync_block_table()
+            if not decodable:
+                return 0
         if self._quantized and not self._native_decode:
             self.dequant_fallbacks += 1  # gather-path dequant served this tick
-        nxt, self._cache, logits = self._decode(
+        nxt, self._cache, logits, ok = self._decode(
             self.params, self._cache, jnp.asarray(self._cur)
         )
         nxt_np = np.asarray(nxt)
+        ok_np = np.asarray(ok)
         logits_np = np.asarray(logits) if self.capture_logits else None
         tokens = 0
         for slot in decodable:
-            self._depth[slot] += 1
             req = self.scheduler.slots[slot]
+            if self.nan_guard and not bool(ok_np[slot]):
+                # non-finite logits: retire ONLY this slot; every other row's
+                # token came off the same launch and is bitwise what it would
+                # have been (batch rows are independent)
+                self.numeric_errors += 1
+                finished.append(self._finish(slot, status="numeric_error"))
+                continue
+            self._depth[slot] += 1
             tok = int(nxt_np[slot, 0])
             if logits_np is not None:
                 self.debug_logits.setdefault(req.rid, []).append(logits_np[slot, 0])
@@ -768,20 +1046,30 @@ class ServeEngine:
             tokens[slot, 1 : 1 + len(d)] = d
             starts[slot] = self._depth[slot]
             lens[slot] = 1 + len(d)
+        if self.paged:
+            copies = []
+            for slot in decodable:
+                if self.scheduler.slots[slot] is None:
+                    continue  # preempted by an earlier slot's ensure
+                self._ensure_span_robust(
+                    slot, int(self._depth[slot]), int(lens[slot]), copies
+                )
+            live = [s for s in decodable if self.scheduler.slots[s] is not None]
+            if len(live) < len(decodable):
+                for s in decodable:
+                    if self.scheduler.slots[s] is None:
+                        lens[s] = 0  # preempted rows write/commit nothing
+                decodable = live
+            self._apply_copies(copies)
+            self._sync_block_table()
+            if not decodable:
+                return 0
+        for slot in decodable:
+            d = granted.get(slot, [])
             if d:
                 req = self.scheduler.slots[slot]
                 req.spec_proposed += len(d)
                 self.spec_proposed += len(d)
-        if self.paged:
-            copies = []
-            for slot in decodable:
-                copies.extend(
-                    self.allocator.ensure_span(
-                        slot, int(self._depth[slot]), int(lens[slot])
-                    )
-                )
-            self._apply_copies(copies)
-            self._sync_block_table()
         self.verify_launches += 1
         if self._quantized and not self._native_decode:
             self.dequant_fallbacks += 1  # gather-path dequant served this tick
@@ -794,15 +1082,22 @@ class ServeEngine:
         )
         logits_np = None
         if self.capture_logits:
-            y, commit, self._cache, v_logits = out
+            y, commit, self._cache, v_logits, ok = out
             logits_np = np.asarray(v_logits)
         else:
-            y, commit, self._cache = out
+            y, commit, self._cache, ok = out
         y_np = np.asarray(y)
         commit_np = np.asarray(commit)
+        ok_np = np.asarray(ok)
         generated = 0
         for slot in decodable:
             req = self.scheduler.slots[slot]
+            if self.nan_guard and not bool(ok_np[slot]):
+                # non-finite verify logits: commit nothing for this slot,
+                # retire it alone (other rows commit bitwise-unchanged)
+                self.numeric_errors += 1
+                finished.append(self._finish(slot, status="numeric_error"))
+                continue
             committed = int(commit_np[slot])
             drafted = int(lens[slot]) - 1
             if drafted:
@@ -863,19 +1158,44 @@ class ServeEngine:
         finished: List[RequestResult] = []
         prefill_tokens = 0
         decode_tokens = 0
+        # 0. fault injection (testing only) + lifecycle expiry
+        if self.chaos is not None:
+            self.chaos.on_tick(self)
+        for req in self.scheduler.take_expired(self._tick):
+            self.deadline_expired += 1
+            finished.append(self._finish_queued(req))
+        for slot, req in enumerate(self.scheduler.slots):
+            if (
+                req is not None
+                and req.deadline_ticks is not None
+                and self._tick - req.arrival_tick >= req.deadline_ticks
+            ):
+                self.deadline_expired += 1
+                finished.append(self._finish(slot, status="deadline"))
         # 1. admission + prompt ingestion
         assigned = self.scheduler.admit(self._tick)
+        for req in self.scheduler.take_rejected():
+            self.rejected_requests += 1
+            finished.append(self._finish_queued(req))
         for slot, _ in assigned:
             self._spec_misses[slot] = 0  # fresh request: drafting re-enabled
         if self.prefill_chunk is not None:
             for slot, req in assigned:
-                shared = self._alloc_pages(slot, req) if self.paged else 0
+                shared = 0
+                if self.paged:
+                    try:
+                        shared = self._alloc_pages_robust(slot, req)
+                    except PoolExhausted:
+                        # nothing evictable (fresh squeeze / lone giant):
+                        # hand the slot back and retry on a later tick
+                        self.scheduler.preempt(slot)
+                        continue
                 if shared:
                     shared = self._resident_shared_len(slot, shared)
                 self._shared_len[slot] = shared
-                # fully-shared chunks never launch, but the LAST prompt token
+                # fully-shared chunks never launch, but the LAST context token
                 # always runs forward — its logits seed the first decode
-                req.prefill_pos = min(shared, len(req.prompt) - 1)
+                req.prefill_pos = min(shared, req.ingest_len - 1)
             if assigned:
                 # park mid-prefill rows so the shared decode's writes drop
                 idx = jnp.asarray([slot for slot, _ in assigned], jnp.int32)
@@ -885,9 +1205,15 @@ class ServeEngine:
                 s
                 for s in self.scheduler.active_slots()
                 if self.scheduler.slots[s].prefill_pos
-                >= len(self.scheduler.slots[s].prompt)
+                >= self.scheduler.slots[s].ingest_len
             ]
             plan = self.scheduler.plan_chunks(len(decodable))
+            if plan and self.chaos is not None and self.chaos.drop_grants(self._tick):
+                # injected scheduler fault: this tick's chunk grants vanish;
+                # progress resumes next tick (the head-of-line guarantee is
+                # per-plan, so a dropped plan only delays, never deadlocks)
+                self.chaos_dropped_grants += len(plan)
+                plan = []
             if plan:
                 ingested, n_first = self._run_chunks(plan, finished)
                 prefill_tokens += ingested
@@ -897,7 +1223,7 @@ class ServeEngine:
                     s
                     for s in self.scheduler.active_slots()
                     if self.scheduler.slots[s].prefill_pos
-                    >= len(self.scheduler.slots[s].prompt)
+                    >= self.scheduler.slots[s].ingest_len
                 ]
         else:
             if self._can_pack:
@@ -933,6 +1259,8 @@ class ServeEngine:
         self.tick_prefill_tokens.append(prefill_tokens)
         self.tick_decode_tokens.append(decode_tokens)
         self._tick += 1
+        if self.health_every and self._tick % self.health_every == 0:
+            self.health()  # raises on any invariant violation
         return finished
 
     def run(self) -> Dict[int, RequestResult]:
@@ -964,6 +1292,16 @@ class ServeEngine:
                 self.spec_accepted / self.spec_proposed if self.spec_proposed else 0.0
             ),
             "verify_launches": float(self.verify_launches),
+            # robustness counters (ISSUE 10): ride along on every branch so
+            # serve_bench / launch summaries need no allocator special-casing
+            "preemptions": float(self.preemptions),
+            "recompute_tokens": float(self.recompute_tokens),
+            "cancelled": float(self.cancelled),
+            "deadline_expired": float(self.deadline_expired),
+            "numeric_errors": float(self.numeric_errors),
+            "rejected_requests": float(self.rejected_requests),
+            "health_sweeps": float(self.health_sweeps),
+            "chaos_dropped_grants": float(self.chaos_dropped_grants),
         }
         if cfg.family == "ssm":
             return {"cache_bytes": 0.0, **spec}

@@ -42,7 +42,17 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["PagedLayout", "PageAllocator", "gather_block_table"]
+__all__ = ["PagedLayout", "PageAllocator", "PoolExhausted", "gather_block_table"]
+
+
+class PoolExhausted(RuntimeError):
+    """The free list cannot satisfy a page request RIGHT NOW.
+
+    Under conservative admission (``oversubscribe == 1.0``) this is an
+    allocator bug or an un-reserved caller; under oversubscription it is an
+    expected runtime event the engine answers by preempting a victim slot
+    and retrying.  Subclasses ``RuntimeError`` so pre-oversubscription
+    callers (and tests) that caught ``RuntimeError`` keep working."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,9 +133,23 @@ class PageAllocator:
     """
 
     FREE = -1
+    # extra physically-free pages required beyond the prompt at admission
+    # under oversubscription: the first append after prefill has somewhere
+    # to land without an immediate preemption
+    ADMIT_MARGIN = 1
 
-    def __init__(self, layout: PagedLayout, quantized: bool = False):
+    def __init__(
+        self, layout: PagedLayout, quantized: bool = False,
+        oversubscribe: float = 1.0,
+    ):
+        if oversubscribe < 1.0:
+            raise ValueError(f"oversubscribe must be >= 1.0, got {oversubscribe}")
         self.layout = layout
+        # admission accounting capacity: lifetime reservations may overbook
+        # the physical pool by this factor (1.0 = the conservative guarantee:
+        # no admitted request can ever exhaust the pool mid-decode)
+        self.oversubscribe = float(oversubscribe)
+        self.virtual_pages = int(layout.num_pages * self.oversubscribe)
         # quantized pools carry a scale tile per physical page (side table
         # indexed by the same block table); its liveness is counted
         # INDEPENDENTLY of the free list so "scales drain with pages" is a
@@ -147,7 +171,11 @@ class PageAllocator:
         self.shared_hits = 0  # pages admitted by prefix match instead
         self.cow_copies = 0
         self.spec_rolled_back = 0  # pages freed by speculative rollback
+        self.double_free_noops = 0  # idempotent free/rollback of a retired slot
         self.peak_in_use = 0
+        # chaos harness: pages seized OUT of the free list (fault injection);
+        # they count as in-use but carry no refs and no scale entries
+        self._seized: List[int] = []
         # bumped on every block-table mutation: the engine re-uploads the
         # device table only when this moved since the last sync
         self.version = 0
@@ -162,8 +190,23 @@ class PageAllocator:
     def pages_reserved(self) -> int:
         return sum(self._reserved.values())
 
+    @property
+    def pages_referenced(self) -> int:
+        """Pages with at least one live block-table reference (excludes
+        chaos-seized pages, which are in-use but own no data)."""
+        return int(np.count_nonzero(self.ref > 0))
+
     def slot_pages(self, slot: int) -> int:
         return self._slot_pages.get(slot, 0)
+
+    def slot_shares_pages(self, slot: int) -> bool:
+        """True when any of ``slot``'s pages is mapped by another live slot
+        (prefix donor / sharer) — preemption policy treats these as
+        last-resort victims."""
+        held = self._slot_pages.get(slot, 0)
+        if not held:
+            return False
+        return any(self.ref[int(p)] > 1 for p in self.block_table[slot, :held])
 
     # -- admission ----------------------------------------------------------
 
@@ -172,13 +215,38 @@ class PageAllocator:
         a shared page may need a private copy at any time)."""
         return self.layout.pages_for(prompt_len + max_new_tokens)
 
-    def can_admit(self, prompt_len: int, max_new_tokens: int, pending: int = 0) -> bool:
-        """Page-accounted admission: every admitted request must be able to
-        reach its token budget without mid-flight pool exhaustion.
-        ``pending`` carries pages already promised to requests admitted
-        earlier in the same tick (their ``alloc_slot`` hasn't run yet)."""
+    def can_admit(
+        self, prompt_len: int, max_new_tokens: int, pending: int = 0,
+        pending_prompt: int = 0,
+    ) -> bool:
+        """Page-accounted admission.  At ``oversubscribe == 1.0`` this is the
+        conservative guarantee: every admitted request can reach its token
+        budget without mid-flight pool exhaustion.  Above 1.0 lifetime
+        reservations book against the VIRTUAL capacity
+        (``floor(oversubscribe * num_pages)``) and only the prompt pages
+        (plus a one-page margin) must fit physically right now — mid-decode
+        exhaustion becomes an expected event the engine resolves by
+        preempt-and-recompute.  ``pending`` / ``pending_prompt`` carry pages
+        already promised to requests admitted earlier in the same tick
+        (their ``alloc_slot`` hasn't run yet)."""
         need = self.reserve_for(prompt_len, max_new_tokens)
-        return self.pages_reserved + pending + need <= self.layout.num_pages
+        if self.pages_reserved + pending + need > self.virtual_pages:
+            return False
+        if self.oversubscribe > 1.0:
+            prompt_pages = self.layout.pages_for(prompt_len)
+            now = self.pages_in_use + pending_prompt + prompt_pages
+            if now + self.ADMIT_MARGIN > self.layout.num_pages:
+                return False
+        return True
+
+    def never_admittable(self, prompt_len: int, max_new_tokens: int) -> bool:
+        """True when the request could not be admitted even into an EMPTY
+        pool — waiting can never help, so the scheduler rejects it instead
+        of blocking the queue head forever."""
+        need = self.reserve_for(prompt_len, max_new_tokens)
+        if need > self.virtual_pages:
+            return True
+        return self.layout.pages_for(prompt_len) > self.layout.num_pages
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -192,9 +260,12 @@ class PageAllocator:
 
     def _take_page(self) -> int:
         if not self._free:
-            raise RuntimeError(
-                "page pool exhausted — admission accounting should have "
-                "rejected this request (allocator bug or un-reserved caller)"
+            raise PoolExhausted(
+                f"page pool exhausted: {self.pages_in_use}/{self.layout.num_pages} "
+                f"pages in use ({self.pages_referenced} referenced, "
+                f"{len(self._seized)} seized), {self.pages_reserved} reserved "
+                f"against a virtual capacity of {self.virtual_pages} "
+                f"(oversubscribe={self.oversubscribe}), free list empty"
             )
         pid = self._free.pop()
         self.ref[pid] = 1
@@ -223,36 +294,50 @@ class PageAllocator:
             raise ValueError(f"slot {slot} still holds pages; free_slot first")
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         need = self.reserve_for(len(prompt), max_new_tokens)
-        if self.pages_reserved + need > self.layout.num_pages:
+        if self.pages_reserved + need > self.virtual_pages:
             raise RuntimeError(
-                f"admission without capacity: need {need} pages, "
-                f"{self.layout.num_pages - self.pages_reserved} unreserved"
+                f"admission without capacity: need {need} pages but only "
+                f"{self.virtual_pages - self.pages_reserved} of the virtual "
+                f"capacity {self.virtual_pages} is unreserved "
+                f"({self.pages_in_use}/{self.layout.num_pages} physical pages "
+                f"in use, oversubscribe={self.oversubscribe})"
             )
         self._ensure_rows(slot)
         chunk = self.layout.chunk
         n_pages = self.layout.pages_for(len(prompt))
         full = len(prompt) // chunk  # whole chunks eligible for sharing
         shared = 0
-        for c in range(full):
-            key = _prefix_key(prompt, (c + 1) * chunk)
-            hit = self._prefix.get(key)
-            if hit is None:
-                break
-            pid, stamp = hit
-            if self.ref[pid] <= 0 or self.gen[pid] != stamp:
-                del self._prefix[key]  # stale: owner retired since
-                break
-            self.block_table[slot, c] = pid
-            self.ref[pid] += 1
-            self.shared_hits += 1
-            shared = c + 1
-        for c in range(shared, n_pages):
-            pid = self._take_page()
-            self.block_table[slot, c] = pid
-            if c < full:  # register this slot's own full chunks
-                self._prefix[_prefix_key(prompt, (c + 1) * chunk)] = (
-                    pid, int(self.gen[pid]),
-                )
+        try:
+            for c in range(full):
+                key = _prefix_key(prompt, (c + 1) * chunk)
+                hit = self._prefix.get(key)
+                if hit is None:
+                    break
+                pid, stamp = hit
+                if self.ref[pid] <= 0 or self.gen[pid] != stamp:
+                    del self._prefix[key]  # stale: owner retired since
+                    break
+                self.block_table[slot, c] = pid
+                self.ref[pid] += 1
+                self.shared_hits += 1
+                shared = c + 1
+            for c in range(shared, n_pages):
+                pid = self._take_page()
+                self.block_table[slot, c] = pid
+                if c < full:  # register this slot's own full chunks
+                    self._prefix[_prefix_key(prompt, (c + 1) * chunk)] = (
+                        pid, int(self.gen[pid]),
+                    )
+        except PoolExhausted:
+            # atomic admission: a squeezed/oversubscribed pool may run dry
+            # mid-prompt — unwind every page this call took or shared so the
+            # engine can preempt (or defer) and retry cleanly
+            done = int(np.count_nonzero(self.block_table[slot, :n_pages] >= 0))
+            for c in range(done - 1, -1, -1):
+                self._release_page(int(self.block_table[slot, c]))
+                self.block_table[slot, c] = self.FREE
+            self.version += 1
+            raise
         self._slot_pages[slot] = n_pages
         self._reserved[slot] = need
         self.version += 1
@@ -310,7 +395,12 @@ class PageAllocator:
         before ``pos`` reaches it.  Speculative pages are never in the
         prefix registry (only ``alloc_slot`` registers, and only full prompt
         chunks), so sharers can never have mapped what is freed here.
+        Rolling back a slot that holds no pages (already retired/preempted)
+        is an idempotent no-op counted in ``double_free_noops``.
         Returns the number of pages freed."""
+        if slot not in self._slot_pages:
+            self.double_free_noops += 1
+            return 0
         held = self._slot_pages.get(slot, 0)
         target = self.layout.pages_for(keep_len)
         freed = 0
@@ -324,15 +414,114 @@ class PageAllocator:
             self.version += 1
         return freed
 
-    def free_slot(self, slot: int):
-        """Retire a slot: drop its references; pages survive while shared."""
+    def free_slot(self, slot: int) -> List[int]:
+        """Retire a slot: drop its references; pages survive while shared.
+        Freeing an already-free slot is an idempotent no-op (counted in
+        ``double_free_noops``), NOT a refcount corruption.  Returns the
+        physical pages whose refcount actually hit zero (the engine scrubs
+        pending CoW copies against this after a preemption)."""
+        if slot not in self._slot_pages:
+            self.double_free_noops += 1
+            self._reserved.pop(slot, None)
+            return []
         held = self._slot_pages.pop(slot, 0)
+        freed: List[int] = []
         for c in range(held):
-            self._release_page(int(self.block_table[slot, c]))
+            pid = int(self.block_table[slot, c])
+            self._release_page(pid)
+            if self.ref[pid] == 0:
+                freed.append(pid)
         self.block_table[slot, :held] = self.FREE
         self._reserved.pop(slot, None)
         if held:
             self.version += 1
+        return freed
+
+    # -- fault injection (testing/chaos.py) ---------------------------------
+
+    def seize_pages(self, k: int) -> List[int]:
+        """Chaos hook: remove up to ``k`` pages from the free list, simulating
+        an external squeeze (fragmentation, a co-tenant, a shrunken pool).
+        Seized pages own no refs and no scale entries; ``restore_pages``
+        returns them.  Returns the seized page ids."""
+        taken: List[int] = []
+        for _ in range(max(int(k), 0)):
+            if not self._free:
+                break
+            taken.append(self._free.pop())
+        self._seized.extend(taken)
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        return taken
+
+    def restore_pages(self, pids: List[int]) -> None:
+        """Chaos hook: return previously seized pages to the free list."""
+        for pid in pids:
+            self._seized.remove(pid)
+            self._free.append(pid)
+
+    # -- invariants (engine.health()) ---------------------------------------
+
+    def check_invariants(self) -> List[str]:
+        """Cross-check every piece of allocator state; returns a list of
+        violation descriptions (empty = healthy).  ``engine.health()`` runs
+        this every ``ServeConfig.health_every`` ticks and raises on any."""
+        lay = self.layout
+        problems: List[str] = []
+        free = list(self._free)
+        if len(set(free)) != len(free):
+            problems.append(f"free list has duplicates: {sorted(free)}")
+        for pid in free:
+            if not (0 <= pid < lay.num_pages):
+                problems.append(f"free list page {pid} out of range")
+            elif self.ref[pid] != 0:
+                problems.append(f"free page {pid} has refcount {int(self.ref[pid])}")
+        for pid in self._seized:
+            if self.ref[pid] != 0:
+                problems.append(f"seized page {pid} has refcount {int(self.ref[pid])}")
+            if pid in free:
+                problems.append(f"page {pid} both seized and free")
+        # refcount per page == live block-table references over held rows
+        counted = np.zeros((lay.num_pages,), np.int64)
+        for slot, held in self._slot_pages.items():
+            row = self.block_table[slot, :held]
+            if np.any(row < 0):
+                problems.append(f"slot {slot} holds {held} pages but row has FREE entries")
+            for pid in row:
+                if 0 <= int(pid) < lay.num_pages:
+                    counted[int(pid)] += 1
+            tail = self.block_table[slot, held:]
+            if np.any(tail != self.FREE):
+                problems.append(f"slot {slot}: block-table entries past held={held}")
+        for slot in range(len(self.block_table)):
+            if slot not in self._slot_pages and np.any(
+                self.block_table[slot] != self.FREE
+            ):
+                problems.append(f"orphaned block-table row {slot} (slot holds no pages)")
+        mism = np.nonzero(counted != self.ref)[0]
+        for pid in mism[:8]:
+            problems.append(
+                f"page {int(pid)}: refcount {int(self.ref[pid])} != "
+                f"{int(counted[pid])} block-table references"
+            )
+        if len(free) + self.pages_referenced + len(self._seized) != lay.num_pages:
+            problems.append(
+                f"page conservation: {len(free)} free + {self.pages_referenced} "
+                f"referenced + {len(self._seized)} seized != {lay.num_pages}"
+            )
+        if self.quantized and self.scale_entries_in_use != self.pages_referenced:
+            problems.append(
+                f"scale entries ({self.scale_entries_in_use}) out of lockstep "
+                f"with referenced pages ({self.pages_referenced})"
+            )
+        if self.pages_reserved > self.virtual_pages:
+            problems.append(
+                f"reserved {self.pages_reserved} exceeds virtual capacity "
+                f"{self.virtual_pages}"
+            )
+        for slot in self._reserved:
+            if slot not in self._slot_pages:
+                problems.append(f"slot {slot} reserved but holds no pages")
+        return problems
 
     # -- device view --------------------------------------------------------
 
@@ -353,6 +542,10 @@ class PageAllocator:
             "spec_rolled_back_pages": self.spec_rolled_back,
             "quantized_pages": self.pages_in_use if self.quantized else 0,
             "scale_entries_in_use": self.scale_entries_in_use,
+            "pages_reserved": self.pages_reserved,
+            "virtual_pages": self.virtual_pages,
+            "seized_pages": len(self._seized),
+            "double_free_noops": self.double_free_noops,
         }
 
 

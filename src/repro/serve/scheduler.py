@@ -46,6 +46,10 @@ class Request:
     prompt: np.ndarray  # [S0] int32
     max_new_tokens: int
     arrival_tick: int = 0
+    # lifecycle: finish by arrival + deadline_ticks or retire with partial
+    # output (status "deadline"); higher priority admits first (FIFO ties)
+    deadline_ticks: Optional[int] = None
+    priority: int = 0
     # filled in by the engine as the request progresses:
     generated: List[int] = dataclasses.field(default_factory=list)
     token_ticks: List[int] = dataclasses.field(default_factory=list)
@@ -53,8 +57,19 @@ class Request:
     admit_tick: Optional[int] = None
     first_token_tick: Optional[int] = None
     finish_tick: Optional[int] = None
-    # continuous prefill: how far into the prompt the cache is, and how many
-    # chunk launches it took (a one-shot prefill counts as one chunk)
+    # terminal state: ok | cancelled | deadline | numeric_error | rejected
+    status: str = "ok"
+    # oversubscription: times this request was preempted mid-decode, and
+    # tokens re-ingested through continuous prefill to restore its cache
+    preemptions: int = 0
+    recompute_tokens: int = 0
+    # continuous prefill: how far into the CONTEXT the cache is, and how many
+    # chunk launches it took (a one-shot prefill counts as one chunk).
+    # ``ingest_len`` is the ingest TARGET, frozen at admission — it equals
+    # ``context_len`` at that instant, but unlike ``context_len`` it does NOT
+    # grow as decode appends tokens, so ``prefill_pos >= ingest_len`` stays
+    # the "done prefilling, decodable" test for the slot's whole residency
+    ingest_len: int = 0
     prefill_pos: int = 0
     chunks: int = 0
     first_chunk_tick: Optional[int] = None
@@ -66,6 +81,26 @@ class Request:
     @property
     def done(self) -> bool:
         return self.finish_tick is not None
+
+    @property
+    def context(self) -> np.ndarray:
+        """What the cache must hold for this request to keep decoding:
+        prompt + everything generated so far.  A preempted request re-queues
+        and prefills its CONTEXT, so the resumed stream continues exactly
+        where the uninterrupted one would."""
+        if not self.generated:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated, np.int32)]
+        )
+
+    @property
+    def context_len(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+    @property
+    def remaining_new_tokens(self) -> int:
+        return max(self.max_new_tokens - len(self.generated), 0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +128,9 @@ class RequestResult:
     first_chunk_tick: int  # tick the first prompt chunk landed
     spec_proposed: int = 0  # draft tokens verified for this request
     spec_accepted: int = 0  # ... of which matched greedy decode
+    status: str = "ok"  # ok | cancelled | deadline | numeric_error | rejected
+    preemptions: int = 0  # mid-decode evictions this request survived
+    recompute_tokens: int = 0  # tokens re-ingested after preemption
 
     @property
     def generated(self) -> List[int]:
@@ -127,6 +165,9 @@ class RequestResult:
             ),
             spec_proposed=req.spec_proposed,
             spec_accepted=req.spec_accepted,
+            status=req.status,
+            preemptions=req.preemptions,
+            recompute_tokens=req.recompute_tokens,
         )
 
 
@@ -168,13 +209,22 @@ class Scheduler:
         self.slots: List[Optional[Request]] = [None] * num_slots
         self._queue: List[Request] = []
         self._next_rid = 0
+        # requests admission found can NEVER fit the pool (even empty):
+        # popped from the queue with status "rejected" for the engine to
+        # drain, instead of blocking the line head forever
+        self.rejected: List[Request] = []
 
     # -- submission ---------------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int, arrival_tick: int = 0) -> Request:
+    def submit(
+        self, prompt: np.ndarray, max_new_tokens: int, arrival_tick: int = 0,
+        *, deadline_ticks: Optional[int] = None, priority: int = 0,
+    ) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if deadline_ticks is not None and deadline_ticks < 1:
+            raise ValueError("deadline_ticks must be >= 1 or None")
         if len(prompt) + max_new_tokens > self.max_seq:
             raise ValueError(
                 f"prompt({len(prompt)}) + max_new_tokens({max_new_tokens}) exceeds "
@@ -182,7 +232,10 @@ class Scheduler:
             )
         if self.prefill_chunk is None:
             self.bucket_for(len(prompt))  # raise early on un-bucketable prompts
-        req = Request(self._next_rid, prompt, max_new_tokens, arrival_tick)
+        req = Request(
+            self._next_rid, prompt, max_new_tokens, arrival_tick,
+            deadline_ticks=deadline_ticks, priority=priority,
+        )
         self._next_rid += 1
         self._queue.append(req)
         return req
@@ -282,32 +335,113 @@ class Scheduler:
 
     # -- per-tick operations ------------------------------------------------
 
+    def _next_candidate(self, tick: int) -> Optional[Request]:
+        """Highest-priority arrived request (FIFO within a priority level);
+        requests that could never fit even an EMPTY pool are moved to
+        ``self.rejected`` on sight instead of blocking the line."""
+        while True:
+            cand = min(
+                (r for r in self._queue if r.arrival_tick <= tick),
+                key=lambda r: (-r.priority, r.arrival_tick, r.rid),
+                default=None,
+            )
+            if cand is None:
+                return None
+            if self.allocator is not None and self.allocator.never_admittable(
+                cand.context_len, cand.remaining_new_tokens
+            ):
+                self._queue.remove(cand)
+                cand.status = "rejected"
+                self.rejected.append(cand)
+                continue
+            return cand
+
     def admit(self, tick: int) -> List[Tuple[int, Request]]:
-        """Assign arrived queued requests to free slots, FIFO.  Returns
-        [(slot, request)] for the engine to prefill."""
+        """Assign arrived queued requests to free slots — highest priority
+        first, FIFO within a level (default priority 0 keeps the original
+        pure-FIFO behavior).  Returns [(slot, request)] for the engine to
+        prefill.  A preempted request re-enters through here with its
+        context (prompt + generated) as the ingest payload."""
         assigned = []
         pending_pages = 0  # pages promised to this tick's earlier admissions
+        pending_prompt = 0  # ... of which must be physically free NOW
         for slot in range(self.num_slots):
             if self.slots[slot] is not None:
                 continue
-            req = next(
-                (r for r in self._queue if r.arrival_tick <= tick), None
-            )
+            req = self._next_candidate(tick)
             if req is None:
                 break
             if self.allocator is not None:
                 if not self.allocator.can_admit(
-                    len(req.prompt), req.max_new_tokens, pending=pending_pages
+                    req.context_len, req.remaining_new_tokens,
+                    pending=pending_pages, pending_prompt=pending_prompt,
                 ):
                     break  # pool exhausted: FIFO holds the head until pages free
                 pending_pages += self.allocator.reserve_for(
-                    len(req.prompt), req.max_new_tokens
+                    req.context_len, req.remaining_new_tokens
                 )
+                pending_prompt += self.allocator.layout.pages_for(req.context_len)
             self._queue.remove(req)
             req.slot, req.admit_tick = slot, tick
+            # freeze the ingest target NOW: decode appends grow context_len,
+            # but the chunk machinery must stop exactly here
+            req.ingest_len = req.context_len
             self.slots[slot] = req
             assigned.append((slot, req))
         return assigned
+
+    def take_rejected(self) -> List[Request]:
+        """Drain requests admission rejected as never-fitting."""
+        out, self.rejected = self.rejected, []
+        return out
+
+    def preempt(self, slot: int) -> Request:
+        """Evict a mid-flight request back to the queue: its slot frees, its
+        prefill position resets so admission re-ingests the full context
+        (prompt + generated) through continuous prefill.  The caller (the
+        engine) frees the allocator pages and counts the preemption."""
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is already free")
+        self.slots[slot] = None
+        req.slot = None
+        req.prefill_pos = 0
+        self._queue.append(req)
+        return req
+
+    def find(self, rid: int) -> Optional[Request]:
+        """Look a live request up by rid (queued or active); None if it is
+        not in flight (finished, rejected, or never submitted)."""
+        for r in self._queue:
+            if r.rid == rid:
+                return r
+        for r in self.slots:
+            if r is not None and r.rid == rid:
+                return r
+        return None
+
+    def cancel_queued(self, rid: int) -> Optional[Request]:
+        """Remove a QUEUED request; returns it (status set) or None if the
+        rid is not queued (active requests cancel through the engine, which
+        must also free the slot's pages)."""
+        for r in self._queue:
+            if r.rid == rid:
+                self._queue.remove(r)
+                r.status = "cancelled"
+                return r
+        return None
+
+    def take_expired(self, tick: int) -> List[Request]:
+        """Remove QUEUED requests whose deadline passed before admission."""
+        out = [
+            r for r in self._queue
+            if r.deadline_ticks is not None
+            and tick - r.arrival_tick >= r.deadline_ticks
+        ]
+        for r in out:
+            self._queue.remove(r)
+            r.status = "deadline"
+        return out
 
     def plan_chunks(self, decode_slots: int) -> List[Tuple[int, Request, int, int]]:
         """Continuous prefill: pick this tick's chunk work under the token
@@ -325,7 +459,7 @@ class Scheduler:
         work = sorted(
             (r.admit_tick, r.rid, slot, r)
             for slot, r in enumerate(self.slots)
-            if r is not None and r.prefill_pos < len(r.prompt)
+            if r is not None and r.prefill_pos < r.ingest_len
         )
         budget = None
         if self.tick_token_budget is not None:
@@ -333,7 +467,7 @@ class Scheduler:
         plan: List[Tuple[int, Request, int, int]] = []
         spent = 0
         for _, _, slot, r in work:
-            take = min(self.prefill_chunk, len(r.prompt) - r.prefill_pos)
+            take = min(self.prefill_chunk, r.ingest_len - r.prefill_pos)
             if plan and budget is not None and spent + take > budget:
                 break
             plan.append((slot, r, r.prefill_pos, take))
@@ -368,11 +502,12 @@ class Scheduler:
             left -= len(take)
         return granted
 
-    def retire(self, slot: int, tick: int) -> Request:
+    def retire(self, slot: int, tick: int, status: str = "ok") -> Request:
         req = self.slots[slot]
         if req is None:
             raise ValueError(f"slot {slot} is already free")
         req.finish_tick = tick
+        req.status = status
         self.slots[slot] = None
         return req
 

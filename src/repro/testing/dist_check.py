@@ -1464,6 +1464,118 @@ def check_quant_kv():
     }
 
 
+def check_chaos_serve():
+    """Fault-tolerant serving on a (2, 4) mesh: an OVERSUBSCRIBED engine
+    (oversubscribe=2.0 over a 7-page pool) under real mid-decode pool
+    exhaustion must preempt-and-recompute and still produce token streams
+    IDENTICAL to the conservative (oversubscribe=1.0, ample pool) engine —
+    prefix sharers included, whose committed pages are refcount-protected
+    through a donor's preemption.  A chaos-injected NaN tick must retire
+    exactly one request (status numeric_error) while every other stream is
+    bitwise-unchanged, and the full seeded chaos trace (squeeze + NaN +
+    dropped grants) must replay deterministically with pages AND int8 scale
+    entries draining to zero.  This is the acceptance gate for ISSUE 10's
+    preempt/recompute, NaN guard, and chaos harness composing with the
+    striped sequence-parallel decode stack."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import transformer as tfm
+    from repro.parallel.context import ParallelCtx
+    from repro.serve.config import ServeConfig
+    from repro.serve.engine import ServeEngine
+    from repro.testing.chaos import ChaosConfig, ChaosInjector
+
+    cfg = get_config("granite-8b").reduced()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(3)
+    # page_size=4 on 4 sp shards -> 16 tokens/page.  32-token prompts + 12
+    # new tokens = 3 lifetime pages each; three requests need 9 pages but
+    # the oversubscribed pool has 7 -> guaranteed mid-decode exhaustion.
+    prefix = rng.integers(0, cfg.vocab_size, (32,), dtype=np.int32)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, (32,), dtype=np.int32),
+        np.concatenate([prefix[:16], rng.integers(0, cfg.vocab_size, (16,), dtype=np.int32)]),
+        np.concatenate([prefix[:16], rng.integers(0, cfg.vocab_size, (16,), dtype=np.int32)]),
+    ]
+    new_tokens = 12
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    ctx = ParallelCtx(mesh=mesh, batch_axes=("data",), sp_axis="model",
+                      block_q=8, block_kv=8)
+
+    def run_engine(chaos=None, **kw):
+        serve = ServeConfig(max_seq=128, num_slots=3, paged=True, page_size=4,
+                            prefill_chunk=16, **kw)
+        eng = ServeEngine(cfg, params, ctx=ctx, serve=serve, chaos=chaos)
+        rids = [eng.submit(p, max_new_tokens=new_tokens) for p in prompts]
+        fin = eng.run()
+        return [fin[r] for r in rids], eng
+
+    # 1. preempt-and-recompute == uninterrupted, prefix sharers intact
+    ref, _ = run_engine(num_pages=12)
+    got, eng = run_engine(num_pages=7, oversubscribe=2.0, health_every=1)
+    for r, g in zip(ref, got):
+        assert g.status == "ok", g.status
+        assert g.generated == r.generated, (r.generated, g.generated)
+    assert eng.preemptions > 0, "7-page pool drove no preemption"
+    assert eng.allocator.pages_in_use == 0
+    assert eng.allocator.stats()["shared_hits"] >= 1
+
+    # 2. one injected NaN retires exactly one request; the other slots'
+    # streams are bitwise-unchanged vs the fault-free int8 run
+    clean, _ = run_engine(num_pages=12, kv_dtype="int8")
+    nan_cfg = ChaosConfig(seed=11, ticks=10, squeezes=0, nan_ticks=1,
+                          drop_ticks=0)
+    hurt, nan_eng = run_engine(num_pages=12, kv_dtype="int8",
+                               chaos=ChaosInjector(nan_cfg))
+    statuses = [g.status for g in hurt]
+    assert statuses.count("numeric_error") == 1, statuses
+    assert nan_eng.numeric_errors == 1
+    survivors = 0
+    for c, h in zip(clean, hurt):
+        if h.status == "ok":
+            assert h.generated == c.generated, (c.generated, h.generated)
+            survivors += 1
+    assert survivors == len(prompts) - 1
+    assert nan_eng.allocator.pages_in_use == 0
+    assert nan_eng.allocator.scale_entries_in_use == 0
+
+    # 3. the full fault trace replays deterministically, pool + scales drain
+    full_cfg = ChaosConfig(seed=5, ticks=14, squeezes=2, squeeze_frac=0.5,
+                           squeeze_hold=3, nan_ticks=1, drop_ticks=1)
+    runs = []
+    for _ in range(2):
+        inj = ChaosInjector(full_cfg)
+        res, e = run_engine(num_pages=7, oversubscribe=2.0, kv_dtype="int8",
+                            health_every=2, chaos=inj)
+        assert e.allocator.pages_in_use == 0
+        assert e.allocator.scale_entries_in_use == 0
+        e.health()
+        runs.append((inj.events, [(g.status, g.generated) for g in res], e))
+    assert runs[0][0] == runs[1][0], (runs[0][0], runs[1][0])
+    assert runs[0][1] == runs[1][1], (runs[0][1], runs[1][1])
+    chaos_eng = runs[0][2]
+    # ok streams match the fault-free engine of the SAME kv_dtype (int8
+    # near-ties make fp an invalid oracle here)
+    for c, (status, gen) in zip(clean, runs[0][1]):
+        if status == "ok":
+            assert gen == c.generated, (c.generated, gen)
+
+    return {
+        "tokens": {i: g.generated for i, g in enumerate(got)},
+        "preemptions": eng.preemptions,
+        "recompute_tokens": eng.recompute_tokens,
+        "nan_statuses": statuses,
+        "chaos_events": runs[0][0],
+        "chaos_statuses": [s for s, _ in runs[0][1]],
+        "chaos_preemptions": chaos_eng.preemptions,
+        "chaos_dropped_grants": chaos_eng.chaos_dropped_grants,
+        "deterministic_replay": True,
+    }
+
+
 CHECKS = {
     "mesh_fwd": check_mesh_attention_forward,
     "mesh_bwd": check_mesh_attention_backward,
@@ -1487,6 +1599,7 @@ CHECKS = {
     "continuous_prefill": check_continuous_prefill,
     "spec_decode": check_spec_decode,
     "quant_kv": check_quant_kv,
+    "chaos_serve": check_chaos_serve,
 }
 
 

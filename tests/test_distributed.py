@@ -123,3 +123,16 @@ def test_quant_kv():
     detail = report["quant_kv"]["detail"]
     assert detail["max_logit_err"] <= detail["logit_bound"]
     assert detail["bytes_per_token_ratio"] <= 0.55
+
+
+def test_chaos_serve():
+    """Fault-tolerant serving on a (2,4) mesh: the oversubscribed engine
+    under injected pool pressure preempts-and-recomputes to token streams
+    identical to the conservative engine (prefix sharers intact), a chaos
+    NaN tick retires exactly one request while the other slots' outputs are
+    bitwise-unchanged, and the full seeded fault trace replays
+    deterministically with pages and scale entries draining to zero."""
+    report = _run_checks("chaos_serve")
+    detail = report["chaos_serve"]["detail"]
+    assert detail["preemptions"] > 0
+    assert detail["deterministic_replay"] is True
